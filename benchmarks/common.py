@@ -1,0 +1,86 @@
+"""Shared benchmark harness: evaluate every system (Poplar + 4 baselines)
+on a cluster via the analytical device models + BSP simulator.
+
+Strategies (paper §Models and Baselines):
+  homog-weak    — baseline 1: only the weaker homogeneous sub-cluster
+  homog-strong  — baseline 2: only the stronger homogeneous sub-cluster
+  deepspeed     — baseline 3: uniform micro-batches (manually maxed)
+  whale         — baseline 4: spec-FLOPs-proportional hetero allocation
+  poplar        — ours
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.core.allocation import (allocate_flops_proportional,
+                                   allocate_stage01, allocate_stage23,
+                                   allocate_uniform, fit_curve)
+from repro.core.cluster import CATALOG, ClusterSpec
+from repro.core.planner import make_runners
+from repro.core.profiler import profile_cluster
+from repro.core.simulator import SimResult, simulate_plan
+from repro.core.workload import comm_time_per_microstep, train_flops_per_token
+
+SEQ = 4096
+
+
+def device_groups(cluster: ClusterSpec) -> Tuple[List[str], List[str]]:
+    """(weak names, strong names) by peak spec within the cluster."""
+    kinds = {}
+    for d in cluster.devices:
+        kinds.setdefault(d.name, d)
+    ordered = sorted(kinds.values(), key=lambda d: (d.peak_tflops, d.mem_gb))
+    weak, strong = ordered[0].name, ordered[-1].name
+    weak_names, strong_names = [], []
+    counts: Dict[str, int] = {}
+    for d in cluster.devices:
+        counts[d.name] = counts.get(d.name, 0) + 1
+        nm = f"{d.name}#{counts[d.name]}"
+        if d.name == weak:
+            weak_names.append(nm)
+        if d.name == strong:
+            strong_names.append(nm)
+    return weak_names, strong_names
+
+
+def evaluate_cluster(cluster: ClusterSpec, arch: str, gbs: int,
+                     zero_stage: int, seq: int = SEQ
+                     ) -> Dict[str, Optional[SimResult]]:
+    cfg = get_config(arch)
+    runners = make_runners(cluster, cfg, seq, zero_stage)
+    profiles = profile_cluster(runners, zero_stage)
+    if any(p.mbs < 1 for p in profiles.values()):
+        return {}
+    curves = {n: fit_curve(p) for n, p in profiles.items()}
+    fps = train_flops_per_token(cfg, seq) * seq
+    comm = comm_time_per_microstep(cfg, zero_stage, cluster.n,
+                                   cluster.effective_link_gbps(cluster.n))
+    weak, strong = device_groups(cluster)
+    rating = {n: CATALOG[n.split("#")[0]].peak_tflops for n in curves}
+
+    plans = {}
+    if zero_stage <= 1:
+        plans["poplar"] = allocate_stage01(curves, gbs)
+    else:
+        plans["poplar"] = allocate_stage23(curves, gbs, comm, zero_stage)
+    plans["deepspeed"] = allocate_uniform(curves, gbs, zero_stage)
+    plans["whale"] = allocate_flops_proportional(curves, gbs, zero_stage,
+                                                 rating)
+    plans["homog-weak"] = allocate_uniform(
+        {n: curves[n] for n in weak}, gbs, zero_stage)
+    plans["homog-strong"] = allocate_uniform(
+        {n: curves[n] for n in strong}, gbs, zero_stage)
+
+    out: Dict[str, Optional[SimResult]] = {}
+    for name, p in plans.items():
+        p.zero_stage = zero_stage
+        sub_cluster = cluster
+        out[name] = simulate_plan(p, curves, cfg, seq, sub_cluster, fps)
+        out[name].strategy = name
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

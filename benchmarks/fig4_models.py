@@ -1,0 +1,40 @@
+"""Figure 4: generality across models — 0.5B Llama, 1.1B Llama, 1.1B BERT
+(cluster C, all ZeRO stages; plus the memory-tight cluster-B runs at 1.1B
+where the paper's largest DeepSpeed gaps occur)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row, evaluate_cluster
+from repro.core.cluster import cluster_B, cluster_C
+
+GBS = 512
+
+
+def run() -> List[str]:
+    rows = []
+    cases = ([("C", cluster_C, a) for a in
+              ("llama-0.5b", "llama-1.1b", "bert-1.1b")]
+             + [("B", cluster_B, a) for a in ("llama-1.1b", "bert-1.1b")])
+    for cl_tag, cl_fn, arch in cases:
+        for stage in (0, 1, 2, 3):
+            tag = f"fig4{cl_tag}/{arch}/zero{stage}"
+            res = evaluate_cluster(cl_fn(), arch, GBS, stage)
+            if not res:
+                rows.append(csv_row(f"{tag}/infeasible",
+                                    0.0, "OOM at this stage"))
+                continue
+            pop = res["poplar"].cluster_tflops
+            for strat, r in res.items():
+                rows.append(csv_row(
+                    f"{tag}/{strat}", r.iter_time * 1e6,
+                    f"tflops={r.cluster_tflops:.1f}"))
+            rows.append(csv_row(
+                f"{tag}/speedup", 0.0,
+                f"vs_deepspeed={pop/res['deepspeed'].cluster_tflops:.2f}x;"
+                f"vs_whale={pop/res['whale'].cluster_tflops:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,77 @@
+"""Figure 6 / appendix: GPU compute capability vs batch size.
+
+Two parts: (a) analytical curves for the paper's GPU types (the saturating
+relationship Poplar exploits); (b) a *measured* curve on this host — a real
+jitted reduced-Llama train step timed at increasing batch sizes, showing
+the same rise-then-plateau shape on actual hardware (CPU here, TPU in
+prod)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.cluster import CATALOG
+from repro.core.planner import make_runners
+from repro.core.profiler import MeasuredRunner, profile_device
+from repro.core.workload import MemoryModel, train_flops_per_token
+
+BATCHES = [1, 2, 4, 8, 16, 32, 64]
+
+
+def run(measured: bool = True) -> List[str]:
+    rows = []
+    cfg = get_config("llama-0.5b")
+    fps = train_flops_per_token(cfg, 4096) * 4096
+    for dev in ("A100-80G", "V100-16G", "T4-16G", "RTX4090-24G"):
+        spec = CATALOG[dev]
+        mem = MemoryModel(cfg, 4096, 0, 4)
+        from repro.core.profiler import AnalyticalRunner
+        r = AnalyticalRunner(spec, mem, fps, 0)
+        for b in BATCHES:
+            if mem.bytes_at_batch(b) > spec.mem_gb * 1e9:
+                break
+            t = r.compute_time(b)
+            rows.append(csv_row(f"fig6/analytical/{dev}/b{b}", t * 1e6,
+                                f"samples_per_s={b/t:.2f}"))
+    if measured:
+        rows.extend(_measured_curve())
+    return rows
+
+
+def _measured_curve() -> List[str]:
+    from repro.core.sharding import MeshRules
+    from repro.core.zero import make_train_step, register_axes
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import model as mm
+    from repro.optim.adamw import adamw_init
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    rules = MeshRules(make_debug_mesh(1), zero_stage=0)
+    register_axes(rules, axes)
+    step = jax.jit(make_train_step(cfg, rules))
+    opt = adamw_init(params)
+    rows = []
+    rng = np.random.default_rng(0)
+    for b in (1, 2, 4, 8):
+        toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (b, 65)), jnp.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                 "loss_mask": jnp.ones((b, 64), jnp.float32)}
+        jax.block_until_ready(step(params, opt, batch))  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = step(params, opt, batch)
+        jax.block_until_ready(out)
+        t = (time.perf_counter() - t0) / 3
+        rows.append(csv_row(f"fig6/measured-host/b{b}", t * 1e6,
+                            f"samples_per_s={b/t:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,40 @@
+"""Figure 7: cubic-spline interpolation error vs ground-truth speed data —
+'the gap ... is almost zero'. We fit on Poplar's probe points (powers of two
++ binary-search path) and evaluate against every integer batch size."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.allocation import fit_curve
+from repro.core.planner import make_runners
+from repro.core.cluster import make_cluster
+from repro.core.profiler import profile_cluster
+
+
+def run() -> List[str]:
+    rows = []
+    cfg = get_config("llama-0.5b")
+    cluster = make_cluster("t", [("A800-80G", 1), ("V100-16G", 1),
+                                 ("T4-16G", 1)])
+    runners = make_runners(cluster, cfg, 4096, 0)
+    profs = profile_cluster(runners, 0)
+    for name, prof in profs.items():
+        curve = fit_curve(prof)
+        runner = runners[name]
+        bs = np.arange(1, prof.mbs + 1)
+        truth = np.array([b / runner.compute_time(int(b)) for b in bs])
+        pred = curve.speed(bs.astype(float))
+        rel = np.abs(pred - truth) / truth
+        rows.append(csv_row(
+            f"fig7/spline_error/{name}", 0.0,
+            f"mean_rel_err={rel.mean():.5f};max_rel_err={rel.max():.5f};"
+            f"knots={len(prof.points)};range=1..{prof.mbs}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

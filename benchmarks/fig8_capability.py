@@ -1,0 +1,44 @@
+"""Figure 8: compute-capability measurement — wall-time (Poplar) vs
+spec-sheet FLOPs (Whale), normalized to T4. The gap between the two columns
+is exactly the misallocation error a FLOPs-only cost model commits."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.cluster import CATALOG
+from repro.core.profiler import AnalyticalRunner
+from repro.core.workload import MemoryModel, train_flops_per_token
+
+DEVICES = ("T4-16G", "V100-16G", "V100S-32G", "RTX4090-24G", "A100-80G",
+           "A800-80G")
+
+
+def run() -> List[str]:
+    rows = []
+    cfg = get_config("llama-0.5b")
+    fps = train_flops_per_token(cfg, 4096) * 4096
+    base = None
+    meas = {}
+    for dev in DEVICES:
+        spec = CATALOG[dev]
+        r = AnalyticalRunner(spec, MemoryModel(cfg, 4096, 0, 4), fps, 0)
+        mbs_like = 16  # measure near-saturation like the paper (at mbs)
+        t = r.compute_time(mbs_like)
+        meas[dev] = mbs_like / t
+    t4 = meas["T4-16G"]
+    t4_flops = CATALOG["T4-16G"].peak_tflops
+    for dev in DEVICES:
+        rel_wall = meas[dev] / t4
+        rel_flops = CATALOG[dev].peak_tflops / t4_flops
+        err = abs(rel_flops - rel_wall) / rel_wall
+        rows.append(csv_row(
+            f"fig8/capability/{dev}", 0.0,
+            f"walltime_rel={rel_wall:.2f};flops_rel={rel_flops:.2f};"
+            f"flops_metric_err={err*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

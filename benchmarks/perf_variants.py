@@ -1,0 +1,55 @@
+"""§Perf baseline-vs-variant comparison rows, read from the dry-run
+artifacts. One row per (arch, shape, mesh, variant) with the dominant-term
+speedup over the same combo's baseline artifact."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from benchmarks.common import csv_row
+from benchmarks.roofline import DRYRUN_DIR, roofline_terms
+
+
+def run() -> List[str]:
+    base: Dict = {}
+    variants = []
+    for fp in sorted(Path(DRYRUN_DIR).glob("*.json")):
+        rec = json.loads(fp.read_text())
+        t = roofline_terms(rec)
+        if t is None:
+            continue
+        key = (t["arch"], t["shape"], t["mesh"])
+        if t["variant"] == "base":
+            base[key] = t
+        else:
+            variants.append((key, t))
+    rows = []
+    for key, t in variants:
+        b = base.get(key)
+        if b is None:
+            continue
+        # report the term the variant moved the most (its actual target),
+        # plus the bound (max-term) change — the end-to-end picture
+        factors = {}
+        for term in ("compute", "memory", "collective"):
+            before, after = b[f"{term}_s"], t[f"{term}_s"]
+            factors[term] = (before / after) if after > 0 else (
+                1.0 if before == 0 else float("inf"))
+        target = max(factors, key=factors.get)
+        bound_f = (b["bound_s"] / t["bound_s"]) if t["bound_s"] > 0 else 1.0
+        rows.append(csv_row(
+            f"perf/{t['arch']}/{t['shape']}/{t['mesh']}/{t['variant']}",
+            t["bound_s"] * 1e6,
+            f"target={target};before_ms={b[f'{target}_s']*1e3:.2f};"
+            f"after_ms={t[f'{target}_s']*1e3:.2f};"
+            f"factor={factors[target]:.2f}x;bound_factor={bound_f:.2f}x;"
+            f"new_dominant={t['dominant']}"))
+    if not rows:
+        rows.append(csv_row("perf/missing", 0.0,
+                            "no variant artifacts; run dryrun --variant"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,123 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs_global / (chips x 197e12 bf16 FLOP/s)
+  memory term     = HLO_bytes_global / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes_per_device / 50e9 B/s ICI link
+
+HLO FLOPs/bytes come from the dry-run's *unrolled* single-device cost
+pass (``flops_unrolled`` / ``bytes_unrolled``) — global algorithmic
+numbers with scan bodies fully counted — and are divided by chip count.
+(The compiled SPMD module's own cost_analysis() counts while-loop bodies
+once, under-reporting by ~n_layers; it is kept in the artifacts as
+``flops_per_device_compiled`` for reference only.) Collective bytes are
+parsed from the partitioned HLO and are already per-participant.
+Also reports MODEL_FLOPS = 6*N(_active)*D vs HLO_FLOPs (useful-compute
+ratio: catches remat/dispatch/rectangle-attention waste).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.common import csv_row
+from repro.configs import get_config, get_shape
+
+PEAK_FLOPS = 197e12     # v5e bf16
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if "error" in rec or "skipped" in rec:
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    chips = 1
+    for s in rec["mesh"]:
+        chips *= s
+    flops = rec.get("flops_unrolled")     # global algorithmic FLOPs
+    bytes_acc = rec.get("bytes_unrolled")
+    if flops is None or bytes_acc is None:
+        return None                        # stale artifact — re-run dryrun
+    coll = sum(rec["collective_bytes"].values())
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = bytes_acc / (chips * HBM_BW)
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    # MODEL_FLOPS: useful flops for the whole step, divided over chips
+    n = cfg.active_params
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        model_flops = 2.0 * n * shape.global_batch
+    ratio = model_flops / flops if flops else 0.0   # global / global
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, rec["mesh"])),
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "bound_s": max(terms.values()),
+        "model_flops_ratio": ratio,
+        "hbm_bytes_per_dev": rec.get("argument_size_in_bytes", 0)
+        + rec.get("temp_size_in_bytes", 0),
+        "zero_stage": rec.get("zero_stage"),
+        "variant": rec.get("variant") or (
+            "hpz" if rec.get("hierarchical_params") else "base"),
+    }
+
+
+def load_all(dryrun_dir: Path = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for fp in sorted(dryrun_dir.glob("*.json")):
+        rec = json.loads(fp.read_text())
+        t = roofline_terms(rec)
+        if t is not None:
+            out.append(t)
+    return out
+
+
+def run() -> List[str]:
+    rows = []
+    for t in load_all():
+        name = (f"roofline/{t['arch']}/{t['shape']}/{t['mesh']}"
+                + (f"/{t['variant']}" if t["variant"] != "base" else ""))
+        rows.append(csv_row(
+            name, t["bound_s"] * 1e6,
+            f"compute={t['compute_s']*1e3:.2f}ms;"
+            f"memory={t['memory_s']*1e3:.2f}ms;"
+            f"collective={t['collective_s']*1e3:.2f}ms;"
+            f"dominant={t['dominant']};"
+            f"useful_flops_ratio={t['model_flops_ratio']:.3f}"))
+    if not rows:
+        rows.append(csv_row("roofline/missing", 0.0,
+                            "run `python -m repro.launch.dryrun --all --both-meshes` first"))
+    return rows
+
+
+def markdown_table(terms: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | 6ND/HLO |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for t in terms:
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['mesh']} "
+            f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+            f"| {t['collective_s']*1e3:.2f} | **{t['dominant']}** "
+            f"| {t['model_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

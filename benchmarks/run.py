@@ -1,0 +1,42 @@
+"""Benchmark driver — one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_main, fig4_models, fig5_quantity,
+                            fig6_curves, fig7_spline, fig8_capability,
+                            perf_variants, roofline, table2_overhead)
+    sections = [
+        ("fig3 (main: 3 clusters x ZeRO x 5 systems)", fig3_main.run),
+        ("fig4 (models: llama 0.5B/1.1B, bert 1.1B)", fig4_models.run),
+        ("fig5 (quantity heterogeneity)", fig5_quantity.run),
+        ("fig6 (speed vs batch curves)", fig6_curves.run),
+        ("fig7 (spline interpolation error)", fig7_spline.run),
+        ("fig8 (walltime vs FLOPs capability)", fig8_capability.run),
+        ("table2 (profiling overhead)", table2_overhead.run),
+        ("roofline (dry-run derived)", roofline.run),
+        ("perf (baseline vs optimized variants)", perf_variants.run),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"bench/{title.split()[0]}/ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            continue
+        for r in rows:
+            print(r)
+        print(f"# {title}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Table 2: Poplar's one-time profiling overhead — per device type x ZeRO
+stage: number of model executions (Alg. 1 probes) and the simulated
+wall-clock seconds those probes cost."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.cluster import CATALOG
+from repro.core.profiler import AnalyticalRunner, profile_device
+from repro.core.workload import MemoryModel, train_flops_per_token
+
+
+def run() -> List[str]:
+    rows = []
+    cfg = get_config("llama-0.5b")
+    fps = train_flops_per_token(cfg, 4096) * 4096
+    for dev in ("T4-16G", "V100-16G", "A800-80G"):
+        for stage in (0, 1, 2, 3):
+            spec = CATALOG[dev]
+            mem = MemoryModel(cfg, 4096, stage, 8)
+            r = AnalyticalRunner(spec, mem, fps, stage)
+            prof = profile_device(r, dev, stage)
+            probe_seconds = sum(r.compute_time(b) for b in prof.points)
+            rows.append(csv_row(
+                f"table2/{dev}/zero{stage}", probe_seconds * 1e6,
+                f"probes={prof.probes};mbs={prof.mbs};"
+                f"profile_s={probe_seconds:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

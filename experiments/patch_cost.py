@@ -1,0 +1,41 @@
+"""One-off: inject unrolled cost-pass numbers into existing dry-run artifacts.
+
+The pod1/pod2 artifacts were generated before the unrolled cost pass
+landed; their collective/memory numbers are still valid (model default
+path unchanged — verified by re-running one combo), but `flops` came from
+the compiled SPMD cost_analysis() which counts scan bodies once. This
+script recomputes global algorithmic FLOPs/bytes per (arch, shape) and
+rewrites every artifact with the new field layout.
+"""
+import json, sys, time
+from pathlib import Path
+from repro.launch.dryrun import cost_pass
+
+DRY = Path("experiments/dryrun")
+combos = {}
+for fp in sorted(DRY.glob("*.json")):
+    rec = json.loads(fp.read_text())
+    if "skipped" in rec or "error" in rec:
+        continue
+    combos.setdefault((rec["arch"], rec["shape"]), []).append(fp)
+
+for (arch, shape), fps in combos.items():
+    t0 = time.time()
+    try:
+        out = cost_pass(arch, shape)
+    except Exception as e:
+        print(f"FAIL {arch}/{shape}: {type(e).__name__}: {e}", flush=True)
+        continue
+    for fp in fps:
+        rec = json.loads(fp.read_text())
+        rec["flops_unrolled"] = out["flops_unrolled"]
+        rec["bytes_unrolled"] = out["bytes_unrolled"]
+        if "flops" in rec:
+            rec["flops_per_device_compiled"] = rec.pop("flops")
+        if "bytes_accessed" in rec:
+            rec["bytes_per_device_compiled"] = rec.pop("bytes_accessed")
+        fp.write_text(json.dumps(rec, indent=2, default=str))
+    print(f"{arch}/{shape}: flops={out['flops_unrolled']:.3e} "
+          f"bytes={out['bytes_unrolled']:.3e} ({time.time()-t0:.1f}s) "
+          f"-> {len(fps)} files", flush=True)
+print("done")

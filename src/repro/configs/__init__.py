@@ -1,0 +1,28 @@
+"""Config registry. Importing this package registers every architecture."""
+from repro.configs import (granite_moe_1b_a400m, internlm2_20b, llava_next_34b,
+                           minitron_4b, moonshot_v1_16b_a3b, paper_models,
+                           phi3p5_moe_42b_a6p6b, seamless_m4t_medium,
+                           starcoder2_15b, xlstm_1p3b, zamba2_2p7b)
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, get_config,
+                                list_archs, reduce_config)
+from repro.configs.shapes import SHAPES, InputShape, applicable, get_shape
+
+# The ten architectures assigned to this paper (public pool).
+ASSIGNED_ARCHS = (
+    "granite-moe-1b-a400m",
+    "moonshot-v1-16b-a3b",
+    "xlstm-1.3b",
+    "phi3.5-moe-42b-a6.6b",
+    "seamless-m4t-medium",
+    "llava-next-34b",
+    "starcoder2-15b",
+    "internlm2-20b",
+    "minitron-4b",
+    "zamba2-2.7b",
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "get_config", "list_archs",
+    "reduce_config", "SHAPES", "InputShape", "applicable", "get_shape",
+    "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,262 @@
+"""Config system for repro.
+
+Every architecture is described by a :class:`ModelConfig`. Configs are
+registered by id in a global registry; ``get_config("<id>")`` returns the
+full-size published config and ``get_config("<id>", reduced=True)`` returns
+the 2-layer smoke-test variant of the same family (d_model<=512, <=4
+experts) used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block descriptors
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/model.py
+BLOCK_ATTN = "attn"          # GQA attention + MLP (dense transformer block)
+BLOCK_MOE = "moe"            # GQA attention + MoE FFN
+BLOCK_MLSTM = "mlstm"        # xLSTM matrix-memory block
+BLOCK_SLSTM = "slstm"        # xLSTM scalar-memory block
+BLOCK_MAMBA2 = "mamba2"      # Mamba2 SSM block
+BLOCK_SHARED_ATTN = "shared_attn"  # zamba2 shared transformer block marker
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    # d_ff of each expert (for MoE archs the table's d_ff is per-expert)
+    d_expert: int
+    # load-balance auxiliary loss weight
+    aux_loss_weight: float = 0.01
+    # capacity factor for expert-parallel dispatch buffers
+    capacity_factor: float = 1.25
+    # routing-group length (tokens). None = paper-faithful per-sequence
+    # capacity; setting it bounds the (tokens, E, C) dispatch tensors to
+    # C = ceil(group*K/E*cf) per group instead of C ~ S*K/E — the
+    # §Perf/P1 optimization (GShard/MaxText grouped routing).
+    group_size: Optional[int] = None
+    # dispatch implementation: "gshard" (capacity one-hot einsums, MXU
+    # friendly, token-dropping) or "ragged" (sorted dropless dispatch via
+    # lax.ragged_dot — §Perf/P1 iteration 2).
+    impl: str = "gshard"
+    # dtype of the combine (gate-weighted) one-hot tensor; float32 is the
+    # GShard default, bfloat16 halves its footprint (§Perf/P1 iter 3).
+    combine_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64          # N (mamba2 state size per head)
+    head_dim: int = 64           # P (channels per SSM head)
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256        # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""             # citation per assignment table
+
+    # --- attention ---
+    causal: bool = True                 # False => bidirectional encoder (BERT)
+    head_dim: Optional[int] = None      # default d_model // n_heads
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None  # None = full causal attention
+    # whether a sliding-window variant exists for long-context decode
+    long_context_variant_window: Optional[int] = 8192
+
+    # --- mixture of experts ---
+    moe: Optional[MoEConfig] = None
+    # MoE applied every `moe_every` layers (1 = all layers)
+    moe_every: int = 1
+
+    # --- ssm / hybrid ---
+    ssm: Optional[SSMConfig] = None
+    # layer pattern for hybrid/xLSTM archs; None = homogeneous `family` stack
+    block_pattern: Optional[Tuple[str, ...]] = None
+    # zamba2-style shared block period (shared attn block every k blocks)
+    shared_block_period: Optional[int] = None
+
+    # --- enc-dec (audio) ---
+    encoder_layers: int = 0              # >0 => encoder-decoder model
+    # ratio of encoder frames to decoder tokens (frontend downsampling)
+    encoder_frame_ratio: int = 4
+
+    # --- multimodal stubs ---
+    # vlm: number of image-patch tokens prepended & frontend embedding dim
+    num_image_tokens: int = 0
+    frontend_dim: int = 0
+
+    # --- serving ---
+    # KV cache storage dtype (None = follow `dtype`). "float8_e4m3fn"
+    # halves decode cache reads (§Perf/P2 follow-up); values are upcast
+    # at the attention einsum.
+    kv_cache_dtype: Optional[str] = None
+
+    # --- xLSTM ---
+    # chunk length of the chunkwise-parallel mLSTM scan. The dominant
+    # intermediates are (B, Q, Q, H) f32, so bytes scale ~ S*Q (§Perf/P3).
+    mlstm_chunk: int = 256
+
+    # --- training ---
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    zero_stage: int = 3
+    remat: bool = True
+
+    # shapes this arch cannot run (see DESIGN.md shape/skip matrix)
+    skip_shapes: Tuple[str, ...] = ()
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def total_params(self) -> int:
+        """Approximate parameter count (used for 6ND model-flops checks)."""
+        return _count_params(self)
+
+    @property
+    def active_params(self) -> int:
+        """Params active per token (MoE: top_k of num_experts)."""
+        return _count_params(self, active_only=True)
+
+    def blocks(self) -> Tuple[str, ...]:
+        """Resolved per-layer block kinds for the decoder stack."""
+        if self.block_pattern is not None:
+            pat = self.block_pattern
+            reps = (self.n_layers + len(pat) - 1) // len(pat)
+            return tuple((pat * reps)[: self.n_layers])
+        if self.family == "moe" or self.moe is not None:
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append(BLOCK_MOE if (i % self.moe_every == 0) else BLOCK_ATTN)
+            return tuple(kinds)
+        return tuple([BLOCK_ATTN] * self.n_layers)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    q = cfg.d_model * cfg.n_heads * hd
+    kv = 2 * cfg.d_model * cfg.n_kv_heads * hd
+    o = cfg.n_heads * hd * cfg.d_model
+    return q + kv + o
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    # SwiGLU: gate + up + down
+    return 3 * cfg.d_model * d_ff
+
+
+def _count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    emb = cfg.vocab_size * cfg.d_model
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    total = emb + head
+    kinds = cfg.blocks()
+    d_inner = (cfg.ssm.expand * cfg.d_model) if cfg.ssm else 0
+    for kind in kinds:
+        if kind == BLOCK_ATTN:
+            total += _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 2 * cfg.d_model
+        elif kind == BLOCK_MOE:
+            assert cfg.moe is not None
+            n_e = cfg.moe.top_k if active_only else cfg.moe.num_experts
+            total += _attn_params(cfg)
+            total += n_e * _mlp_params(cfg, cfg.moe.d_expert)
+            total += cfg.d_model * cfg.moe.num_experts  # router
+            total += 2 * cfg.d_model
+        elif kind == BLOCK_MLSTM:
+            # qkv + out + gates (approximate published block)
+            total += 4 * cfg.d_model * 2 * cfg.d_model + 3 * cfg.d_model + cfg.d_model
+        elif kind == BLOCK_SLSTM:
+            total += 4 * cfg.d_model * cfg.d_model * 2 + 4 * cfg.d_model
+        elif kind == BLOCK_MAMBA2:
+            assert cfg.ssm is not None
+            n_h = d_inner // cfg.ssm.head_dim
+            total += cfg.d_model * (2 * d_inner + 2 * n_h * cfg.ssm.state_dim + n_h)
+            total += d_inner * cfg.d_model  # out proj
+            total += cfg.ssm.conv_width * d_inner
+        elif kind == BLOCK_SHARED_ATTN:
+            # weights shared across occurrences: counted once below
+            pass
+        total += 2 * cfg.d_model  # norms
+    if BLOCK_SHARED_ATTN in kinds:
+        total += _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 2 * cfg.d_model
+    if cfg.encoder_layers:
+        per = _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 4 * cfg.d_model
+        # decoder cross-attention
+        total += cfg.encoder_layers * per + cfg.n_layers * _attn_params(cfg)
+    if cfg.num_image_tokens:
+        total += cfg.frontend_dim * cfg.d_model  # projector
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig], reduced: Callable[[], ModelConfig]):
+    _REGISTRY[arch_id] = full
+    _REDUCED[arch_id] = reduced
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    # importing repro.configs triggers registration of all known archs
+    import repro.configs  # noqa: F401
+    table = _REDUCED if reduced else _REGISTRY
+    if arch_id not in table:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return table[arch_id]()
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Default reduced variant: 2 layers, d_model<=512, <=4 experts."""
+    small: Dict = dict(
+        n_layers=2,
+        d_model=min(cfg.d_model, 256),
+        n_heads=min(cfg.n_heads, 4),
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 1024),
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        num_image_tokens=min(cfg.num_image_tokens, 16) if cfg.num_image_tokens else 0,
+        frontend_dim=min(cfg.frontend_dim, 64) if cfg.frontend_dim else 0,
+        remat=False,
+    )
+    if cfg.moe is not None:
+        small["moe"] = replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=min(cfg.moe.d_expert, 256),
+        )
+    if cfg.ssm is not None:
+        small["ssm"] = replace(cfg.ssm, state_dim=min(cfg.ssm.state_dim, 16),
+                               head_dim=min(cfg.ssm.head_dim, 32), chunk_size=32)
+    if cfg.block_pattern is not None:
+        small["block_pattern"] = cfg.block_pattern[:2]
+    small.update(overrides)
+    return replace(cfg, **small)

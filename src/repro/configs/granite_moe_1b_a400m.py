@@ -1,0 +1,30 @@
+"""granite-moe-1b-a400m — 24L d1024 16H (GQA kv=8) vocab 49155, MoE 32e top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, reduce_config, register
+
+ARCH_ID = "granite-moe-1b-a400m"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=512,
+        vocab_size=49155,
+        moe=MoEConfig(num_experts=32, top_k=8, d_expert=512),
+        tie_embeddings=True,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

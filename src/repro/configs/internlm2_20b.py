@@ -1,0 +1,29 @@
+"""internlm2-20b — 48L d6144 48H (GQA kv=8) d_ff=16384 vocab 92544.
+
+[arXiv:2403.17297] — dense GQA decoder. long_500k runs via the
+sliding-window variant (window 8192) per DESIGN.md.
+"""
+from repro.configs.base import ModelConfig, reduce_config, register
+
+ARCH_ID = "internlm2-20b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=48,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92544,
+        source="arXiv:2403.17297",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

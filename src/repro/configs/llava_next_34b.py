@@ -1,0 +1,39 @@
+"""llava-next-34b — 60L d7168 56H (GQA kv=8) d_ff=20480 vocab 64000, anyres.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] — VLM. The vision tower (ViT) is a
+STUB per the assignment carve-out: ``input_specs()`` provides precomputed
+patch embeddings (batch, num_image_tokens, frontend_dim); the multimodal
+projector and language decoder are real. AnyRes tiling => base tile + 4
+crops = 5 x 576 = 2880 image tokens.
+
+long_500k is skipped: pure full-attention VLM with no sub-quadratic variant
+in the source model family.
+"""
+from repro.configs.base import ModelConfig, reduce_config, register
+
+ARCH_ID = "llava-next-34b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        num_image_tokens=2880,   # anyres: (1 base + 4 crops) * 576
+        frontend_dim=1024,       # CLIP ViT-L/336 hidden size
+        long_context_variant_window=None,
+        skip_shapes=("long_500k",),
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,29 @@
+"""minitron-4b — 32L d3072 24H (GQA kv=8) d_ff=9216 vocab 256000.
+
+[arXiv:2407.14679] — pruned nemotron. Dense GQA decoder; long_500k via the
+sliding-window variant (window 8192).
+"""
+from repro.configs.base import ModelConfig, reduce_config, register
+
+ARCH_ID = "minitron-4b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=9216,
+        vocab_size=256000,
+        source="arXiv:2407.14679",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,59 @@
+"""The paper's own evaluation models: Llama 0.5B / 1.1B and BERT 1.1B.
+
+Poplar's experiments (Fig. 3–5) train a 0.5B Llama; Fig. 4 adds a 1.1B
+Llama and a 1.1B BERT. Sizes follow common published configs of those
+parameter counts (the paper does not list exact dims).
+"""
+from repro.configs.base import ModelConfig, reduce_config, register
+
+
+def llama_0p5b() -> ModelConfig:
+    return ModelConfig(
+        name="llama-0.5b",
+        family="dense",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=2816,
+        vocab_size=32000,
+        source="paper main experiments (Touvron et al. 2023 family)",
+    )
+
+
+def llama_1p1b() -> ModelConfig:
+    # TinyLlama-1.1B dims
+    return ModelConfig(
+        name="llama-1.1b",
+        family="dense",
+        n_layers=22,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=5632,
+        vocab_size=32000,
+        source="paper Fig.4 (1.1B Llama)",
+    )
+
+
+def bert_1p1b() -> ModelConfig:
+    # BERT-style bidirectional encoder scaled to ~1.1B
+    return ModelConfig(
+        name="bert-1.1b",
+        family="dense",
+        causal=False,
+        n_layers=24,
+        d_model=1792,
+        n_heads=28,
+        n_kv_heads=28,
+        d_ff=7168,
+        vocab_size=30522,
+        long_context_variant_window=None,
+        skip_shapes=("decode_32k", "long_500k"),  # encoder-only: no decode
+        source="paper Fig.4 (1.1B BERT; Devlin et al. 2019)",
+    )
+
+
+register("llama-0.5b", llama_0p5b, lambda: reduce_config(llama_0p5b()))
+register("llama-1.1b", llama_1p1b, lambda: reduce_config(llama_1p1b()))
+register("bert-1.1b", bert_1p1b, lambda: reduce_config(bert_1p1b()))

@@ -1,0 +1,30 @@
+"""phi3.5-moe-42b-a6.6b — 32L d4096 32H (GQA kv=8) d_ff=6400 vocab 32064,
+MoE 16 experts top-2.
+
+[hf:microsoft/Phi-3.5-MoE-instruct]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, reduce_config, register
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=6400,
+        vocab_size=32064,
+        moe=MoEConfig(num_experts=16, top_k=2, d_expert=6400),
+        source="hf:microsoft/Phi-3.5-MoE-instruct",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,38 @@
+"""seamless-m4t-medium — enc-dec, 12L d1024 16H d_ff=4096 vocab 256206.
+
+[arXiv:2308.11596] — multimodal speech/text translation. The modality
+frontend (mel-spectrogram + conv feature extractor) is a STUB per the
+assignment carve-out: ``input_specs()`` provides precomputed frame
+embeddings of shape (batch, seq/encoder_frame_ratio, d_model).
+
+long_500k is skipped (enc-dec speech translation has no meaningful 500k-token
+decode operating point, and the decoder is pure full attention).
+"""
+from repro.configs.base import ModelConfig, reduce_config, register
+
+ARCH_ID = "seamless-m4t-medium"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="audio",
+        n_layers=12,            # decoder layers
+        encoder_layers=12,      # speech/text encoder layers
+        encoder_frame_ratio=4,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        long_context_variant_window=None,
+        skip_shapes=("long_500k",),
+        source="arXiv:2308.11596",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full())
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,47 @@
+"""The four assigned input shapes and the shape/arch skip matrix."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def applicable(arch_cfg, shape_name: str) -> Tuple[bool, str]:
+    """Returns (runs?, reason). Skip matrix per DESIGN.md §4."""
+    if shape_name in arch_cfg.skip_shapes:
+        if shape_name == "long_500k":
+            return False, (
+                "long_500k skipped: pure full-attention arch with no "
+                "sub-quadratic variant (see DESIGN.md shape/skip matrix)")
+        return False, f"{shape_name} skipped per config"
+    return True, ""
+
+
+def matrix(arch_ids: List[str]) -> List[Tuple[str, str, bool, str]]:
+    from repro.configs.base import get_config
+    rows = []
+    for a in arch_ids:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, why = applicable(cfg, s)
+            rows.append((a, s, ok, why))
+    return rows

@@ -1,0 +1,35 @@
+"""xlstm-1.3b — 48L d2048 4H vocab 50304, sLSTM + mLSTM blocks (xLSTM[7:1]).
+
+[arXiv:2405.04517] — attention-free recurrent arch; d_ff=0 (projections live
+inside the blocks). Runs long_500k natively (constant-size recurrent state).
+"""
+from repro.configs.base import (BLOCK_MLSTM, BLOCK_SLSTM, ModelConfig,
+                                reduce_config, register)
+
+ARCH_ID = "xlstm-1.3b"
+
+# xLSTM[7:1]: one sLSTM block per 8 layers, rest mLSTM.
+_PATTERN = (BLOCK_MLSTM,) * 7 + (BLOCK_SLSTM,)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        block_pattern=_PATTERN,
+        long_context_variant_window=None,  # no attention at all
+        source="arXiv:2405.04517",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full(), block_pattern=(BLOCK_MLSTM, BLOCK_SLSTM))
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,39 @@
+"""zamba2-2.7b — 54L d2560 32H (GQA kv=32) d_ff=10240 ssm_state=64, hybrid.
+
+[arXiv:2411.15242] — Mamba2 backbone with a weight-shared attention+MLP
+block applied every 6 layers (Zamba2 shares two alternating blocks; we model
+one shared block and note the simplification in DESIGN.md). Runs long_500k
+natively: SSM state is constant-size and the shared attention block uses the
+long-context sliding window.
+"""
+from repro.configs.base import (BLOCK_MAMBA2, BLOCK_SHARED_ATTN, ModelConfig,
+                                SSMConfig, reduce_config, register)
+
+ARCH_ID = "zamba2-2.7b"
+
+# 5 mamba2 blocks then one shared attention block, repeated.
+_PATTERN = (BLOCK_MAMBA2,) * 5 + (BLOCK_SHARED_ATTN,)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="hybrid",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=10240,
+        vocab_size=32000,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk_size=256),
+        block_pattern=_PATTERN,
+        shared_block_period=6,
+        source="arXiv:2411.15242",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_config(full(), block_pattern=(BLOCK_MAMBA2, BLOCK_SHARED_ATTN))
+
+
+register(ARCH_ID, full, reduced)

@@ -1,0 +1,264 @@
+"""Offline analysis — Algorithm 2 (Optimal Batch Size Searching) + the
+baseline allocation strategies Poplar is compared against.
+
+From each device's profile (probe points of TimeConsumedDuringStep), we fit
+speed(b) = b / t(b) with a natural cubic spline, then:
+
+- ZeRO-0/1: allocate gbs proportionally to peak speeds, then hand out the
+  integer remainder to the device with the most headroom (u_i = δt_i·p_i);
+  each device consumes its share `gmbs_i` by gradient accumulation at its
+  peak-speed micro-batch with a final partial `lbs_i` step.
+- ZeRO-2/3: sweep the per-microstep time budget t; `find(g_i,t)` inverts
+  each device's time curve to the largest batch finishing within t;
+  minimize (t + t_comm)·gas over the sweep (load balance vs collective
+  count trade-off).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profiler import DeviceProfile
+from repro.core.spline import CubicSpline, fit_natural_cubic, max_of_spline
+
+
+# ---------------------------------------------------------------------------
+# performance curves
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PerfCurve:
+    """speed(b) spline + derived helpers for one device."""
+    name: str
+    mbs: int
+    speed: CubicSpline            # samples/sec as a function of batch
+    peak_batch: float             # argmax of speed on [1, mbs]
+    peak_speed: float             # samples/sec at peak_batch
+
+    def time_of_batch(self, b: float) -> float:
+        if b <= 0:
+            return 0.0
+        s = max(self.speed(min(b, self.mbs)), 1e-9)
+        return b / s
+
+    def find_batch_within(self, t: float) -> int:
+        """Largest integer batch with time(b) <= t (paper's `find`)."""
+        if t <= 0 or self.mbs < 1:
+            return 0
+        lo, hi = 0, self.mbs
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.time_of_batch(mid) <= t:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+
+def fit_curve(profile: DeviceProfile) -> PerfCurve:
+    bs, sp = profile.speed_points()
+    if len(bs) == 1:
+        bs = np.array([bs[0], bs[0] + 1.0])
+        sp = np.array([sp[0], sp[0]])
+    spline = fit_natural_cubic(bs, sp)
+    pb, ps = max_of_spline(spline, 1.0, float(profile.mbs))
+    return PerfCurve(profile.name, profile.mbs, spline, pb, ps)
+
+
+# ---------------------------------------------------------------------------
+# allocation plans
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DeviceAssignment:
+    name: str
+    gmbs: int          # samples this device processes per iteration
+    micro_batch: int   # steady-state micro-batch (gradient accumulation)
+    gas: int           # accumulation steps (incl. final partial)
+    lbs: int           # last (partial) batch size; 0 = all steps full
+    predicted_time: float = 0.0
+
+
+@dataclass
+class AllocationPlan:
+    strategy: str
+    zero_stage: int
+    assignments: Dict[str, DeviceAssignment]
+    predicted_iter_time: float = 0.0
+    # for stage>=2 plans: the swept per-microstep budget chosen
+    micro_time_budget: Optional[float] = None
+    global_gas: Optional[int] = None
+
+    @property
+    def total_batch(self) -> int:
+        return sum(a.gmbs for a in self.assignments.values())
+
+
+def _accum_schedule(gmbs: int, micro: int) -> Tuple[int, int, int]:
+    """(micro_batch, gas, lbs) to cover gmbs by accumulation."""
+    if gmbs <= 0:
+        return 0, 0, 0
+    micro = max(1, min(micro, gmbs))
+    full, rem = divmod(gmbs, micro)
+    gas = full + (1 if rem else 0)
+    return micro, gas, rem
+
+
+def _device_iter_time(curve: PerfCurve, a: DeviceAssignment) -> float:
+    if a.gmbs <= 0:
+        return 0.0
+    t = (a.gas - (1 if a.lbs else 0)) * curve.time_of_batch(a.micro_batch)
+    if a.lbs:
+        t += curve.time_of_batch(a.lbs)
+    return t
+
+
+# ----------------------------- ZeRO-0/1 -----------------------------------
+
+def allocate_stage01(curves: Dict[str, PerfCurve], gbs: int) -> AllocationPlan:
+    names = list(curves)
+    speeds = {n: curves[n].peak_speed for n in names}
+    total_speed = sum(speeds.values())
+    time_opt = gbs / max(total_speed, 1e-9)
+    gmbs = {n: int(math.floor(time_opt * speeds[n])) for n in names}
+    # integer remainder: repeatedly give one sample to the device with the
+    # largest headroom u_i = δt_i · p_i (most under-utilized).
+    remain = gbs - sum(gmbs.values())
+    while remain > 0:
+        times = {n: gmbs[n] / max(speeds[n], 1e-9) for n in names}
+        T = max(times.values())
+        u = {n: (T - times[n]) * speeds[n] for n in names}
+        target = max(names, key=lambda n: (u[n], speeds[n]))
+        gmbs[target] += 1
+        remain -= 1
+    assigns = {}
+    for n in names:
+        micro = max(1, min(int(round(curves[n].peak_batch)), curves[n].mbs))
+        m, gas, lbs = _accum_schedule(gmbs[n], micro)
+        a = DeviceAssignment(n, gmbs[n], m, gas, lbs)
+        a.predicted_time = _device_iter_time(curves[n], a)
+        assigns[n] = a
+    plan = AllocationPlan("poplar", 1, assigns)
+    plan.predicted_iter_time = max((a.predicted_time for a in assigns.values()),
+                                   default=0.0)
+    return plan
+
+
+# ----------------------------- ZeRO-2/3 -----------------------------------
+
+def allocate_stage23(curves: Dict[str, PerfCurve], gbs: int,
+                     comm_time_per_step: float, zero_stage: int,
+                     sweep_points: int = 200) -> AllocationPlan:
+    names = list(curves)
+    t_min = min(curves[n].time_of_batch(1) for n in names)
+    t_max = max(curves[n].time_of_batch(curves[n].mbs) for n in names)
+    best = None
+    for t in np.linspace(t_min, t_max, sweep_points):
+        bs = {n: curves[n].find_batch_within(float(t)) for n in names}
+        msbs = sum(bs.values())
+        if msbs <= 0:
+            continue
+        gas = math.ceil(gbs / msbs)
+        # actual per-microstep time is the max over devices of their chosen b
+        t_step = max(curves[n].time_of_batch(bs[n]) for n in names)
+        wall = (t_step + comm_time_per_step) * gas
+        if best is None or wall < best[0]:
+            best = (wall, dict(bs), gas, float(t))
+    assert best is not None, "no feasible allocation"
+    wall, bs, gas, t_budget = best
+    assigns = {}
+    for n in names:
+        gmbs_n = bs[n] * gas
+        m, g, lbs = _accum_schedule(gmbs_n, bs[n])
+        a = DeviceAssignment(n, gmbs_n, m, g, lbs)
+        a.predicted_time = _device_iter_time(curves[n], a)
+        assigns[n] = a
+    # trim overshoot (Σ b_i·gas >= gbs): shave the final partial steps of the
+    # fastest devices so Σ gmbs == gbs exactly.
+    over = sum(a.gmbs for a in assigns.values()) - gbs
+    order = sorted(names, key=lambda n: -curves[n].peak_speed)
+    i = 0
+    while over > 0 and any(a.gmbs > 0 for a in assigns.values()):
+        n = order[i % len(order)]
+        a = assigns[n]
+        take = min(over, a.micro_batch if a.gmbs >= a.micro_batch else a.gmbs)
+        take = min(take, a.gmbs)
+        if take > 0:
+            a.gmbs -= take
+            m, g, lbs = _accum_schedule(a.gmbs, a.micro_batch or 1)
+            a.micro_batch, a.gas, a.lbs = m, g, lbs
+            a.predicted_time = _device_iter_time(curves[n], a)
+            over -= take
+        i += 1
+    plan = AllocationPlan("poplar", zero_stage, assigns,
+                          micro_time_budget=t_budget, global_gas=gas)
+    plan.predicted_iter_time = wall
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def allocate_uniform(curves: Dict[str, PerfCurve], gbs: int,
+                     zero_stage: int) -> AllocationPlan:
+    """DeepSpeed-style: identical micro-batch everywhere, bounded by the
+    weakest device's mbs (manually 'tuned' to the max feasible)."""
+    names = list(curves)
+    n = len(names)
+    micro = max(1, min(c.mbs for c in curves.values()))
+    per_dev = gbs // n
+    rem = gbs - per_dev * n
+    assigns = {}
+    for i, name in enumerate(names):
+        gmbs = per_dev + (1 if i < rem else 0)
+        m, gas, lbs = _accum_schedule(gmbs, micro)
+        a = DeviceAssignment(name, gmbs, m, gas, lbs)
+        a.predicted_time = _device_iter_time(curves[name], a)
+        assigns[name] = a
+    plan = AllocationPlan("deepspeed-uniform", zero_stage, assigns)
+    plan.predicted_iter_time = max(a.predicted_time for a in assigns.values())
+    return plan
+
+
+def allocate_flops_proportional(curves: Dict[str, PerfCurve], gbs: int,
+                                zero_stage: int,
+                                flops_rating: Dict[str, float]) -> AllocationPlan:
+    """Whale-style: split by *spec-sheet FLOPs* rating (the paper's point:
+    FLOPs alone mispredicts real heterogeneous performance)."""
+    names = list(curves)
+    total = sum(flops_rating[n] for n in names)
+    assigns = {}
+    given = 0
+    for name in names:
+        share = int(round(gbs * flops_rating[name] / total))
+        share = min(share, gbs - given)
+        given += share
+        micro = max(1, min(int(round(curves[name].peak_batch)), curves[name].mbs))
+        m, gas, lbs = _accum_schedule(share, micro)
+        a = DeviceAssignment(name, share, m, gas, lbs)
+        a.predicted_time = _device_iter_time(curves[name], a)
+        assigns[name] = a
+    # dump any rounding remainder on the highest-rated device
+    if given < gbs:
+        top = max(names, key=lambda n: flops_rating[n])
+        a = assigns[top]
+        a.gmbs += gbs - given
+        m, gas, lbs = _accum_schedule(a.gmbs, a.micro_batch or 1)
+        a.micro_batch, a.gas, a.lbs = m, gas, lbs
+        a.predicted_time = _device_iter_time(curves[top], a)
+    plan = AllocationPlan("whale-flops", zero_stage, assigns)
+    plan.predicted_iter_time = max(a.predicted_time for a in assigns.values())
+    return plan
+
+
+def allocate_homogeneous(curves: Dict[str, PerfCurve], gbs: int,
+                         zero_stage: int, keep: List[str]) -> AllocationPlan:
+    """Baselines 1/2: use only the weak (or strong) homogeneous sub-cluster."""
+    sub = {n: curves[n] for n in keep}
+    plan = allocate_uniform(sub, gbs, zero_stage)
+    plan.strategy = "homogeneous"
+    return plan

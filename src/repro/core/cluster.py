@@ -1,0 +1,120 @@
+"""Device and cluster descriptions.
+
+The paper's heterogeneity unit is one GPU; ours (on TPU) is a mesh group —
+but the planner/simulator operate on abstract `DeviceSpec`s either way.
+Published chip specs seed the analytical performance model used when real
+measurement is impossible (simulating the paper's six GPU types on a CPU
+container, or planning for a heterogeneous TPU fleet).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# device catalog
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    peak_tflops: float          # dense fp16/bf16 tensor throughput
+    mem_gb: float
+    hbm_gbps: float
+    link_gbps: float            # per-device interconnect bandwidth
+    # analytical curve parameters: time(b) = overhead + b / eff_rate(b),
+    # samples/s rate saturates like b/(b+half_batch). `mfu` is the plateau
+    # fraction of peak actually achieved in training.
+    mfu: float = 0.45
+    half_batch: float = 2.0     # batch at which half the plateau is reached
+    overhead_s: float = 0.004   # per-microstep launch/overhead seconds
+
+
+# GPUs from the paper's three clusters (+ appendix consumer cards)
+GPU_CATALOG: Dict[str, DeviceSpec] = {
+    "A100-80G": DeviceSpec("A100-80G", 312.0, 80.0, 2039.0, 600.0, 0.48, 2.0),
+    "A100-40G": DeviceSpec("A100-40G", 312.0, 40.0, 1555.0, 64.0, 0.48, 2.0),
+    "A800-80G": DeviceSpec("A800-80G", 312.0, 80.0, 2039.0, 400.0, 0.48, 2.0),
+    "V100-16G": DeviceSpec("V100-16G", 125.0, 16.0, 900.0, 32.0, 0.42, 1.5),
+    "V100S-32G": DeviceSpec("V100S-32G", 130.0, 32.0, 1134.0, 32.0, 0.42, 1.5),
+    "T4-16G": DeviceSpec("T4-16G", 65.0, 16.0, 300.0, 32.0, 0.35, 1.0),
+    "RTX4090-24G": DeviceSpec("RTX4090-24G", 165.0, 24.0, 1008.0, 32.0, 0.40, 1.5),
+    "RTX3060-12G": DeviceSpec("RTX3060-12G", 51.0, 12.0, 360.0, 16.0, 0.33, 1.0),
+}
+
+# TPU generations — the heterogeneity axis for pod-level Poplar on TPU
+TPU_CATALOG: Dict[str, DeviceSpec] = {
+    "v5e": DeviceSpec("v5e", 197.0, 16.0, 819.0, 50.0, 0.55, 2.0, 0.002),
+    "v4": DeviceSpec("v4", 275.0, 32.0, 1228.0, 50.0, 0.55, 2.0, 0.002),
+    "v5p": DeviceSpec("v5p", 459.0, 95.0, 2765.0, 100.0, 0.55, 2.0, 0.002),
+}
+
+CATALOG: Dict[str, DeviceSpec] = {**GPU_CATALOG, **TPU_CATALOG}
+
+
+# ---------------------------------------------------------------------------
+# clusters
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    name: str
+    devices: Tuple[DeviceSpec, ...]
+    # slowest inter-device link bandwidth (GB/s) — the collective bottleneck
+    inter_link_gbps: float = 25.0
+    # PCIe/socket-style shared fabric: effective per-collective bandwidth
+    # divides across participants (the paper's clusters are PCIe-linked)
+    shared_bus: bool = True
+
+    def effective_link_gbps(self, n_active: int) -> float:
+        if self.shared_bus:
+            return self.inter_link_gbps / max(n_active / 2.0, 1.0)
+        return self.inter_link_gbps
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.devices:
+            out[d.name] = out.get(d.name, 0) + 1
+        return out
+
+
+def make_cluster(name: str, composition: Sequence[Tuple[str, int]],
+                 inter_link_gbps: float = 25.0,
+                 shared_bus: bool = True) -> ClusterSpec:
+    devs: List[DeviceSpec] = []
+    for dev_name, count in composition:
+        devs.extend([CATALOG[dev_name]] * count)
+    return ClusterSpec(name, tuple(devs), inter_link_gbps, shared_bus)
+
+
+# the paper's three experimental clusters (Table 1)
+def cluster_A() -> ClusterSpec:
+    # 4x A100-80G (NVLink) + 4x A100-40G (PCIe): same compute, different mem
+    return make_cluster("A", [("A100-80G", 4), ("A100-40G", 4)], 25.0)
+
+
+def cluster_B() -> ClusterSpec:
+    # 2x V100-16G + 2x T4-16G: same memory, different compute
+    return make_cluster("B", [("V100-16G", 2), ("T4-16G", 2)], 12.0)
+
+
+def cluster_C() -> ClusterSpec:
+    # 4x A800-80G + 4x V100S-32G: both differ
+    return make_cluster("C", [("A800-80G", 4), ("V100S-32G", 4)], 12.0)
+
+
+PAPER_CLUSTERS = {"A": cluster_A, "B": cluster_B, "C": cluster_C}
+
+
+def hetero_tpu_fleet() -> ClusterSpec:
+    """A heterogeneous TPU fleet: one v5e pod-slice group + one v4 group.
+
+    This is the pod-granular heterogeneity unit used by the multi-pod
+    launcher: each entry represents a 256-chip pod, speeds scaled
+    accordingly by the planner."""
+    return make_cluster("tpu-v5e+v4", [("v5e", 1), ("v4", 1)], 40.0,
+                        shared_bus=False)  # ICI point-to-point

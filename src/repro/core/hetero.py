@@ -1,0 +1,122 @@
+"""Heterogeneous batch execution under SPMD — the TPU-native realization of
+Poplar's uneven batch assignment (DESIGN.md §2).
+
+The paper's MPMD freedom (each GPU running its own batch size) becomes:
+
+1. the *batch layout*: the global batch dimension is laid out as
+   ``n_groups × padded_group_batch`` where group g holds ``b_g`` real
+   samples (Poplar's allocation) plus padding rows; a loss mask zeroes the
+   padding so gradients are exact;
+2. the *accumulation layout*: every group runs the same number of
+   micro-steps ``gas = max_g gas_g``; groups that finish their share early
+   get fully-masked micro-batches (their last real step is Poplar's `lbs`).
+
+BSP synchronization points (the psums XLA inserts) then see identical
+program shapes everywhere while per-group useful work follows the plan.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocation import AllocationPlan
+
+
+@dataclass
+class HeteroBatchLayout:
+    """Static description of the padded global batch."""
+    group_names: List[str]           # one entry per mesh group (e.g. pod)
+    real_per_group: List[int]        # Poplar's b_g per accumulation step
+    padded_group_batch: int          # uniform padded rows per group
+    gas: int                         # accumulation steps (global max)
+    last_real_per_group: List[int]   # real rows in the final micro-step
+
+    @property
+    def padded_global_batch(self) -> int:
+        return self.padded_group_batch * len(self.group_names)
+
+    def total_real(self) -> int:
+        full = sum(r * (self.gas - 1) for r in self.real_per_group)
+        return full + sum(self.last_real_per_group)
+
+
+def layout_from_plan(plan: AllocationPlan, group_multiple: int = 1
+                     ) -> HeteroBatchLayout:
+    """Derive the padded SPMD layout from an AllocationPlan.
+
+    ``group_multiple``: padded per-group batch must divide the data-axis
+    size inside each group (e.g. 16 for a (16, 16) pod mesh).
+    """
+    names = [n for n in plan.assignments]
+    gas = max((a.gas for a in plan.assignments.values()), default=1)
+    gas = max(gas, 1)
+    micro = [plan.assignments[n].micro_batch or 0 for n in names]
+    pad = max(micro) if micro else 1
+    pad = max(pad, 1)
+    pad = int(math.ceil(pad / group_multiple) * group_multiple)
+    last = []
+    for n in names:
+        a = plan.assignments[n]
+        if a.gmbs == 0:
+            last.append(0)
+        elif a.lbs:
+            last.append(a.lbs)
+        else:
+            last.append(a.micro_batch if a.gas == gas else 0)
+    return HeteroBatchLayout(names, micro, pad, gas, last)
+
+
+def build_masks(layout: HeteroBatchLayout) -> np.ndarray:
+    """(gas, padded_global_batch) float mask of real rows."""
+    G = len(layout.group_names)
+    m = np.zeros((layout.gas, G, layout.padded_group_batch), np.float32)
+    for gi in range(G):
+        a_gas_full = layout.gas - 1
+        for s in range(layout.gas):
+            if s < a_gas_full:
+                # device may have fewer steps than global gas: steps beyond
+                # its own schedule stay masked
+                real = layout.real_per_group[gi] if s < _dev_steps(layout, gi) - 1 else (
+                    layout.last_real_per_group[gi] if s == _dev_steps(layout, gi) - 1 else 0)
+            else:
+                real = layout.last_real_per_group[gi]
+            real = min(real, layout.padded_group_batch)
+            m[s, gi, :real] = 1.0
+    return m.reshape(layout.gas, G * layout.padded_group_batch)
+
+
+def _dev_steps(layout: HeteroBatchLayout, gi: int) -> int:
+    # number of micro-steps in which group gi has any real work
+    r, l = layout.real_per_group[gi], layout.last_real_per_group[gi]
+    if r == 0 and l == 0:
+        return 0
+    return layout.gas
+
+
+def pack_batch(tokens: np.ndarray, layout: HeteroBatchLayout,
+               seq_len: int) -> Dict[str, np.ndarray]:
+    """Scatter a stream of (N, seq+1) token rows into the padded layout.
+
+    Returns arrays shaped (gas, padded_global_batch, seq) + masks. Rows are
+    consumed group-major per micro-step; unfilled rows are zero + masked.
+    """
+    masks = build_masks(layout)                   # (gas, B_pad)
+    gas, B_pad = masks.shape
+    toks = np.zeros((gas, B_pad, seq_len), tokens.dtype)
+    labs = np.zeros((gas, B_pad, seq_len), tokens.dtype)
+    cursor = 0
+    for s in range(gas):
+        for b in range(B_pad):
+            if masks[s, b] > 0:
+                if cursor >= len(tokens):
+                    masks[s, b] = 0.0
+                    continue
+                row = tokens[cursor]
+                cursor += 1
+                toks[s, b] = row[:seq_len]
+                labs[s, b] = row[1:seq_len + 1]
+    loss_mask = masks[:, :, None] * np.ones((1, 1, seq_len), np.float32)
+    return {"tokens": toks, "labels": labs, "loss_mask": loss_mask}

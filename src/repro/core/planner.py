@@ -1,0 +1,77 @@
+"""End-to-end Poplar planner: the "fully automated parallelism" pipeline of
+Figure 2 — online profiling -> spline fitting -> batch-allocation search ->
+training configuration. One call, no manual batch-size tuning.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.allocation import (AllocationPlan, PerfCurve, allocate_stage01,
+                                   allocate_stage23, fit_curve)
+from repro.core.cluster import ClusterSpec, DeviceSpec
+from repro.core.profiler import (AnalyticalRunner, DeviceProfile, DeviceRunner,
+                                 SimOOM, profile_cluster)
+from repro.core.simulator import SimResult, simulate_plan
+from repro.core.workload import (MemoryModel, comm_time_per_microstep,
+                                 train_flops_per_token)
+
+
+@dataclass
+class PoplarPlan:
+    zero_stage: int
+    allocation: AllocationPlan
+    curves: Dict[str, PerfCurve]
+    profiles: Dict[str, DeviceProfile]
+    predicted: Optional[SimResult] = None
+    profiling_probes: int = 0
+
+
+def make_runners(cluster: ClusterSpec, cfg: ModelConfig, seq_len: int,
+                 zero_stage: int, remat: bool = True, noise: float = 0.0,
+                 ) -> Dict[str, DeviceRunner]:
+    """Analytical runners — one per device — for the given workload/stage."""
+    fps = train_flops_per_token(cfg, seq_len) * seq_len
+    runners: Dict[str, DeviceRunner] = {}
+    counts: Dict[str, int] = {}
+    for spec in cluster.devices:
+        counts[spec.name] = counts.get(spec.name, 0) + 1
+        name = f"{spec.name}#{counts[spec.name]}"
+        mem = MemoryModel(cfg, seq_len, zero_stage, cluster.n, remat)
+        runners[name] = AnalyticalRunner(spec, mem, fps, zero_stage,
+                                         noise=noise)
+    return runners
+
+
+def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
+         zero_stage: Optional[int] = None, remat: bool = True,
+         runner_factory: Optional[Callable[[int], Dict[str, DeviceRunner]]] = None,
+         ) -> PoplarPlan:
+    """Run the full Poplar pipeline.
+
+    ``zero_stage=None`` enables automatic stage escalation (paper: start at
+    ZeRO-0; if any device cannot fit one sample, escalate).
+    """
+    stages = [zero_stage] if zero_stage is not None else [0, 1, 2, 3]
+    last_err: Optional[Exception] = None
+    for stage in stages:
+        runners = (runner_factory(stage) if runner_factory
+                   else make_runners(cluster, cfg, seq_len, stage, remat))
+        profiles = profile_cluster(runners, stage)
+        if any(p.mbs < 1 for p in profiles.values()):
+            last_err = SimOOM(f"stage {stage}: some device cannot fit batch 1")
+            continue
+        curves = {n: fit_curve(p) for n, p in profiles.items()}
+        if stage <= 1:
+            alloc = allocate_stage01(curves, gbs)
+        else:
+            comm = comm_time_per_microstep(cfg, stage, cluster.n,
+                                           cluster.effective_link_gbps(cluster.n))
+            alloc = allocate_stage23(curves, gbs, comm, stage)
+        alloc.zero_stage = stage
+        fps = train_flops_per_token(cfg, seq_len) * seq_len
+        predicted = simulate_plan(alloc, curves, cfg, seq_len, cluster, fps)
+        return PoplarPlan(stage, alloc, curves, profiles, predicted,
+                          profiling_probes=sum(p.probes for p in profiles.values()))
+    raise last_err or SimOOM("no feasible stage")

@@ -1,0 +1,233 @@
+"""Online profiling — Algorithm 1 of the paper.
+
+Per device, fully automatically:
+  phase 1: linear memory-scaling estimate of the theoretical max batch size
+           (one forward at batch 1, extrapolate to device capacity);
+  phase 2: exponential probing (1,2,4,...) followed by binary search for the
+           exact OOM-free ``mbs``, recording step wall-time at every probe.
+
+Per-stage *TimeConsumedDuringStep* (paper §Online Profiling): collective
+time is subtracted so only heterogeneous compute is compared —
+  ZeRO-0/1: fwd + bwd;
+  ZeRO-2:   fwd + (bwd − reduce-scatter);
+  ZeRO-3:   total − AG_fwd − AG_bwd − reduce-scatter.
+
+Runners implement the measurement substrate: `AnalyticalRunner` simulates a
+published `DeviceSpec` (used for the paper's GPU clusters on this CPU box);
+`MeasuredRunner` really executes and times a jitted step (used in tests and
+the CPU examples) with a compile-time `memory_analysis()` OOM oracle — we
+never risk a real OOM (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.core.cluster import DeviceSpec
+from repro.core.workload import MemoryModel
+
+
+class SimOOM(Exception):
+    """Raised by a runner when a batch does not fit device memory."""
+
+
+@dataclass
+class StepSegments:
+    """Wall-time segments of one training step (seconds)."""
+    fwd: float
+    bwd: float
+    optim: float = 0.0
+    ag_fwd: float = 0.0      # all-gather during forward (ZeRO-3)
+    ag_bwd: float = 0.0      # all-gather during backward (ZeRO-3)
+    rs_bwd: float = 0.0      # reduce-scatter during backward (ZeRO-2/3)
+
+    @property
+    def total(self) -> float:
+        return (self.fwd + self.bwd + self.optim
+                + self.ag_fwd + self.ag_bwd + self.rs_bwd)
+
+
+def time_consumed_during_step(seg: StepSegments, zero_stage: int) -> float:
+    """The paper's per-stage compute-time extraction."""
+    if zero_stage in (0, 1):
+        return seg.fwd + seg.bwd
+    if zero_stage == 2:
+        return seg.fwd + seg.bwd  # bwd here is already compute-only …
+    # ZeRO-3: subtract both all-gathers and the reduce-scatter
+    return seg.total - seg.ag_fwd - seg.ag_bwd - seg.rs_bwd - seg.optim
+
+
+class DeviceRunner(Protocol):
+    def memory_bytes_at(self, batch: int) -> float: ...
+    def memory_capacity_bytes(self) -> float: ...
+    def run_step(self, batch: int) -> StepSegments: ...
+
+
+@dataclass
+class AnalyticalRunner:
+    """Simulates one device of the given spec running the given workload."""
+    spec: DeviceSpec
+    memory: MemoryModel
+    flops_per_sample: float          # train fwd+bwd flops for one sample
+    zero_stage: int = 0
+    seed: int = 0
+    noise: float = 0.0               # relative timing jitter
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed + hash(self.spec.name) % 1000)
+
+    def memory_capacity_bytes(self) -> float:
+        return self.spec.mem_gb * 1e9
+
+    def memory_bytes_at(self, batch: int) -> float:
+        return self.memory.bytes_at_batch(batch)
+
+    def compute_time(self, batch: int) -> float:
+        """Saturating-throughput curve: rate(b) = peak·mfu·b/(b+h)."""
+        if batch <= 0:
+            return self.spec.overhead_s
+        eff = self.spec.peak_tflops * 1e12 * self.spec.mfu
+        sat = batch / (batch + self.spec.half_batch)
+        t = self.spec.overhead_s + batch * self.flops_per_sample / (eff * sat)
+        if self.noise:
+            t *= float(1.0 + self.noise * self._rng.standard_normal())
+        return t
+
+    def run_step(self, batch: int) -> StepSegments:
+        if self.memory_bytes_at(batch) > self.memory_capacity_bytes():
+            raise SimOOM(f"{self.spec.name}: batch {batch} OOM")
+        t = self.compute_time(batch)
+        # fwd:bwd ~ 1:2; collective segments are filled by the simulator
+        return StepSegments(fwd=t / 3.0, bwd=2.0 * t / 3.0)
+
+
+@dataclass
+class MeasuredRunner:
+    """Times a real jitted train step (CPU in this container, TPU on prod).
+
+    ``step_fn(batch_size)`` must run one full training step for that batch
+    size and block until complete. The OOM oracle is the compile-time
+    memory analysis (bytes) against ``capacity_bytes``.
+    """
+    step_fn: Callable[[int], None]
+    memory_bytes_fn: Callable[[int], float]
+    capacity_bytes: float
+    warmup: int = 1
+    repeats: int = 2
+
+    def memory_capacity_bytes(self) -> float:
+        return self.capacity_bytes
+
+    def memory_bytes_at(self, batch: int) -> float:
+        return self.memory_bytes_fn(batch)
+
+    def run_step(self, batch: int) -> StepSegments:
+        if self.memory_bytes_at(batch) > self.capacity_bytes:
+            raise SimOOM(f"batch {batch} predicted OOM")
+        for _ in range(self.warmup):
+            self.step_fn(batch)
+        ts = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            self.step_fn(batch)
+            ts.append(time.perf_counter() - t0)
+        t = float(np.median(ts))
+        return StepSegments(fwd=t / 3.0, bwd=2 * t / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DeviceProfile:
+    name: str
+    mbs: int                          # exact max OOM-free batch size
+    points: Dict[int, float]          # batch -> TimeConsumedDuringStep (s)
+    probes: int = 0                   # number of model executions (overhead)
+
+    def speed_points(self) -> Tuple[np.ndarray, np.ndarray]:
+        bs = np.array(sorted(self.points), dtype=np.float64)
+        sp = np.array([bs_i / self.points[int(bs_i)] for bs_i in bs])
+        return bs, sp
+
+
+def profile_device(runner: DeviceRunner, name: str, zero_stage: int,
+                   max_probe_cap: int = 1 << 16) -> DeviceProfile:
+    """Algorithm 1, both loops: linear estimate -> exponential -> binary."""
+    points: Dict[int, float] = {}
+    probes = 0
+
+    def try_step(b: int) -> Optional[float]:
+        nonlocal probes
+        probes += 1
+        try:
+            seg = runner.run_step(b)
+        except SimOOM:
+            return None
+        t = time_consumed_during_step(seg, zero_stage)
+        points[b] = t
+        return t
+
+    # ---- phase 1: linear estimate from a single batch ----
+    if try_step(1) is None:
+        # cannot even run one sample at this stage (caller escalates stage)
+        return DeviceProfile(name, 0, {}, probes)
+    base = runner.memory_bytes_at(0)
+    one = runner.memory_bytes_at(1)
+    cap = runner.memory_capacity_bytes()
+    per_sample = max(one - base, 1.0)
+    mbs_est = int(min((cap - base) / per_sample, max_probe_cap))
+    mbs_est = max(mbs_est, 1)
+
+    # ---- phase 2a: exponential probing up to the estimate ----
+    b = 1
+    last_ok = 1
+    while b < mbs_est:
+        b = min(b * 2, mbs_est)
+        if try_step(b) is None:
+            mbs_est = b - 1
+            break
+        last_ok = b
+
+    # ---- phase 2b: binary search in (last_ok, mbs_est] ----
+    low, high = last_ok, mbs_est
+    while low < high:
+        mid = (low + high + 1) // 2
+        if mid == last_ok:
+            break
+        if try_step(mid) is None:
+            high = mid - 1
+        else:
+            low = mid
+    mbs = low
+    return DeviceProfile(name, mbs, points, probes)
+
+
+def profile_cluster(runners: Dict[str, DeviceRunner], zero_stage: int
+                    ) -> Dict[str, DeviceProfile]:
+    """Profile every device (the paper runs them in parallel; order is
+    irrelevant to the result)."""
+    return {name: profile_device(r, name, zero_stage)
+            for name, r in runners.items()}
+
+
+def auto_stage(runners: Dict[str, DeviceRunner], start_stage: int = 0,
+               make_runner: Optional[Callable[[str, int], DeviceRunner]] = None
+               ) -> Tuple[int, Dict[str, DeviceProfile]]:
+    """Paper: 'starting from ZeRO-0, if the current stage cannot even run a
+    single batch, automatically increase the ZeRO stage.'"""
+    stage = start_stage
+    while stage <= 3:
+        rs = runners if make_runner is None else {
+            n: make_runner(n, stage) for n in runners}
+        profs = profile_cluster(rs, stage)
+        if all(p.mbs >= 1 for p in profs.values()):
+            return stage, profs
+        stage += 1
+    raise SimOOM("model does not fit at any ZeRO stage")

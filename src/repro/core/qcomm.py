@@ -1,0 +1,95 @@
+"""Quantized collectives (ZeRO++ qwZ/qgZ-style) — int8-on-the-wire
+reduce-scatter and all-gather, built from explicit shard_map collectives.
+
+The paper's appendix names "Quantized Weight Communication" and
+"Quantized Gradient Communication" as the ZeRO optimizations it defers
+to future work; these are the building blocks. Payloads cross the
+interconnect as int8 with per-block float32 scales (block = a contiguous
+chunk of the flattened tensor), cutting wire bytes ~2x vs bf16 / ~4x vs
+f32 at a bounded quantization error (tests pin the bound).
+
+``quantized_reduce_scatter`` follows the qgZ schedule: quantize ->
+all_to_all -> dequantize -> local sum, so the reduction itself happens
+in f32 (int8 psum would overflow and compound error).
+
+Integration note: these compose with shard_map-style explicit-collective
+training steps. The default train path lets XLA SPMD insert its own
+(unquantized) reductions — swapping those for qgZ requires taking the
+gradient exchange out of auto-SPMD, which is future work here exactly as
+it is in the paper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def _pad_to(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),))
+    return x, pad
+
+
+def quantize_blocks(x: jnp.ndarray, block: int = 256
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat f32/bf16 -> (int8 payload, per-block f32 scales)."""
+    xf, _ = _pad_to(x.reshape(-1).astype(jnp.float32), block)
+    xb = xf.reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / INT8_MAX, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blocks(q: jnp.ndarray, scale: jnp.ndarray, n: int,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    xb = q.astype(jnp.float32) * scale
+    return xb.reshape(-1)[:n].astype(dtype)
+
+
+def quantized_reduce_scatter(x: jnp.ndarray, axis_name: str,
+                             block: int = 256) -> jnp.ndarray:
+    """Inside shard_map: reduce a replicated-shape per-device tensor over
+    ``axis_name`` and return this device's 1/n partition (flattened).
+
+    Wire traffic per participant: n-1 int8 partitions + scales
+    (vs n-1 f32 partitions for an unquantized reduce-scatter).
+    """
+    n = jax.lax.axis_size(axis_name)
+    flat = x.reshape(-1).astype(jnp.float32)
+    flat, _ = _pad_to(flat, n * block)
+    part = flat.reshape(n, -1)                       # (n, per)
+    q, scale = jax.vmap(lambda p: quantize_blocks(p, block))(part)
+    # exchange: device i keeps the pieces destined to partition i
+    q = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0)
+    scale = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0)
+    per = part.shape[1]
+    deq = jax.vmap(lambda qq, ss: dequantize_blocks(qq, ss, per))(q, scale)
+    return deq.sum(axis=0)                           # (per,) f32
+
+
+def quantized_all_gather(x: jnp.ndarray, axis_name: str,
+                         block: int = 256) -> jnp.ndarray:
+    """Inside shard_map: gather each device's flat partition as int8 +
+    scales; returns the concatenated f32 tensor (n * len(x),)."""
+    q, scale = quantize_blocks(x.reshape(-1).astype(jnp.float32), block)
+    nloc = x.size
+    qg = jax.lax.all_gather(q, axis_name)            # (n, blocks, block)
+    sg = jax.lax.all_gather(scale, axis_name)
+    deq = jax.vmap(lambda qq, ss: dequantize_blocks(qq, ss, nloc))(qg, sg)
+    return deq.reshape(-1)
+
+
+def wire_bytes(n_elems: int, block: int = 256,
+               unquantized_dtype=jnp.float32) -> Tuple[int, int]:
+    """(quantized, unquantized) wire bytes for an n_elems exchange."""
+    blocks = -(-n_elems // block)
+    qbytes = n_elems * 1 + blocks * 4
+    ubytes = n_elems * jnp.dtype(unquantized_dtype).itemsize
+    return qbytes, ubytes

@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules (MaxText-style) + ZeRO param/opt sharding.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "heads", "ffn", "experts", "vocab", ...). A :class:`MeshRules`
+instance maps logical names onto physical mesh axes, checks divisibility,
+and layers the ZeRO stage on top:
+
+- tensor parallelism: logical axes that map to the ``model`` axis;
+- ZeRO-3 (FSDP): every parameter is additionally sharded along its largest
+  still-unsharded, divisible dimension over the ``data`` (and, unless
+  hierarchical-ZeRO is enabled, ``pod``) axes;
+- ZeRO-1/2: the same data-axis sharding is applied to optimizer state /
+  gradients only, while parameters stay replicated.
+
+A thread-local "current rules" pointer lets pure-jnp model code call
+:func:`constrain` without threading a mesh object everywhere; outside a
+rules context it is a no-op (CPU unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes, in priority order. Tuple entries are
+# compound (all used together).
+DEFAULT_LOGICAL_RULES: Dict[str, Tuple] = {
+    "batch": (("pod", "data"), ("data",)),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    "expert_capacity": (),
+    "vocab": (("model",),),
+    "embed": (),            # activations' d_model stays unsharded (TP on heads/ffn)
+    "seq": (),              # overridden for long-context decode layouts
+    "kv_seq": (("model",),),  # KV-cache sequence sharding for decode
+    "layers": (),
+    "ssm_heads": (("model",),),
+    "state": (),
+    "conv": (),
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+@dataclass
+class MeshRules:
+    mesh: Mesh
+    zero_stage: int = 3
+    # hierarchical ZeRO (ZeRO++ hpZ-style): params shard over 'data' only,
+    # never across 'pod'; cross-pod traffic is gradient reduction only.
+    hierarchical_params: bool = False
+    rules: Dict[str, Tuple] = field(default_factory=lambda: dict(DEFAULT_LOGICAL_RULES))
+    # shard KV caches along sequence over 'model' when kv_heads don't divide
+    kv_seq_shard: bool = True
+    # pure data parallelism (§Perf/P3): disable tensor parallelism, map
+    # 'batch' over (data, model) jointly and let ZeRO shard params over
+    # the model axis too. The right regime for attention-free archs whose
+    # head count can't use the model axis (e.g. xLSTM H=4 on a 16-way TP
+    # axis) — TP buys nothing there but forces per-scan-chunk resharding.
+    dp_only: bool = False
+
+    def __post_init__(self):
+        if self.dp_only:
+            rules = dict(self.rules)
+            rules["batch"] = (("pod", "data", "model"), ("data", "model"),
+                              ("data",))
+            for ax in ("heads", "kv_heads", "ffn", "experts", "vocab",
+                       "kv_seq", "ssm_heads"):
+                rules[ax] = ()
+            self.rules = rules
+
+    # ---------------- logical -> physical -----------------
+    def _resolve(self, logical: Optional[str], dim: int, taken: set) -> Optional[Tuple[str, ...]]:
+        if logical is None:
+            return None
+        for cand in self.rules.get(logical, ()):  # priority order
+            axes = tuple(cand) if isinstance(cand, (tuple, list)) else (cand,)
+            if any(a not in self.mesh.shape or a in taken for a in axes):
+                continue
+            if dim % _axis_size(self.mesh, axes) == 0:
+                return axes
+        return None
+
+    def activation_spec(self, logical_axes: Sequence[Optional[str]],
+                        shape: Optional[Sequence[int]] = None) -> P:
+        taken: set = set()
+        parts = []
+        for i, name in enumerate(logical_axes):
+            dim = shape[i] if shape is not None else 0
+            axes = None
+            if name is not None:
+                for cand in self.rules.get(name, ()):
+                    cand_t = tuple(cand) if isinstance(cand, (tuple, list)) else (cand,)
+                    if any(a not in self.mesh.shape or a in taken for a in cand_t):
+                        continue
+                    if shape is None or dim % _axis_size(self.mesh, cand_t) == 0:
+                        axes = cand_t
+                        break
+            if axes is None:
+                parts.append(None)
+            else:
+                taken.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    # data axes used for ZeRO param/opt sharding
+    def _zero_axes(self) -> Tuple[str, ...]:
+        axes = []
+        if "pod" in self.mesh.shape and not self.hierarchical_params:
+            axes.append("pod")
+        if "data" in self.mesh.shape:
+            axes.append("data")
+        if self.dp_only and "model" in self.mesh.shape:
+            axes.append("model")     # model axis is free of TP in dp_only
+        return tuple(axes)
+
+    def param_spec(self, shape: Sequence[int],
+                   logical_axes: Sequence[Optional[str]],
+                   zero_sharded: Optional[bool] = None) -> P:
+        """Physical spec for a parameter (or same-shaped opt state).
+
+        ``zero_sharded``: whether to additionally shard over the data/pod
+        axes. Defaults by stage: params are data-sharded only at stage 3;
+        optimizer state at stages >= 1 (callers pass the right flag).
+        """
+        if zero_sharded is None:
+            zero_sharded = self.zero_stage >= 3
+        taken: set = set()
+        parts: list = [None] * len(shape)
+        # 1) tensor parallel axes from logical names
+        for i, name in enumerate(logical_axes):
+            axes = self._resolve(name, shape[i], taken)
+            if axes is not None:
+                parts[i] = axes if len(axes) > 1 else axes[0]
+                taken.update(axes)
+        # 2) ZeRO data-axis sharding on the largest free divisible dim
+        if zero_sharded:
+            zaxes = tuple(a for a in self._zero_axes() if a not in taken)
+            if zaxes:
+                zsize = _axis_size(self.mesh, zaxes)
+                best = -1
+                # prefer later (non-layer-stack) dims on ties: iterate all,
+                # pick largest divisible dim not already sharded; skip dim 0
+                # when it is a scan-stacked 'layers' axis.
+                for i, d in enumerate(shape):
+                    if parts[i] is not None:
+                        continue
+                    if logical_axes[i] == "layers":
+                        continue
+                    eff = d  # remaining size on this dim
+                    if eff % zsize == 0 and (best < 0 or shape[i] > shape[best]):
+                        best = i
+                if best >= 0:
+                    existing = parts[best]
+                    assert existing is None
+                    parts[best] = zaxes if len(zaxes) > 1 else zaxes[0]
+        return P(*parts)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# thread-local current rules + constrain()
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_TLS, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield rules
+    finally:
+        _TLS.rules = prev
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical-axis sharding constraint if rules are active."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.activation_spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, rules.sharding(spec))

@@ -1,0 +1,85 @@
+"""Natural cubic spline interpolation (paper appendix, McKinley & Levine).
+
+Poplar fits each device's speed(batch) curve with a natural cubic spline
+over the probe points collected during online profiling. Implemented from
+scratch (tridiagonal solve) in numpy; no scipy dependency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass
+class CubicSpline:
+    """Natural cubic spline through (x_i, y_i); C2-continuous piecewise cubic."""
+    x: np.ndarray       # knots, strictly increasing (n,)
+    a: np.ndarray       # y values (n,)
+    b: np.ndarray       # (n-1,)
+    c: np.ndarray       # (n,)
+    d: np.ndarray       # (n-1,)
+
+    def __call__(self, xq):
+        xq = np.asarray(xq, dtype=np.float64)
+        scalar = xq.ndim == 0
+        xq = np.atleast_1d(xq)
+        # clamp extrapolation to the boundary segments
+        idx = np.clip(np.searchsorted(self.x, xq, side="right") - 1, 0,
+                      len(self.x) - 2)
+        dx = xq - self.x[idx]
+        y = (self.a[idx] + self.b[idx] * dx + self.c[idx] * dx ** 2
+             + self.d[idx] * dx ** 3)
+        return float(y[0]) if scalar else y
+
+    def derivative(self, xq):
+        xq = np.asarray(xq, dtype=np.float64)
+        scalar = xq.ndim == 0
+        xq = np.atleast_1d(xq)
+        idx = np.clip(np.searchsorted(self.x, xq, side="right") - 1, 0,
+                      len(self.x) - 2)
+        dx = xq - self.x[idx]
+        y = self.b[idx] + 2 * self.c[idx] * dx + 3 * self.d[idx] * dx ** 2
+        return float(y[0]) if scalar else y
+
+
+def fit_natural_cubic(xs: Sequence[float], ys: Sequence[float]) -> CubicSpline:
+    x = np.asarray(xs, dtype=np.float64)
+    y = np.asarray(ys, dtype=np.float64)
+    assert x.ndim == 1 and x.shape == y.shape and len(x) >= 2
+    assert np.all(np.diff(x) > 0), "knots must be strictly increasing"
+    n = len(x)
+    if n == 2:  # degenerate: linear segment
+        b = np.array([(y[1] - y[0]) / (x[1] - x[0])])
+        return CubicSpline(x, y, b, np.zeros(2), np.zeros(1))
+    h = np.diff(x)                                   # (n-1,)
+    # tridiagonal system for second-derivative coefficients c (natural BCs)
+    alpha = np.zeros(n)
+    alpha[1:-1] = (3.0 / h[1:] * (y[2:] - y[1:-1])
+                   - 3.0 / h[:-1] * (y[1:-1] - y[:-2]))
+    l = np.ones(n)
+    mu = np.zeros(n)
+    z = np.zeros(n)
+    for i in range(1, n - 1):
+        l[i] = 2.0 * (x[i + 1] - x[i - 1]) - h[i - 1] * mu[i - 1]
+        mu[i] = h[i] / l[i]
+        z[i] = (alpha[i] - h[i - 1] * z[i - 1]) / l[i]
+    c = np.zeros(n)
+    b = np.zeros(n - 1)
+    d = np.zeros(n - 1)
+    for j in range(n - 2, -1, -1):
+        c[j] = z[j] - mu[j] * c[j + 1]
+        b[j] = ((y[j + 1] - y[j]) / h[j]
+                - h[j] * (c[j + 1] + 2.0 * c[j]) / 3.0)
+        d[j] = (c[j + 1] - c[j]) / (3.0 * h[j])
+    return CubicSpline(x, y.copy(), b, c, d)
+
+
+def max_of_spline(sp: CubicSpline, lo: float, hi: float, samples: int = 512):
+    """(argmax, max) of the spline on [lo, hi] by dense sampling + knots."""
+    grid = np.linspace(lo, hi, samples)
+    grid = np.concatenate([grid, sp.x[(sp.x >= lo) & (sp.x <= hi)]])
+    vals = sp(grid)
+    i = int(np.argmax(vals))
+    return float(grid[i]), float(vals[i])

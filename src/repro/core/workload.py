@@ -1,0 +1,113 @@
+"""Analytical workload model: FLOPs and memory per sample for a ModelConfig.
+
+Used by (a) the analytical device runner that simulates the paper's GPU
+clusters, (b) Algorithm 1's linear memory estimation step, and (c) the
+MODEL_FLOPS = 6·N·D sanity term of the roofline analysis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+BF16 = 2
+F32 = 4
+
+
+def train_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    """6·N_active per token + quadratic attention term (fwd+bwd)."""
+    base = 6.0 * cfg.active_params
+    # attention scores+values: fwd 2 * 2 * S * hd per head-token, x3 for bwd
+    n_attn_layers = sum(1 for k in cfg.blocks()
+                        if k in ("attn", "moe", "shared_attn"))
+    hd = cfg.resolved_head_dim
+    attn = 12.0 * n_attn_layers * cfg.n_heads * hd * seq_len
+    return base + attn
+
+
+def fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    return train_flops_per_token(cfg, seq_len) / 3.0
+
+
+@dataclass
+class MemoryModel:
+    """ZeRO-stage-aware per-device memory model (DeepSpeed mixed precision).
+
+    model-state bytes: params 2P, grads 2P, optimizer 12P (fp32 master +
+    Adam mu/nu); partitioned per stage over the n data-parallel workers.
+    Activation bytes scale linearly in batch — exactly the linearity that
+    Algorithm 1's first phase exploits.
+    """
+    cfg: ModelConfig
+    seq_len: int
+    zero_stage: int = 0
+    n_workers: int = 1
+    remat: bool = True
+    framework_overhead_gb: float = 0.9  # CUDA/XLA context etc.
+
+    def model_state_bytes(self) -> float:
+        P = float(self.cfg.total_params)
+        n = max(self.n_workers, 1)
+        params, grads, opt = 2 * P, 2 * P, 12 * P
+        if self.zero_stage >= 1:
+            opt /= n
+        if self.zero_stage >= 2:
+            grads /= n
+        if self.zero_stage >= 3:
+            params /= n
+        return params + grads + opt
+
+    def activation_bytes_per_sample(self) -> float:
+        c = self.cfg
+        # per-layer resident activations; remat keeps ~2 tensors per layer,
+        # otherwise ~14 (qkv, scores stats, mlp hidden, ...)
+        per_layer = (2 if self.remat else 14) * self.seq_len * c.d_model * BF16
+        act = per_layer * c.n_layers
+        if c.moe is not None:
+            # dispatched expert buffers ~ top_k/capacity overhead
+            act += (2 * self.seq_len * c.d_model * BF16
+                    * c.moe.top_k * (1.25 if self.remat else 3.0))
+        # logits + CE in fp32 for one microbatch
+        act += self.seq_len * c.vocab_size * (BF16 + F32) * 0.25  # chunked CE
+        return act
+
+    def bytes_at_batch(self, batch: int) -> float:
+        return (self.model_state_bytes()
+                + batch * self.activation_bytes_per_sample()
+                + self.framework_overhead_gb * 1e9)
+
+    def max_batch(self, mem_gb: float) -> int:
+        free = mem_gb * 1e9 - self.model_state_bytes() - self.framework_overhead_gb * 1e9
+        if free <= 0:
+            return 0
+        return int(free // self.activation_bytes_per_sample())
+
+
+def comm_time_per_microstep(cfg: ModelConfig, zero_stage: int, n: int,
+                            link_gbps: float,
+                            alpha_s: float = 25e-6) -> float:
+    """Collective seconds per micro-step (the `time_communication` of
+    Algorithm 2): alpha-beta model — ring bandwidth term
+    2(n-1)/n * bytes / bw plus per-hop latency alpha * (n-1) per collective
+    *per layer* (ZeRO-3 launches one all-gather per layer, paper appendix).
+    The latency term is what makes adding devices eventually unprofitable
+    (the paper's V4A4 < V4A3 observation in ZeRO-3).
+
+    stage 0/1: one all-reduce of bf16 grads per *iteration* (amortized by
+    the caller over accumulation steps); stage 2: reduce-scatter per
+    micro-step backward; stage 3: 2x all-gather + reduce-scatter per
+    micro-step.
+    """
+    P = float(cfg.total_params)
+    bw = link_gbps * 1e9
+    ring = 2.0 * (n - 1) / max(n, 1)
+    hop_lat = alpha_s * (n - 1)
+    allreduce = ring * (2 * P) / bw + hop_lat  # = RS + AG of bf16 grads
+    gather = ring / 2.0 * (2 * P) / bw         # one AG (or RS) of bf16 params
+    if zero_stage <= 1:
+        return allreduce                       # per iteration
+    if zero_stage == 2:
+        # RS per micro-step: layer-wise launches during backward
+        return gather + hop_lat * cfg.n_layers
+    # AG fwd + AG bwd + RS grads, each launched per layer
+    return 3.0 * (gather + hop_lat * cfg.n_layers)

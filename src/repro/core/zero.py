@@ -1,0 +1,162 @@
+"""ZeRO stages 0–3 as JAX shardings + train/serve step builders.
+
+Mapping (DESIGN.md §3):
+  stage 0 — params & optimizer replicated over data axes; grads all-reduced.
+  stage 1 — optimizer state sharded over data axes; params replicated;
+            the post-update parameter cast re-gathers (AG) the params.
+  stage 2 — stage 1 + gradients reduce-scattered (sharding constraint on
+            the grad tree keeps them partitioned through the update).
+  stage 3 — parameters themselves sharded (FSDP); XLA SPMD inserts the
+            per-use all-gathers in forward and backward.
+
+All of it composes with tensor parallelism on the `model` axis and the
+hierarchical-ZeRO (`hierarchical_params`) pod-local variant via MeshRules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.sharding import MeshRules, use_rules
+from repro.models import model as mm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def param_specs(rules: MeshRules, axes_tree) -> Any:
+    """PartitionSpec tree for the parameters at the configured stage."""
+    shard_params = rules.zero_stage >= 3
+    return jax.tree.map(
+        lambda ax: None,  # placeholder, replaced below with shapes
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def specs_for(rules: MeshRules, values_tree, axes_tree, *, zero_sharded: bool):
+    def leaf(v, ax):
+        return rules.param_spec(v.shape, ax, zero_sharded=zero_sharded)
+    return jax.tree.map(leaf, values_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def model_shardings(rules: MeshRules, params, axes
+                    ) -> Tuple[Any, Any, Any]:
+    """(param_specs, opt_specs, grad_specs) for the rules' ZeRO stage."""
+    stage = rules.zero_stage
+    p_specs = specs_for(rules, params, axes, zero_sharded=stage >= 3)
+    o_leaf = specs_for(rules, params, axes, zero_sharded=stage >= 1)
+    opt_specs = {"mu": o_leaf, "nu": o_leaf, "master": o_leaf, "count": P()}
+    g_specs = specs_for(rules, params, axes, zero_sharded=stage >= 2)
+    return p_specs, opt_specs, g_specs
+
+
+def batch_spec(rules: MeshRules, batch_shapes: Dict[str, Tuple[int, ...]]
+               ) -> Dict[str, P]:
+    out = {}
+    for k, shp in batch_shapes.items():
+        out[k] = rules.activation_spec(
+            ("batch",) + (None,) * (len(shp) - 1), shp)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    adamw_cfg: AdamWConfig = AdamWConfig(),
+                    lr: float = 3e-4, window: Optional[int] = None,
+                    impl: str = "reference",
+                    accum_steps: int = 1) -> Callable:
+    """Build the (unjitted) train step; callers jit with the spec trees
+    from `model_shardings`.
+
+    ``accum_steps > 1``: batch arrives as (gas, B, S) stacked micro-batches
+    with per-microbatch loss masks — the SPMD realization of Poplar's
+    gmbs/lbs schedule (uneven per-device accumulation becomes masked rows;
+    see core/hetero.py).
+    """
+    stage = rules.zero_stage
+
+    def loss_of(params, batch):
+        return mm.loss_fn(params, cfg, batch, window=window, impl=impl)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            if accum_steps == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, batch)
+                tokens = metrics["tokens"]
+            else:
+                def micro(carry, mb):
+                    g_acc, l_acc, t_acc = carry
+                    (l, met), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, mb)
+                    w = met["tokens"]
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) * w, g_acc, g)
+                    return (g_acc, l_acc + l * w, t_acc + w), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, lsum, tokens), _ = jax.lax.scan(
+                    micro, (g0, jnp.zeros(()), jnp.zeros(())), batch)
+                denom = jnp.maximum(tokens, 1.0)
+                grads = jax.tree.map(lambda g: g / denom, grads)
+                loss = lsum / denom
+                metrics = {"loss": loss, "aux": jnp.zeros(()),
+                           "tokens": tokens}
+            if stage >= 2:
+                # reduce-scatter semantics: keep grads partitioned
+                _, _, g_specs = model_shardings(rules, params,
+                                                _axes_of(params, rules))
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g, rules.sharding(s)), grads, g_specs)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                                   lr, adamw_cfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+# grads sharding needs the axes tree; thread it via attribute to avoid
+# re-deriving inside the traced function.
+_AXES_CACHE: Dict[int, Any] = {}
+
+
+def _axes_of(params, rules):
+    key = id(rules)
+    if key not in _AXES_CACHE:
+        raise RuntimeError("call register_axes(rules, axes) before tracing")
+    return _AXES_CACHE[key]
+
+
+def register_axes(rules: MeshRules, axes) -> None:
+    _AXES_CACHE[id(rules)] = axes
+
+
+def make_prefill_step(cfg: ModelConfig, rules: MeshRules,
+                      window: Optional[int] = None, impl: str = "reference"
+                      ) -> Callable:
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return mm.prefill(params, cfg, batch, window=window, impl=impl)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: MeshRules,
+                     window: Optional[int] = None) -> Callable:
+    def serve_step(params, tokens, state):
+        with use_rules(rules):
+            return mm.decode_step(params, cfg, tokens, state, window=window)
+    return serve_step

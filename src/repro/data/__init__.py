@@ -1,0 +1,5 @@
+from repro.data.pipeline import (ByteTokenizer, HeteroDataLoader,
+                                 SyntheticTokens, TextFileTokens)
+
+__all__ = ["ByteTokenizer", "HeteroDataLoader", "SyntheticTokens",
+           "TextFileTokens"]

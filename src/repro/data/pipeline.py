@@ -1,0 +1,109 @@
+"""Data pipeline: token sources + the heterogeneous dynamic-batch loader.
+
+The paper modifies the data loader to honour per-device ``gmbs``/``lbs``
+(dynamic micro-batch sizes with a partial last accumulation step). Our
+:class:`HeteroDataLoader` does exactly that on top of any token source: it
+emits padded (gas, B_pad, seq) micro-batch stacks whose loss masks encode
+Poplar's allocation (see core/hetero.py for the SPMD layout rationale).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.hetero import HeteroBatchLayout, pack_batch
+
+
+class ByteTokenizer:
+    """Deterministic byte-level tokenizer (vocab 256 + specials)."""
+    PAD, BOS, EOS = 0, 1, 2
+    OFFSET = 3
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + self.OFFSET
+
+    def encode(self, text: str) -> np.ndarray:
+        b = text.encode("utf-8", errors="replace")
+        return np.frombuffer(b, dtype=np.uint8).astype(np.int32) + self.OFFSET
+
+    def decode(self, ids) -> str:
+        ids = np.asarray(ids)
+        ids = ids[ids >= self.OFFSET] - self.OFFSET
+        return bytes(ids.astype(np.uint8)).decode("utf-8", errors="replace")
+
+
+@dataclass
+class SyntheticTokens:
+    """Reproducible synthetic token rows (seq+1 for input/label shift)."""
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+
+    def rows(self, n: int, epoch: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + epoch * 1_000_003)
+        return rng.integers(3, self.vocab_size, (n, self.seq_len + 1),
+                            dtype=np.int32)
+
+    def stream(self, batch_rows: int) -> Iterator[np.ndarray]:
+        epoch = 0
+        while True:
+            yield self.rows(batch_rows, epoch)
+            epoch += 1
+
+
+@dataclass
+class TextFileTokens:
+    """Token rows from a text file via the byte tokenizer (wikitext-style
+    contiguous-chunk language modelling)."""
+    path: str
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._tok = ByteTokenizer()
+        text = Path(self.path).read_text(encoding="utf-8", errors="replace")
+        self._ids = self._tok.encode(text)
+
+    @property
+    def vocab_size(self) -> int:
+        return self._tok.vocab_size
+
+    def rows(self, n: int, epoch: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + epoch)
+        L = self.seq_len + 1
+        max_start = max(len(self._ids) - L, 1)
+        starts = rng.integers(0, max_start, n)
+        return np.stack([self._ids[s:s + L] if s + L <= len(self._ids)
+                         else np.pad(self._ids[s:], (0, s + L - len(self._ids)))
+                         for s in starts]).astype(np.int32)
+
+    def stream(self, batch_rows: int) -> Iterator[np.ndarray]:
+        epoch = 0
+        while True:
+            yield self.rows(batch_rows, epoch)
+            epoch += 1
+
+
+class HeteroDataLoader:
+    """Feeds a Poplar HeteroBatchLayout from a token source."""
+
+    def __init__(self, source, layout: HeteroBatchLayout, seq_len: int):
+        self.source = source
+        self.layout = layout
+        self.seq_len = seq_len
+        self._epoch = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        n = self.layout.total_real()
+        rows = self.source.rows(n, self._epoch)
+        self._epoch += 1
+        return pack_batch(rows, self.layout, self.seq_len)

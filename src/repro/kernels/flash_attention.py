@@ -1,0 +1,132 @@
+"""Blockwise causal flash attention — Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md §6): online-softmax over KV blocks staged
+through VMEM, MXU-aligned tiles (block_q x D and block_k x D, multiples of
+128 at full size), float32 running statistics in VMEM scratch. Grid =
+(batch*heads, num_q_blocks, num_kv_blocks); the innermost (kv) grid dim
+iterates sequentially on TPU so scratch carries (m, l, acc) across KV
+blocks; fully-masked causal/window blocks are skipped via ``pl.when`` —
+the block-skipping the pure-jnp reference cannot do.
+
+Heads arrive GQA-expanded from the wrapper, matching
+``repro.models.layers._chunk_attn_flash`` (the oracle lives in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; absent on CPU-only installs (interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _scratch_shapes(block_q: int, d: int):
+    if _VMEM is not None:
+        return [_VMEM((block_q,), jnp.float32),
+                _VMEM((block_q,), jnp.float32),
+                _VMEM((block_q, d), jnp.float32)]
+    return [jax.ShapeDtypeStruct((block_q,), jnp.float32),
+            jax.ShapeDtypeStruct((block_q,), jnp.float32),
+            jax.ShapeDtypeStruct((block_q, d), jnp.float32)]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: Optional[int], scale: float, num_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    needed = jnp.asarray(True)
+    if causal:  # block fully above the diagonal -> skip
+        needed = jnp.logical_and(needed, k_start <= q_start + block_q - 1)
+    if window is not None:  # block fully left of the window -> skip
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)               # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len                           # unpadded keys only
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q,k,v: (B, H, S, D), H already GQA-expanded. Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    assert k.shape == v.shape == (B, H, S, D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    blk = max(block_q, block_k)
+    pad = (-S) % blk
+    if pad:
+        padcfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, padcfg)
+        k = jnp.pad(k, padcfg)
+        v = jnp.pad(v, padcfg)
+    Sp = q.shape[2]
+    nq, nkv = Sp // block_q, Sp // block_k
+    qf = q.reshape(B * H, Sp, D)
+    kf = k.reshape(B * H, Sp, D)
+    vf = v.reshape(B * H, Sp, D)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        causal=causal, window=window, scale=1.0 / (D ** 0.5), num_kv=nkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=_scratch_shapes(block_q, D),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sp, D)[:, :, :S]

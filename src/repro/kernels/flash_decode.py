@@ -1,0 +1,110 @@
+"""Single-token flash-decode — Pallas TPU kernel (§Perf/P2's hot loop).
+
+One query token attends over a long KV cache: the cache streams through
+VMEM in ``block_k`` tiles with online-softmax running statistics in
+scratch, so HBM traffic is exactly one read of the valid cache prefix.
+Blocks entirely past ``filled`` (the number of valid cache slots) are
+skipped via ``pl.when`` — for a ring buffer that's a no-op (all slots
+valid), for a growing cache it prunes the tail without re-compiling.
+
+Grid = (batch*heads, num_kv_blocks); the kv dim iterates sequentially on
+TPU so scratch carries (m, l, acc). Heads arrive GQA-expanded from the
+wrapper (ops.flash_decode), matching the model's decode path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; absent on CPU-only installs (interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _scratch(d: int):
+    if _VMEM is not None:
+        return [_VMEM((1,), jnp.float32), _VMEM((1,), jnp.float32),
+                _VMEM((1, d), jnp.float32)]
+    return [jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32)]
+
+
+def _decode_kernel(filled_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   block_k: int, scale: float, num_kv: int):
+    ki = pl.program_id(1)
+    filled = filled_ref[0, 0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < filled)
+    def _block():
+        q = q_ref[...].astype(jnp.float32)                 # (1, D)
+        k = k_ref[...].astype(jnp.float32)                 # (block_k, D)
+        v = v_ref[...].astype(jnp.float32)
+        s = (q @ k.T) * scale                              # (1, block_k)
+        pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where((pos < filled)[None, :], s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)                             # (1, block_k)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum()
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[0] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[0], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, filled, *, block_k: int = 512,
+                        interpret: bool = False):
+    """q: (B, H, 1, D); k/v: (B, H, S, D) GQA-expanded cache;
+    filled: scalar int32 — number of valid cache slots. Returns (B,H,1,D)."""
+    B, H, _, D = q.shape
+    S = k.shape[2]
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    Sp = k.shape[2]
+    num_kv = Sp // block_k
+    qf = q.reshape(B * H, 1, D)
+    kf = k.reshape(B * H, Sp, D)
+    vf = v.reshape(B * H, Sp, D)
+    filled_arr = jnp.full((1, 1), filled, jnp.int32)
+    scale = 1.0 / float(D) ** 0.5
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, scale=scale,
+                          num_kv=num_kv),
+        grid=(B * H, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((None, 1, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, D), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        scratch_shapes=_scratch(D),
+        interpret=interpret,
+    )(filled_arr, qf, kf, vf)
+    return out.reshape(B, H, 1, D)

@@ -1,0 +1,120 @@
+"""Mamba2 chunked selective-state scan (SSD) — Pallas TPU kernel.
+
+Grid = (batch, ssm_heads, num_chunks); the innermost chunk dim iterates
+sequentially on TPU, so the (head_dim x state) recurrent state lives in
+VMEM scratch and never touches HBM between chunks. Each step computes the
+within-chunk quadratic term (chunk x chunk decay-weighted scores on the
+MXU) plus the inter-chunk contribution of the carried state — the SSD
+blocked algorithm with the inter-chunk recurrence fused into the same
+kernel instead of a separate associative scan pass (the GPU formulation's
+separate state pass would round-trip states through HBM; on TPU the
+sequential grid + VMEM scratch removes that traffic).
+
+Oracle: repro.kernels.ref.ssd_reference (== models.ssm._ssd_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _scratch(P: int, N: int):
+    if _VMEM is not None:
+        return [_VMEM((P, N), jnp.float32)]
+    return [jax.ShapeDtypeStruct((P, N), jnp.float32)]
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int, seq_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)                  # (chunk, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)                # (chunk,)
+    a = a_ref[0]                                         # () decay rate (neg)
+    bm = b_ref[0].astype(jnp.float32)                    # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)                    # (chunk, N)
+
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    valid = (pos < seq_len).astype(jnp.float32)
+    dt = dt * valid                                      # padded steps: no-op
+
+    logdec = dt * a                                      # (chunk,) negative
+    cum = jnp.cumsum(logdec)                             # within-chunk
+    li = cum[:, None]
+    lj = cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    arg = jnp.where(tri, li - lj, -1e30)
+    dmat = jnp.where(tri, jnp.exp(arg), 0.0)             # (chunk, chunk)
+    sc = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w = sc * dmat
+    xdt = x * dt[:, None]                                # (chunk, P)
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(cum_i) * C_i . S_prev^T  -> (chunk, P)
+    state = state_ref[...]                               # (P, N)
+    y_inter = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, None]
+    o_ref[0, 0] = (y_intra + y_inter).astype(o_ref.dtype)
+    # state update: S' = S * exp(total) + sum_j exp(total - cum_j) xdt_j B_j^T
+    total = cum[chunk - 1]
+    decj = jnp.exp(total - cum)[:, None]                 # (chunk,1)
+    s_new = jax.lax.dot_general(xdt * decj, bm, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(total) + s_new
+
+
+def mamba_scan_pallas(xh, dt, A, Bm, Cm, *, chunk: int = 128,
+                      interpret: bool = False):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H) positive; A: (H,) negative rates;
+    Bm/Cm: (B, S, N). Returns y: (B, S, H, P) (float32 accumulated,
+    cast to xh.dtype).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    # (B, H, S, P) layout so (chunk, P) blocks are contiguous
+    xT = xh.transpose(0, 2, 1, 3)
+    dtT = dt.transpose(0, 2, 1)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, ci: (b, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, P), xh.dtype),
+        scratch_shapes=_scratch(P, N),
+        interpret=interpret,
+    )(xT, dtT, A.astype(jnp.float32), Bm, Cm)
+    return out.transpose(0, 2, 1, 3)[:, :S]

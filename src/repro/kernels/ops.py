@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced Python); on a real TPU backend set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the auto-detect) to compile them
+for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
+    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                          interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba_scan(xh, dt, A, Bm, Cm, *, chunk: int = 128):
+    return mamba_scan_pallas(xh, dt, A, Bm, Cm, chunk=chunk,
+                             interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def flash_decode(q, k, v, filled, *, block_k: int = 512):
+    """Single-token decode attention over a GQA-expanded cache."""
+    return flash_decode_pallas(q, k, v, filled, block_k=block_k,
+                               interpret=_interpret_default())

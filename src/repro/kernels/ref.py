@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """Naive O(S^2) softmax attention. q,k,v: (B,H,S,D)."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_reference(q, k, v, filled):
+    """Single-query attention over a cache prefix. q: (B,H,1,D);
+    k/v: (B,H,S,D); filled: scalar — valid slots."""
+    D = q.shape[-1]
+    S = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D)
+    valid = jnp.arange(S)[None, None, None, :] < filled
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rmsnorm_reference(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_reference(xh, dt, A, Bm, Cm):
+    """Sequential (non-chunked) selective-state scan — the ground truth.
+
+    xh: (B,S,H,P); dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,N).
+    y_t = C_t . S_t + 0,   S_t = exp(dt_t*A) S_{t-1} + dt_t * x_t B_t^T
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a_t = jnp.exp(dt_t * A)                           # (B,H)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", x_t.astype(jnp.float32),
+                         b_t.astype(jnp.float32), dt_t)
+        state = state * a_t[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_t.astype(jnp.float32), state)
+        return state, y
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (xh.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(xh.dtype)             # (B,S,H,P)

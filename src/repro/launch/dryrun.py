@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the real step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct inputs on 512 placeholder host devices, then records:
+
+  - memory_analysis()  (per-device bytes: does it fit a v5e's 16 GB HBM?)
+  - cost_analysis()    (HLO FLOPs / bytes for the roofline terms)
+  - collective bytes   (parsed from the optimized HLO: all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, applicable, get_config, get_shape, SHAPES
+from repro.core.sharding import MeshRules
+from repro.core.zero import make_train_step, make_prefill_step, make_decode_step, register_axes
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shape(txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-operand bytes of every collective op, by kind.
+
+    These are per-participant shard sizes in the SPMD-partitioned module —
+    i.e. bytes each device injects into the interconnect per step."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, rhs = ls.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^([a-z0-9\[\],\{\}\s]+?)\s*([a-z\-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                per_kind[kind] += _bytes_of_shape(m.group(1))
+                count[kind] += 1
+    return per_kind, count
+
+
+def build_step(cfg, rules, shape):
+    """Returns (fn, example_args, in_shardings)."""
+    window = SP.effective_window(cfg, shape)
+    if shape.mode == "train":
+        p_shapes, axes, p_specs, o_shapes, opt_specs, _ = (
+            SP.params_and_shardings(cfg, rules, with_opt=True))
+        register_axes(rules, axes)
+        batch = SP.batch_specs(cfg, shape)
+        b_specs = SP.batch_spec_tree(rules, batch)
+        fn = make_train_step(cfg, rules, window=window)
+        args = (p_shapes, o_shapes, batch)
+        in_sh = (jax.tree.map(rules.sharding, p_specs),
+                 jax.tree.map(rules.sharding, opt_specs),
+                 jax.tree.map(rules.sharding, b_specs))
+        return fn, args, in_sh
+    if shape.mode == "prefill":
+        p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
+            cfg, rules, with_opt=False)
+        batch = SP.batch_specs(cfg, shape)
+        b_specs = SP.batch_spec_tree(rules, batch)
+        fn = make_prefill_step(cfg, rules, window=window)
+        args = (p_shapes, batch)
+        in_sh = (jax.tree.map(rules.sharding, p_specs),
+                 jax.tree.map(rules.sharding, b_specs))
+        return fn, args, in_sh
+    # decode
+    p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
+        cfg, rules, with_opt=False)
+    state_shapes, state_specs = SP.decode_state_specs(cfg, rules, shape)
+    tokens = SP.SDS((shape.global_batch, 1), jnp.int32)
+    tok_spec = rules.activation_spec(("batch", None), tokens.shape)
+    fn = make_decode_step(cfg, rules, window=window)
+    args = (p_shapes, tokens, state_shapes)
+    in_sh = (jax.tree.map(rules.sharding, p_specs),
+             rules.sharding(tok_spec),
+             jax.tree.map(rules.sharding, state_specs))
+    return fn, args, in_sh
+
+
+_COST_CACHE = {}
+
+
+def cost_pass(arch: str, shape_name: str, cfg_override=None, tag: str = ""):
+    """Mesh-independent FLOP/byte counting on a single device.
+
+    XLA's cost_analysis() counts while-loop bodies ONCE (not x trip count),
+    so the production scan-over-layers module under-reports totals by
+    ~n_layers. This pass lowers an *unrolled* variant instead:
+
+      flops_unrolled — layers unrolled + one-shot einsum attention
+        (mathematically the same FLOPs as the chunked path; never executed,
+        only lowered) + no remat => true algorithmic FLOPs.
+      bytes_unrolled — layers unrolled + chunked attention + the config's
+        remat policy => HBM-traffic estimate (attention inner-loop bytes
+        still counted once per layer; see EXPERIMENTS.md caveats).
+    """
+    from dataclasses import replace as _replace
+    key = (arch, shape_name, tag)
+    if key in _COST_CACHE:
+        return _COST_CACHE[key]
+    from repro.models import model as mm
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = get_shape(shape_name)
+    window = SP.effective_window(cfg, shape)
+    out = {}
+
+    def _flops_of(fn, *args):
+        return jax.jit(fn).lower(*args).cost_analysis()
+
+    # params shapes without any mesh
+    def initv(k):
+        p, a = mm.init_model(k, cfg)
+        return p
+
+    p_shapes = jax.eval_shape(initv, jax.random.PRNGKey(0))
+
+    if shape.mode == "train":
+        batch = SP.batch_specs(cfg, shape)
+        cfg_nr = _replace(cfg, remat=False)
+
+        def fwd_bwd_naive(params, batch):
+            def loss(p):
+                return mm.loss_fn(p, cfg_nr, batch, window=window,
+                                  impl="naive", unroll=True)[0]
+            return jax.value_and_grad(loss)(params)
+
+        def fwd_bwd_chunk(params, batch):
+            def loss(p):
+                return mm.loss_fn(p, cfg, batch, window=window,
+                                  unroll=True)[0]
+            return jax.value_and_grad(loss)(params)
+
+        ca_f = _flops_of(fwd_bwd_naive, p_shapes, batch)
+        ca_b = _flops_of(fwd_bwd_chunk, p_shapes, batch)
+    elif shape.mode == "prefill":
+        batch = SP.batch_specs(cfg, shape)
+        ca_f = _flops_of(
+            lambda p, b: mm.prefill(p, _replace(cfg, remat=False), b,
+                                    window=window, impl="naive", unroll=True),
+            p_shapes, batch)
+        ca_b = _flops_of(
+            lambda p, b: mm.prefill(p, cfg, b, window=window, unroll=True),
+            p_shapes, batch)
+    else:  # decode: no inner chunk scans; one unrolled pass serves both
+        from repro.core.sharding import MeshRules
+        cache_len = min(shape.seq_len, window) if window else shape.seq_len
+
+        def build_state():
+            enc = None
+            if cfg.encoder_layers:
+                enc = jnp.zeros((shape.global_batch,
+                                 shape.seq_len // cfg.encoder_frame_ratio,
+                                 cfg.d_model), jnp.bfloat16)
+            return mm.init_decode_state(cfg, shape.global_batch, cache_len,
+                                        enc_out=enc)
+
+        state_shapes = jax.eval_shape(build_state)
+        toks = SP.SDS((shape.global_batch, 1), jnp.int32)
+        ca_f = _flops_of(
+            lambda p, t, s: mm.decode_step(p, cfg, t, s, window=window,
+                                           unroll=True),
+            p_shapes, toks, state_shapes)
+        ca_b = ca_f
+    out["flops_unrolled"] = ca_f.get("flops", 0.0)
+    out["bytes_unrolled"] = ca_b.get("bytes accessed", 0.0)
+    _COST_CACHE[key] = out
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               zero_stage=None, hierarchical=False, verbose=True,
+               variant: str = ""):
+    from repro.launch.variants import get_variant
+    var = get_variant(variant)
+    cfg = var.cfg_fn(get_config(arch))
+    shape = get_shape(shape_name)
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules_kw = dict(var.rules_kw)
+    if hierarchical:
+        rules_kw["hierarchical_params"] = True
+    stage = rules_kw.pop("zero_stage",
+                         zero_stage if zero_stage is not None
+                         else cfg.zero_stage)
+    rules = MeshRules(mesh, zero_stage=stage, **rules_kw)
+    t0 = time.time()
+    with mesh:
+        fn, args, in_sh = build_step(cfg, rules, shape)
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll, coll_n = collective_bytes(hlo)
+    try:
+        unrolled = cost_pass(arch, shape_name, cfg_override=cfg, tag=variant)
+    except Exception as e:  # noqa: BLE001 — cost pass is best-effort
+        unrolled = {"cost_pass_error": f"{type(e).__name__}: {e}"}
+    res = {
+        "arch": arch, "shape": shape_name,
+        "variant": variant or "base",
+        # global algorithmic FLOPs/bytes (unrolled single-device lowering;
+        # scan bodies fully counted) — the roofline's compute/memory inputs:
+        **unrolled,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "zero_stage": rules.zero_stage,
+        "hierarchical_params": hierarchical,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # per-device numbers from the compiled SPMD module. CAVEAT: XLA
+        # counts while-loop (scan-over-layers) bodies ONCE, so these
+        # under-report by ~n_layers; kept for reference only.
+        "flops_per_device_compiled": (cost or {}).get("flops", 0.0),
+        "bytes_per_device_compiled": (cost or {}).get("bytes accessed", 0.0),
+        "collective_bytes": coll, "collective_counts": coll_n,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                res[attr] = int(v)
+    if verbose:
+        print(json.dumps(res, indent=None, default=str))
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--zero", type=int, default=None)
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="hierarchical ZeRO: params shard within pod only")
+    ap.add_argument("--variant", default="",
+                    help="named optimization variant (see launch/variants.py)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    combos = []
+    archs = ASSIGNED_ARCHS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = ([False, True] if args.both_meshes
+              else [bool(args.multi_pod)])
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in combos:
+        tag = f"{a}_{s}_{'pod2' if mp else 'pod1'}"
+        if args.hierarchical:
+            tag += "_hpz"
+        if args.variant:
+            tag += f"_{args.variant}"
+        fp = outdir / f"{tag}.json"
+        try:
+            res = dryrun_one(a, s, mp, args.zero, args.hierarchical,
+                             variant=args.variant)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {"arch": a, "shape": s, "multi_pod": mp,
+                   "error": f"{type(e).__name__}: {e}"}
+            failures.append(tag)
+            print(f"FAIL {tag}: {res['error']}", file=sys.stderr)
+        fp.write_text(json.dumps(res, indent=2, default=str))
+    if failures:
+        print(f"{len(failures)} failures: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print(f"all {len(combos)} dry-runs OK -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

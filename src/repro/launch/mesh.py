@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is both the cross-pod data-parallel axis and Poplar's
+heterogeneity unit (each pod may be a different TPU generation; the
+planner assigns uneven per-pod batch shares, DESIGN.md §2).
+
+Functions, not module constants: importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1, model: int = 1):
+    """Tiny mesh over the locally available devices (tests/examples)."""
+    data = max(n_devices // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axis_size(mesh) -> int:
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            size *= mesh.shape[a]
+    return size

@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct input specs + sharding trees for every
+(architecture x input shape) combination — the shared substrate of the
+dry-run, the benchmarks and the real launcher.
+
+No device allocation happens here: params/opt/caches come from
+``jax.eval_shape`` and inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.core.sharding import MeshRules, use_rules
+from repro.core.zero import model_shardings
+from repro.models import model as mm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """long_500k on attention archs runs the sliding-window variant."""
+    if shape.name == "long_500k" and cfg.long_context_variant_window:
+        return cfg.long_context_variant_window
+    return cfg.sliding_window
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, accum: int = 0
+                ) -> Dict[str, SDS]:
+    """Training/prefill batch ShapeDtypeStructs. ``accum>0`` prepends the
+    gradient-accumulation axis (Poplar gmbs/lbs layout)."""
+    B, S = shape.global_batch, shape.seq_len
+    lead = (accum,) if accum else ()
+    out = {
+        "tokens": SDS(lead + (B, S), jnp.int32),
+        "labels": SDS(lead + (B, S), jnp.int32),
+        "loss_mask": SDS(lead + (B, S), jnp.float32),
+    }
+    if cfg.encoder_layers:
+        out["frames"] = SDS(lead + (B, S // cfg.encoder_frame_ratio,
+                                    cfg.d_model), jnp.bfloat16)
+    if cfg.num_image_tokens:
+        out["image_embeds"] = SDS(lead + (B, cfg.num_image_tokens,
+                                          cfg.frontend_dim), jnp.bfloat16)
+    if shape.mode == "prefill":
+        out.pop("labels")
+        out.pop("loss_mask")
+    return out
+
+
+def batch_spec_tree(rules: MeshRules, batch: Dict[str, SDS], *,
+                    accum: int = 0) -> Dict[str, P]:
+    out = {}
+    for k, v in batch.items():
+        lead = (None,) if accum else ()
+        logical = lead + ("batch",) + (None,) * (v.ndim - len(lead) - 1)
+        out[k] = rules.activation_spec(logical, v.shape)
+    return out
+
+
+def params_and_shardings(cfg: ModelConfig, rules: MeshRules,
+                         with_opt: bool = True):
+    """eval_shape the params (+ opt state) and derive their spec trees."""
+    axes_box = {}
+
+    def init_values_only(key):
+        params, axes = mm.init_model(key, cfg)
+        axes_box["axes"] = axes   # static; captured during the single trace
+        return params
+
+    p_shapes = jax.eval_shape(init_values_only, jax.random.PRNGKey(0))
+    axes = axes_box["axes"]
+    p_specs, opt_specs, g_specs = model_shardings(rules, p_shapes, axes)
+    if not with_opt:
+        return p_shapes, axes, p_specs, None, None, g_specs
+    from repro.optim.adamw import adamw_init
+    o_shapes = jax.eval_shape(adamw_init, p_shapes)
+    return p_shapes, axes, p_specs, o_shapes, opt_specs, g_specs
+
+
+def decode_state_specs(cfg: ModelConfig, rules: MeshRules,
+                       shape: InputShape):
+    """(state ShapeDtypeStruct tree, spec tree) for serve_step."""
+    window = effective_window(cfg, shape)
+    cache_len = min(shape.seq_len, window) if window else shape.seq_len
+
+    def build():
+        enc = None
+        if cfg.encoder_layers:
+            enc = jnp.zeros((shape.global_batch,
+                             shape.seq_len // cfg.encoder_frame_ratio,
+                             cfg.d_model), jnp.bfloat16)
+        return mm.init_decode_state(cfg, shape.global_batch, cache_len,
+                                    enc_out=enc)
+
+    with use_rules(rules):
+        state_shapes = jax.eval_shape(build)
+        axes = mm.decode_state_axes(cfg, state_shapes)
+
+    def to_spec(leaf_shape, ax):
+        return rules.activation_spec(ax, leaf_shape.shape)
+
+    spec_tree = jax.tree.map(
+        lambda v, ax: to_spec(v, ax), state_shapes, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return state_shapes, spec_tree

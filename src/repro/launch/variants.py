@@ -1,0 +1,101 @@
+"""Named optimization variants for the dry-run / §Perf hillclimb.
+
+A variant is (config transform, MeshRules overrides). The empty variant
+is the paper-faithful baseline; every other entry is a beyond-paper
+optimization recorded separately in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+
+def _moe_group(g: int) -> Callable[[ModelConfig], ModelConfig]:
+    def f(cfg: ModelConfig) -> ModelConfig:
+        if cfg.moe is None:
+            return cfg
+        return replace(cfg, moe=replace(cfg.moe, group_size=g))
+    return f
+
+
+def _remat(on: bool) -> Callable[[ModelConfig], ModelConfig]:
+    return lambda cfg: replace(cfg, remat=on)
+
+
+class Variant:
+    def __init__(self, cfg_fn: Optional[Callable] = None,
+                 rules_kw: Optional[Dict] = None, note: str = ""):
+        self.cfg_fn = cfg_fn or (lambda c: c)
+        self.rules_kw = rules_kw or {}
+        self.note = note
+
+
+def _moe_impl(impl: str) -> Callable[[ModelConfig], ModelConfig]:
+    def f(cfg: ModelConfig) -> ModelConfig:
+        if cfg.moe is None:
+            return cfg
+        return replace(cfg, moe=replace(cfg.moe, impl=impl))
+    return f
+
+
+VARIANTS: Dict[str, Variant] = {
+    # §Perf/P1 — grouped MoE routing: dispatch capacity per g-token group
+    "moe_g4096": Variant(_moe_group(4096), note="grouped MoE dispatch, g=4096"),
+    "moe_g1024": Variant(_moe_group(1024), note="grouped MoE dispatch, g=1024"),
+    "moe_g256": Variant(_moe_group(256), note="grouped MoE dispatch, g=256"),
+    # §Perf/P1 iter 2 — dropless sorted dispatch via lax.ragged_dot
+    "moe_ragged": Variant(_moe_impl("ragged"),
+                          note="dropless ragged_dot dispatch"),
+    # §Perf/P1 iter 4 — explicit all_to_all expert parallelism. The
+    # shard_map path derives capacity from the per-shard token count, so
+    # it inherits the grouped-capacity win; group_size=2048 makes the
+    # mesh-less cost-pass proxy match the per-shard capacity at S=32k.
+    "moe_a2a": Variant(
+        lambda c: (c if c.moe is None else replace(
+            c, moe=replace(c.moe, impl="a2a", group_size=2048))),
+        note="shard_map all_to_all expert parallelism"),
+    # §Perf/P1 iter 3 — grouped dispatch + bf16 combine tensor
+    "moe_g1024_bf16": Variant(
+        lambda c: (c if c.moe is None else replace(
+            c, moe=replace(c.moe, group_size=1024,
+                           combine_dtype="bfloat16"))),
+        note="g=1024 + bf16 combine"),
+    # §Perf/P3 — hierarchical ZeRO (ZeRO++ hpZ): params shard within pod
+    "hpz": Variant(rules_kw=dict(hierarchical_params=True),
+                   note="pod-local param shards; cross-pod grads only"),
+    # §Perf/P2 follow-up — fp8 KV cache: halves decode cache reads
+    "kv_fp8": Variant(lambda c: replace(c, kv_cache_dtype="float8_e4m3fn"),
+                      note="fp8 KV cache storage"),
+    # §Perf/P2 — serving sharding: params replicated over the data axis
+    # (TP only). ZeRO-3's data-axis param shards force a full param
+    # all-gather per decoded token; inference has no optimizer so the
+    # shards buy nothing. zero_stage=0 at serve time removes the gather.
+    "serve_z0": Variant(rules_kw=dict(zero_stage=0),
+                        note="decode/prefill with data-replicated params"),
+    # remat policy sweep (memory-term lever)
+    "remat_off": Variant(_remat(False), note="no activation checkpointing"),
+    # §Perf/P3 — mLSTM chunk sweep: (B,Q,Q,H) intermediates scale ~S*Q
+    "mlstm_c128": Variant(lambda c: replace(c, mlstm_chunk=128),
+                          note="mLSTM chunk 256 -> 128"),
+    "mlstm_c64": Variant(lambda c: replace(c, mlstm_chunk=64),
+                         note="mLSTM chunk 256 -> 64"),
+    # §Perf/P3 — pure data parallelism: no TP, ZeRO over data x model.
+    # For attention-free archs (xLSTM) whose small head count wastes the
+    # model axis and forces per-chunk cotangent all-gathers.
+    "dp_only": Variant(rules_kw=dict(dp_only=True),
+                       note="no TP; batch and ZeRO over (data, model)"),
+    # §Perf/P3 — combined best-known xLSTM config
+    "xlstm_opt": Variant(lambda c: replace(c, mlstm_chunk=128),
+                         rules_kw=dict(dp_only=True),
+                         note="dp_only + mLSTM chunk 128"),
+}
+
+
+def get_variant(name: Optional[str]) -> Variant:
+    if not name:
+        return Variant()
+    if name not in VARIANTS:
+        raise KeyError(f"unknown variant {name!r}; known: {sorted(VARIANTS)}")
+    return VARIANTS[name]

@@ -1,0 +1,380 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (chunked
+online-softmax for long sequences, KV-cache decode, optional sliding
+window), SwiGLU MLP, embeddings.
+
+Everything is pure jnp + logical-axis sharding constraints. The chunked
+attention here is the *reference* implementation (linear memory, flash-style
+two-level scan); the Pallas TPU kernel in ``repro.kernels`` is numerically
+checked against it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import constrain, current_rules
+from repro.models.param import Annotated, dense_init, ones_init
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d_model: int, dtype=jnp.bfloat16):
+    return {"scale": ones_init((d_model,), ("embed",), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5, impl: str = "reference"):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, params["scale"], eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, D); positions: (S,) or broadcastable to x[..., :, 0]."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, hq, hd), ("embed", "heads", None), dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), ("embed", "kv_heads", None), dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), ("embed", "kv_heads", None), dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), ("heads", None, "embed"), dtype),
+    }
+
+
+def _expand_kv(k: jnp.ndarray, n_rep: int, head_axis: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=head_axis)
+
+
+def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
+                      q_offset: int = 0, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Two-level online-softmax attention. q: (B,H,Sq,D), k/v: (B,H,Skv,D).
+
+    Linear memory in sequence length; computes the full rectangle of blocks
+    (masked) — block skipping is a hillclimb item for the Pallas kernel.
+    """
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad to multiples
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0))) if pad_kv else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0))) if pad_kv else v
+    nq, nkv = qp.shape[2] // q_chunk, kp.shape[2] // kv_chunk
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qb = qp.reshape(B, H, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)    # (nq,B,H,qc,D)
+    kb = kp.reshape(B, H, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)  # (nkv,...)
+    vb = vp.reshape(B, H, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qpos = q_offset + qi * q_chunk + q_pos_base          # (qc,)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            kpos = ki * kv_chunk + kv_pos_base               # (kc,)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = (kpos[None, :] <= Skv - 1)                # valid (unpadded) keys
+            mask = mask & (qpos[:, None] >= 0)
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            corr = jnp.where(jnp.isinf(m), 0.0, corr)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((B, H, q_chunk), jnp.float32),
+                jnp.zeros((B, H, q_chunk, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))  # (nq,B,H,qc,D)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, nq * q_chunk, D)
+    return out[:, :, :Sq]
+
+
+def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
+                    window: Optional[int] = None, impl: str = "reference",
+                    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Full-sequence attention (train / prefill).
+
+    x: (B, S, d_model). ``kv_override`` supplies external K/V inputs
+    (cross-attention): tuple of (B, S_kv, d_model) source hidden states is
+    projected by wk/wv.
+    """
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(x.dtype))
+    src = kv_override[0] if kv_override is not None else x
+    k = jnp.einsum("bsd,dhk->bhsk", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", src, params["wv"].astype(x.dtype))
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv_override is None:  # self-attention: rotate both
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "heads", None, None))
+    k = _expand_kv(k, hq // hkv, head_axis=1)
+    v = _expand_kv(v, hq // hkv, head_axis=1)
+    k = constrain(k, ("batch", "heads", None, None))
+    v = constrain(v, ("batch", "heads", None, None))
+    causal = (mask_mode == "causal") and kv_override is None
+    if impl == "pallas" and causal and q.shape == k.shape:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    elif impl == "naive":
+        # one-shot einsum attention: used ONLY by the dry-run cost pass
+        # (XLA cost_analysis does not multiply loop bodies by trip count,
+        # so the chunked-scan path under-reports FLOPs). O(S^2) memory —
+        # never executed, only lowered for counting.
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) / jnp.sqrt(
+                           q.shape[-1]).astype(jnp.float32)
+        qpos = jnp.arange(q.shape[2])[:, None]
+        kpos = jnp.arange(k.shape[2])[None, :]
+        mask = jnp.ones(s.shape[-2:], bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    else:
+        out = _chunk_attn_flash(q, k, v, causal=causal, window=window)
+    out = constrain(out, ("batch", "heads", None, None))
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(y, ("batch", None, "embed"))
+
+
+# ----------------------------- decode path --------------------------------
+
+def kv_cache_axes(cfg) -> Tuple:
+    """Cache layout (B, S, Hkv, D): shard heads on 'model' when divisible,
+    otherwise shard the cache sequence dim (context-parallel decode)."""
+    rules = current_rules()
+    if rules is not None and "model" in rules.mesh.shape:
+        if cfg.n_kv_heads % rules.mesh.shape["model"] == 0:
+            return ("batch", None, "kv_heads", None)
+        return ("batch", "kv_seq", None, None)
+    return ("batch", None, "kv_heads", None)
+
+
+def attention_init_cache(cfg, batch: int, max_len: int, dtype=None):
+    if dtype is None:
+        dtype = jnp.dtype(getattr(cfg, "kv_cache_dtype", None) or cfg.dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+    }
+
+
+def _decode_attn_kvseq_sharded(rules, q, k_tok, v_tok, cache, slot, filled,
+                               n_rep: int):
+    """Distributed flash-decode over a sequence-sharded KV cache (§Perf/P2).
+
+    Each `model`-axis shard holds S/n contiguous cache slots. The new
+    token is written into whichever shard owns `slot`; every shard then
+    computes partial attention over its local slice and the shards
+    combine with a max-stabilized log-sum-exp psum. Per-layer collective
+    traffic becomes O(B*Hq*D) f32 (the numerator/denominator psum)
+    instead of the O(B*S*Hkv*D) cache all-gather XLA emits for a plain
+    softmax over a sharded axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    shard_map = jax.shard_map
+    mesh = rules.mesh
+    B, Hq, _, D = q.shape
+    S = cache["k"].shape[1]
+    n = mesh.shape["model"]
+    S_loc = S // n
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    bspec = rules.activation_spec(
+        ("batch", None, None, None), cache["k"].shape)[0]
+
+    def local_fn(qb, kt, vt, kc, vc, slot_, filled_):
+        idx = jax.lax.axis_index("model")
+        off = idx * S_loc
+        lslot = slot_ - off
+        in_range = (lslot >= 0) & (lslot < S_loc)
+        lclamp = jnp.clip(lslot, 0, S_loc - 1)
+        kc2 = jax.lax.dynamic_update_slice(
+            kc, kt.astype(kc.dtype), (0, lclamp, 0, 0))
+        vc2 = jax.lax.dynamic_update_slice(
+            vc, vt.astype(vc.dtype), (0, lclamp, 0, 0))
+        kc2 = jnp.where(in_range, kc2, kc)
+        vc2 = jnp.where(in_range, vc2, vc)
+        kk = _expand_kv(kc2.astype(qb.dtype), n_rep, head_axis=2)
+        vv = _expand_kv(vc2.astype(qb.dtype), n_rep, head_axis=2)
+        s = jnp.einsum("bhqd,bshd->bhqs", qb, kk,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (off + jnp.arange(S_loc))[None, None, None, :] < filled_
+        s = jnp.where(valid, s, -jnp.inf)
+        m_loc = s.max(axis=-1)                                # (B,Hq,1)
+        m_glob = jax.lax.pmax(m_loc, "model")
+        m_safe = jnp.where(jnp.isinf(m_glob), 0.0, m_glob)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l_glob = jax.lax.psum(p.sum(axis=-1), "model")
+        acc = jnp.einsum("bhqs,bshd->bhqd", p.astype(jnp.float32),
+                         vv.astype(jnp.float32))
+        acc = jax.lax.psum(acc, "model")
+        out = (acc / jnp.maximum(l_glob, 1e-20)[..., None]).astype(qb.dtype)
+        return out, kc2, vc2
+
+    qspec = P(bspec, None, None, None)
+    cspec = P(bspec, "model", None, None)
+    out, k_new, v_new = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(qspec, qspec, qspec, cspec, cspec, P(), P()),
+        out_specs=(qspec, cspec, cspec), check_vma=False)(
+        q, k_tok, v_tok, cache["k"], cache["v"], slot, filled)
+    return out, {"k": k_new, "v": v_new}
+
+
+def attention_decode(params, x, cache, index, cfg, *,
+                     window: Optional[int] = None):
+    """One-token decode. x: (B, 1, d). cache: {'k','v'} (B, S, Hkv, D).
+    ``index``: scalar int32 — number of tokens already in the cache.
+    Returns (y, new_cache). With a sliding window the cache is a ring buffer
+    of size min(window, S)."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    S = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(x.dtype))
+    pos = jnp.full((1,), index, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = index % S if window is not None else index
+    filled = jnp.minimum(index + 1, S)
+    axes = kv_cache_axes(cfg)
+    rules = current_rules()
+    if (axes[1] == "kv_seq" and rules is not None
+            and getattr(rules, "kv_seq_shard", False)
+            and "model" in rules.mesh.shape
+            and S % rules.mesh.shape["model"] == 0
+            and not isinstance(rules.mesh, jax.sharding.AbstractMesh)):
+        # sequence-sharded cache: distributed flash-decode (§Perf/P2)
+        out, new_cache = _decode_attn_kvseq_sharded(
+            rules, q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            cache, slot, filled, hq // hkv)
+        # re-shard the (tiny) attention output on heads so the wo einsum
+        # stays local to the model axis instead of gathering wo itself
+        out = constrain(out, ("batch", "heads", None, None))
+        y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return constrain(y, ("batch", None, "embed")), new_cache
+    k_new = jax.lax.dynamic_update_slice(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), (0, slot, 0, 0))
+    k_new = constrain(k_new, axes)
+    v_new = constrain(v_new, axes)
+    # expanded attention over the cache
+    kk = _expand_kv(k_new.astype(x.dtype), hq // hkv, head_axis=2)
+    vv = _expand_kv(v_new.astype(x.dtype), hq // hkv, head_axis=2)
+    s = jnp.einsum("bhqd,bshd->bhqs", q, kk,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    valid = jnp.arange(S)[None, None, None, :] < filled
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bhqd", p.astype(vv.dtype), vv)
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(y, ("batch", None, "embed")), {"k": k_new, "v": v_new}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], (d_model, d_ff), ("embed", "ffn"), dtype),
+        "wi_up": dense_init(ks[1], (d_model, d_ff), ("embed", "ffn"), dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), ("ffn", "embed"), dtype),
+    }
+
+
+def mlp_apply(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("batch", None, "ffn"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+    return constrain(y, ("batch", None, "embed"))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"table": dense_init(key, (vocab, d_model), ("vocab", "embed"),
+                                dtype, scale=1.0)}
+
+
+def embed(params, tokens):
+    y = jnp.take(params["table"], tokens, axis=0)
+    return constrain(y, ("batch", None, "embed"))
+
+
+def logits(params, x):
+    out = jnp.einsum("bsd,vd->bsv", x, params["table"].astype(x.dtype))
+    return constrain(out, ("batch", None, "vocab"))

@@ -1,0 +1,443 @@
+"""Composable model builder: one entry point for all ten assigned
+architectures plus the paper's own Llama/BERT evaluation models.
+
+A config's resolved block list is factored into its repeating *pattern
+unit*; parameters for each unit position are stacked across repeats and the
+unit is applied under ``jax.lax.scan`` (MaxText-style) so 512-way dry-run
+compiles stay small. Weight-shared blocks (zamba2) live outside the scan
+and close over the unit body.
+
+Public API:
+  init_model(key, cfg)                  -> (params, logical_axes)
+  forward(params, cfg, batch, ...)      -> (hidden, aux_loss)
+  loss_fn(params, cfg, batch, ...)      -> (loss, metrics)
+  init_decode_state(params, cfg, batch, max_len) -> cache
+  prefill(params, cfg, batch, ...)      -> (last_logits, cache)
+  decode_step(params, cfg, tokens, cache, ...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (BLOCK_ATTN, BLOCK_MAMBA2, BLOCK_MLSTM,
+                                BLOCK_MOE, BLOCK_SHARED_ATTN, BLOCK_SLSTM,
+                                ModelConfig)
+from repro.core.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.param import dense_init, split, stack_layers
+
+# ---------------------------------------------------------------------------
+# pattern factoring
+# ---------------------------------------------------------------------------
+
+def pattern_unit(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int]:
+    kinds = cfg.blocks()
+    n = len(kinds)
+    for ulen in range(1, n + 1):
+        if n % ulen:
+            continue
+        unit = kinds[:ulen]
+        if unit * (n // ulen) == kinds:
+            return unit, n // ulen
+    return kinds, 1
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == BLOCK_ATTN:
+        return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+                "attn": L.attention_init(ks[0], cfg, dtype),
+                "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+                "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+    if kind == BLOCK_MOE:
+        return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+                "attn": L.attention_init(ks[0], cfg, dtype),
+                "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+                "moe": M.moe_init(ks[1], cfg, dtype)}
+    if kind == BLOCK_MLSTM:
+        return {"norm": L.rmsnorm_init(cfg.d_model, dtype),
+                "cell": S.mlstm_init(ks[0], cfg, dtype)}
+    if kind == BLOCK_SLSTM:
+        return {"norm": L.rmsnorm_init(cfg.d_model, dtype),
+                "cell": S.slstm_init(ks[0], cfg, dtype)}
+    if kind == BLOCK_MAMBA2:
+        return {"norm": L.rmsnorm_init(cfg.d_model, dtype),
+                "cell": S.mamba2_init(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _encdec_extra_init(key, cfg: ModelConfig, dtype):
+    """Encoder stack + cross-attention params for enc-dec (audio) archs."""
+    ks = jax.random.split(key, 2 + cfg.encoder_layers)
+    enc_layers = [_block_init(ks[2 + i], BLOCK_ATTN, cfg, dtype)
+                  for i in range(cfg.encoder_layers)]
+    return {
+        "adapter": dense_init(ks[0], (cfg.d_model, cfg.d_model),
+                              ("embed", "embed"), dtype),
+        "enc": stack_layers(enc_layers),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    unit, n_rep = pattern_unit(cfg)
+    keys = jax.random.split(key, 8 + len(unit) * n_rep + cfg.n_layers)
+    tree: Dict[str, Any] = {}
+    tree["embed"] = L.embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = L.embedding_init(keys[1], cfg.vocab_size, cfg.d_model, dtype)
+    tree["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+
+    kidx = 8
+    stack: Dict[str, Any] = {}
+    for pos, kind in enumerate(unit):
+        if kind == BLOCK_SHARED_ATTN:
+            continue
+        per_rep = []
+        for r in range(n_rep):
+            per_rep.append(_block_init(keys[kidx], kind, cfg, dtype))
+            kidx += 1
+        stack[f"pos{pos}"] = stack_layers(per_rep)
+    tree["stack"] = stack
+    if BLOCK_SHARED_ATTN in unit:
+        tree["shared"] = _block_init(keys[2], BLOCK_ATTN, cfg, dtype)
+    if cfg.encoder_layers:
+        tree["encdec"] = _encdec_extra_init(keys[3], cfg, dtype)
+        # cross-attention per decoder unit position (decoder is uniform attn)
+        cross = []
+        for r in range(cfg.n_layers):
+            cross.append({"norm": L.rmsnorm_init(cfg.d_model, dtype),
+                          "attn": L.attention_init(keys[kidx], cfg, dtype)})
+            kidx += 1
+        tree["cross"] = stack_layers(cross)
+    if cfg.num_image_tokens:
+        tree["projector"] = {
+            "w1": dense_init(keys[4], (cfg.frontend_dim, cfg.d_model),
+                             (None, "embed"), dtype),
+            "w2": dense_init(keys[5], (cfg.d_model, cfg.d_model),
+                             ("embed", "embed"), dtype),
+        }
+    return split(tree)
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, bp, x, cfg, *, window, impl, enc_out=None,
+                 cross_p=None, positions=None):
+    """Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, impl=impl)
+        mode = "causal" if cfg.causal else "full"
+        x = x + L.attention_apply(bp["attn"], h, cfg, positions=positions,
+                                  mask_mode=mode, window=window, impl=impl)
+        if cross_p is not None:
+            h = L.rmsnorm(cross_p["norm"], x, cfg.norm_eps, impl=impl)
+            x = x + L.attention_apply(cross_p["attn"], h, cfg,
+                                      mask_mode="full", impl=impl,
+                                      kv_override=(enc_out,))
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps, impl=impl)
+        if kind == BLOCK_MOE:
+            y, aux = M.moe_apply(bp["moe"], h, cfg)
+            x = x + y
+        else:
+            x = x + L.mlp_apply(bp["mlp"], h)
+        return x, aux
+    h = L.rmsnorm(bp["norm"], x, cfg.norm_eps, impl=impl)
+    if kind == BLOCK_MLSTM:
+        x = x + S.mlstm_apply(bp["cell"], h, cfg)
+    elif kind == BLOCK_SLSTM:
+        x = x + S.slstm_apply(bp["cell"], h, cfg)
+    elif kind == BLOCK_MAMBA2:
+        x = x + S.mamba2_apply(bp["cell"], h, cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
+               unroll: bool = False):
+    unit, n_rep = pattern_unit(cfg)
+    shared = params.get("shared")
+    cross = params.get("cross")  # (layers,...) stacked — only for uniform attn decoders
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        stack_slice, cross_slice = xs
+        for pos, kind in enumerate(unit):
+            bp = shared if kind == BLOCK_SHARED_ATTN else stack_slice[f"pos{pos}"]
+            cp = None
+            if cross_slice is not None and kind in (BLOCK_ATTN, BLOCK_MOE):
+                cp = cross_slice
+            x, a = _apply_block(kind, bp, x, cfg, window=window, impl=impl,
+                                enc_out=enc_out, cross_p=cp)
+            aux = aux + a
+        return (x, aux), None
+
+    body = unit_body
+    if cfg.remat:
+        body = jax.checkpoint(unit_body, prevent_cse=False)
+
+    if cross is not None:
+        # decoder with cross attention: unit length is 1 (uniform attn)
+        n_scan = cfg.n_layers // len(unit)
+        xs = (params["stack"], cross)
+    else:
+        n_scan = n_rep
+        xs = (params["stack"], None)
+    if unroll:
+        # python loop (dry-run cost pass: XLA cost_analysis does not
+        # multiply while-loop bodies by trip count)
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(n_scan):
+            xs_i = jax.tree.map(lambda v: v[i], xs)
+            carry, _ = unit_body(carry, xs_i)
+        return carry
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                               length=n_scan)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch, impl):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    if cfg.num_image_tokens:
+        img = batch["image_embeds"].astype(x.dtype)         # (B,Nimg,frontend)
+        p = jnp.einsum("bnf,fd->bnd", img, params["projector"]["w1"].astype(x.dtype))
+        p = jax.nn.gelu(p)
+        p = jnp.einsum("bnd,de->bne", p, params["projector"]["w2"].astype(x.dtype))
+        n = cfg.num_image_tokens
+        x = jnp.concatenate([p.astype(x.dtype), x[:, n:]], axis=1)
+    return x
+
+
+def _encode(params, cfg, batch, impl, unroll: bool = False):
+    frames = batch["frames"].astype(jnp.dtype(cfg.dtype))   # (B,S_enc,d)
+    x = jnp.einsum("bsd,de->bse", frames, params["encdec"]["adapter"].astype(frames.dtype))
+    enc_cfg = cfg
+
+    def enc_body(carry, bp):
+        h, _ = carry
+        h, _ = _apply_block(BLOCK_ATTN, bp, h, enc_cfg, window=None, impl=impl)
+        return (h, jnp.zeros((), jnp.float32)), None
+
+    if unroll:
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(cfg.encoder_layers):
+            bp = jax.tree.map(lambda v: v[i], params["encdec"]["enc"])
+            carry, _ = enc_body(carry, bp)
+        x = carry[0]
+        return L.rmsnorm(params["encdec"]["enc_norm"], x, cfg.norm_eps,
+                         impl=impl)
+    body = jax.checkpoint(enc_body, prevent_cse=False) if cfg.remat else enc_body
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["encdec"]["enc"])
+    return L.rmsnorm(params["encdec"]["enc_norm"], x, cfg.norm_eps, impl=impl)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, *, window=None,
+            impl: str = "reference", unroll: bool = False):
+    """Returns (final hidden states (B,S,d), aux_loss)."""
+    enc_out = (_encode(params, cfg, batch, impl, unroll=unroll)
+               if cfg.encoder_layers else None)
+    x = _embed_inputs(params, cfg, batch, impl)
+    x, aux = _run_stack(params, x, cfg, window=window, impl=impl,
+                        enc_out=enc_out, unroll=unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, impl=impl)
+    return x, aux
+
+
+def lm_logits(params, cfg, hidden):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.logits(head, hidden)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, *, window=None,
+            impl: str = "reference", unroll: bool = False):
+    """Masked token cross-entropy. batch: tokens, labels, loss_mask."""
+    hidden, aux = forward(params, cfg, batch, window=window, impl=impl,
+                          unroll=unroll)
+    logits = lm_logits(params, cfg, hidden)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logits_f = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits_f, axis=-1)
+    gold = jnp.take_along_axis(logits_f, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    return loss + aux, {"loss": loss, "aux": aux, "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _cache_for(kind: str, cfg, batch: int, max_len: int):
+    if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
+        w = cfg.sliding_window
+        size = min(max_len, w) if w else max_len
+        return L.attention_init_cache(cfg, batch, size)
+    if kind == BLOCK_MLSTM:
+        return S.mlstm_init_state(cfg, batch)
+    if kind == BLOCK_SLSTM:
+        return S.slstm_init_state(cfg, batch)
+    if kind == BLOCK_MAMBA2:
+        return S.mamba2_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_out: Optional[jnp.ndarray] = None) -> Dict:
+    unit, n_rep = pattern_unit(cfg)
+    caches: Dict[str, Any] = {}
+    for pos, kind in enumerate(unit):
+        if kind == BLOCK_SHARED_ATTN:
+            # one cache per occurrence, stacked over repeats
+            caches[f"pos{pos}"] = jax.tree.map(
+                lambda c: jnp.stack([c] * n_rep), _cache_for(kind, cfg, batch, max_len))
+        else:
+            caches[f"pos{pos}"] = jax.tree.map(
+                lambda c: jnp.stack([c] * n_rep), _cache_for(kind, cfg, batch, max_len))
+    state = {"layers": caches, "index": jnp.zeros((), jnp.int32)}
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+    return state
+
+
+def _apply_block_decode(kind, bp, x, cache, index, cfg, *, window, enc_out=None,
+                        cross_p=None):
+    if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        y, cache = L.attention_decode(bp["attn"], h, cache, index, cfg,
+                                      window=window)
+        x = x + y
+        if cross_p is not None:
+            h = L.rmsnorm(cross_p["norm"], x, cfg.norm_eps)
+            x = x + L.attention_apply(cross_p["attn"], h, cfg, mask_mode="full",
+                                      kv_override=(enc_out,))
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        if kind == BLOCK_MOE:
+            y, _ = M.moe_apply(bp["moe"], h, cfg)
+            x = x + y
+        else:
+            x = x + L.mlp_apply(bp["mlp"], h)
+        return x, cache
+    h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+    if kind == BLOCK_MLSTM:
+        y, cache = S.mlstm_decode(bp["cell"], h, cache, cfg)
+    elif kind == BLOCK_SLSTM:
+        y, cache = S.slstm_decode(bp["cell"], h, cache, cfg)
+    elif kind == BLOCK_MAMBA2:
+        y, cache = S.mamba2_decode(bp["cell"], h, cache, cfg)
+    else:
+        raise ValueError(kind)
+    return x + y, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, state, *, window=None,
+                unroll: bool = False):
+    """tokens: (B,1) int32. Returns (logits (B,1,V), new state)."""
+    unit, n_rep = pattern_unit(cfg)
+    x = L.embed(params["embed"], tokens)
+    index = state["index"]
+    enc_out = state.get("enc_out")
+    shared = params.get("shared")
+    cross = params.get("cross")
+
+    def unit_body(carry, xs):
+        x = carry
+        stack_slice, cache_slice, cross_slice, shared_cache = xs
+        new_caches = {}
+        for pos, kind in enumerate(unit):
+            bp = shared if kind == BLOCK_SHARED_ATTN else stack_slice[f"pos{pos}"]
+            cache = cache_slice[f"pos{pos}"]
+            cp = cross_slice if (cross_slice is not None and
+                                 kind in (BLOCK_ATTN, BLOCK_MOE)) else None
+            x, cache = _apply_block_decode(kind, bp, x, cache, index, cfg,
+                                           window=window, enc_out=enc_out,
+                                           cross_p=cp)
+            new_caches[f"pos{pos}"] = cache
+        return x, new_caches
+
+    xs = (params["stack"], state["layers"], cross, None)
+    if unroll:
+        n_scan = jax.tree.leaves(params["stack"])[0].shape[0]
+        caches_out = []
+        for i in range(n_scan):
+            xs_i = jax.tree.map(lambda v: v[i], xs)
+            x, nc = unit_body(x, xs_i)
+            caches_out.append(nc)
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *caches_out)
+    else:
+        x, new_caches = jax.lax.scan(unit_body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)
+    new_state = dict(state)
+    new_state["layers"] = new_caches
+    new_state["index"] = index + 1
+    return logits, new_state
+
+
+def decode_state_axes(cfg: ModelConfig, state) -> Dict:
+    """Logical-axis tree matching init_decode_state's structure (used by the
+    launcher to build decode-cache shardings)."""
+    unit, n_rep = pattern_unit(cfg)
+
+    def attn_axes(leaf_ndim):
+        base = L.kv_cache_axes(cfg)
+        return ("layers",) + base
+
+    caches = {}
+    for pos, kind in enumerate(unit):
+        if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
+            caches[f"pos{pos}"] = {"k": attn_axes(5), "v": attn_axes(5)}
+        elif kind == BLOCK_MAMBA2:
+            caches[f"pos{pos}"] = {
+                "ssm": ("layers", "batch", "ssm_heads", None, None),
+                "conv": ("layers", "batch", None, "ffn")}
+        elif kind == BLOCK_MLSTM:
+            caches[f"pos{pos}"] = {
+                "mlstm": (("layers", "batch", "heads", None, None),
+                          ("layers", "batch", "heads", None),
+                          ("layers", "batch", "heads")),
+                "conv": ("layers", "batch", None, "ffn")}
+        elif kind == BLOCK_SLSTM:
+            caches[f"pos{pos}"] = tuple(
+                ("layers", "batch", "heads", None) for _ in range(4))
+    axes = {"layers": caches, "index": ()}
+    if "enc_out" in state:
+        axes["enc_out"] = ("batch", None, "embed")
+    return axes
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, *, window=None,
+            impl: str = "reference", unroll: bool = False):
+    """Compute hidden states over the prompt; return last-token logits.
+
+    (The production serve path would also populate the KV cache during
+    prefill; the dry-run prefill measures the forward compute, and decode
+    shapes measure steady-state token generation.)"""
+    hidden, _ = forward(params, cfg, batch, window=window, impl=impl,
+                        unroll=unroll)
+    last = hidden[:, -1:]
+    return lm_logits(params, cfg, last)

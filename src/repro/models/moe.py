@@ -1,0 +1,247 @@
+"""Top-k Mixture-of-Experts FFN with GShard-style dispatch/combine einsums.
+
+TPU-native expert parallelism: experts shard over the ``model`` mesh axis;
+the dispatch one-hot einsum becomes an all-to-all under SPMD partitioning.
+Capacity-factor based (tokens over capacity are dropped, their residual
+passes through — standard GShard/Switch semantics). Aux load-balance loss
+is returned so the trainer can add it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import constrain
+from repro.models.param import dense_init
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, m = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, m.num_experts), ("embed", "experts"),
+                             jnp.float32),
+        "wi_gate": dense_init(ks[1], (m.num_experts, d, m.d_expert),
+                              ("experts", "embed", "ffn"), dtype),
+        "wi_up": dense_init(ks[2], (m.num_experts, d, m.d_expert),
+                            ("experts", "embed", "ffn"), dtype),
+        "wo": dense_init(ks[3], (m.num_experts, m.d_expert, d),
+                         ("experts", "ffn", "embed"), dtype),
+    }
+
+
+def _capacity(tokens_per_group: int, num_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k / num_experts * capacity_factor))
+    return max(c, 1)
+
+
+def _router(params, x, cfg):
+    """Shared routing: (gate_vals, gate_idx, aux). gate renormalized."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    router_logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                               params["router"])
+    probs = jax.nn.softmax(router_logits, axis=-1)            # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(axis=(0, 1))
+    one_hot_top1 = jax.nn.one_hot(gate_idx[..., 0], E)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce) * m.aux_loss_weight
+    return gate_vals, gate_idx, aux
+
+
+def moe_apply_ragged(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless sorted dispatch via lax.ragged_dot (§Perf/P1 iter 2).
+
+    Per batch row: sort the (S*K) expert assignments, gather tokens into
+    expert-contiguous order, run the three FFN matmuls as ragged group
+    matmuls, and scatter-add the gated results back. No capacity buffers,
+    no one-hot einsums — bytes scale with S*K*d instead of S*E*C*d, and
+    FLOPs are exactly tokens*K*(FFN flops). Stays local to each batch
+    row, so the data-axis sharding is preserved (no cross-device gather).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    gate_vals, gate_idx, aux = _router(params, x, cfg)
+
+    NK = S * K
+    flat_e = gate_idx.reshape(B, NK)
+    sort_i = jnp.argsort(flat_e, axis=1)                      # (B,NK)
+    tok_i = sort_i // K                                       # (B,NK)
+    xs = jnp.take_along_axis(x, tok_i[..., None], axis=1)     # (B,NK,d)
+    gs = jax.vmap(lambda fe: jnp.bincount(fe, length=E))(flat_e)
+
+    def rd(lhs, w):
+        wb = jnp.broadcast_to(w.astype(lhs.dtype), (B,) + w.shape)
+        return jax.vmap(jax.lax.ragged_dot)(lhs, wb, gs)
+
+    g = rd(xs, params["wi_gate"])
+    u = rd(xs, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("batch", None, "ffn"))
+    ys = rd(h, params["wo"])                                  # (B,NK,d)
+    w = jnp.take_along_axis(gate_vals.reshape(B, NK), sort_i, axis=1)
+    ys = (ys.astype(jnp.float32) * w[..., None]).astype(x.dtype)
+
+    def scatter_add(tok, val):
+        return jnp.zeros((S, d), val.dtype).at[tok].add(val)
+
+    y = jax.vmap(scatter_add)(tok_i, ys)
+    return constrain(y, ("batch", None, "embed")), aux
+
+
+def _onehot_dispatch(gate_vals, gate_idx, E, C, ddtype, cdtype):
+    """(dispatch, combine) one-hots for capacity-C buffers.
+    gate_vals/gate_idx: (B, S, K)."""
+    B, S, K = gate_idx.shape
+    dispatch = jnp.zeros((B, S, E, C), ddtype)
+    combine = jnp.zeros((B, S, E, C), jnp.dtype(cdtype))
+    counts = jnp.zeros((B, E), jnp.int32)
+    for j in range(K):
+        sel = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)
+        pos = jnp.cumsum(sel, axis=1) - 1 + counts[:, None, :]
+        keep = (pos < C) & (sel > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), C, dtype=ddtype)
+        slot = sel.astype(ddtype)[..., None] * pos_oh
+        dispatch = dispatch + slot
+        combine = combine + (gate_vals[..., j][..., None, None]
+                             * slot.astype(jnp.float32)).astype(combine.dtype)
+        counts = counts + sel.sum(axis=1)
+    return dispatch, combine
+
+
+def moe_apply_a2a(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Explicit expert parallelism with all_to_all (§Perf/P1 iter 4).
+
+    Tokens shard over (batch x sequence); experts shard over `model`.
+    Each model-shard routes its local tokens into per-expert capacity
+    buffers, an all_to_all swaps the (dest-shard, ...) blocks so every
+    shard receives exactly the tokens its local experts must compute,
+    and a second all_to_all returns the results — the production EP
+    schedule (GShard/MaxText) instead of letting SPMD rewrite the
+    dispatch einsums into all-gather + all-reduce.
+
+    Falls back to the gshard path when no mesh is active (CPU tests),
+    when S doesn't divide the model axis, or when E doesn't.
+    """
+    import math as _math
+    from repro.core.sharding import current_rules
+    from jax.sharding import PartitionSpec as P
+
+    rules = current_rules()
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    if (rules is None or "model" not in rules.mesh.shape
+            or isinstance(rules.mesh, jax.sharding.AbstractMesh)):
+        return _moe_apply_gshard(params, x, cfg)
+    n = rules.mesh.shape["model"]
+    if S % n or E % n or n == 1:
+        return _moe_apply_gshard(params, x, cfg)
+    E_loc, S_loc = E // n, S // n
+    C = max(int(_math.ceil(S_loc * K / E * m.capacity_factor)), 1)
+
+    gate_vals, gate_idx, aux = _router(params, x, cfg)
+    f = params["wi_gate"].shape[-1]
+    bspec = rules.activation_spec(("batch", None, None), x.shape)[0]
+
+    def local_fn(xl, gv, gi, wg, wu, wo):
+        # xl: (B_l, S_loc, d); gv/gi: (B_l, S_loc, K);
+        # wg/wu: (E_loc, d, f); wo: (E_loc, f, d)
+        Bl = xl.shape[0]
+        dispatch, combine = _onehot_dispatch(gv, gi, E, C, xl.dtype,
+                                             m.combine_dtype)
+        xe = jnp.einsum("bsec,bsd->ebcd", dispatch, xl)       # (E,B_l,C,d)
+        xe = xe.reshape(n, E_loc * Bl * C, d)
+        # swap (dest-shard) blocks: afterwards dim0 = source shard and
+        # the E_loc experts are THIS shard's experts
+        xr = jax.lax.all_to_all(xe, "model", split_axis=0, concat_axis=0)
+        xr = xr.reshape(n, E_loc, Bl, C, d)
+        g = jnp.einsum("nebcd,edf->nebcf", xr, wg.astype(xr.dtype))
+        u = jnp.einsum("nebcd,edf->nebcf", xr, wu.astype(xr.dtype))
+        h = jax.nn.silu(g) * u
+        ye = jnp.einsum("nebcf,efd->nebcd", h, wo.astype(xr.dtype))
+        ye = ye.reshape(n, E_loc * Bl * C, d)
+        yb = jax.lax.all_to_all(ye, "model", split_axis=0, concat_axis=0)
+        yb = yb.reshape(E, Bl, C, d)
+        y = jnp.einsum("bsec,ebcd->bsd", combine.astype(xl.dtype), yb)
+        return y
+
+    xspec = P(bspec, "model", None)
+    gspec = P(bspec, "model", None)
+    wspec = P("model", None, None)
+    y = jax.shard_map(
+        local_fn, mesh=rules.mesh,
+        in_specs=(xspec, gspec, gspec, wspec, wspec, wspec),
+        out_specs=xspec, check_vma=False)(
+        x, gate_vals, gate_idx, params["wi_gate"], params["wi_up"],
+        params["wo"])
+    return constrain(y, ("batch", None, "embed")), aux
+
+
+def moe_apply(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch on cfg.moe.impl: gshard (default), ragged, a2a."""
+    if cfg.moe.impl == "ragged":
+        return moe_apply_ragged(params, x, cfg)
+    if cfg.moe.impl == "a2a":
+        return moe_apply_a2a(params, x, cfg)
+    return _moe_apply_gshard(params, x, cfg)
+
+
+def _moe_apply_gshard(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    With ``cfg.moe.group_size = g`` set (and g < S, g | S) the sequence is
+    re-grouped to (B*S/g, g, d) before dispatch so the capacity-buffer
+    tensors scale with g, not S — identical routing semantics per token
+    (router is pointwise; groups are equal-sized so the aux loss mean is
+    unchanged), but the (tokens, E, C) dispatch/combine footprint drops
+    by ~S/g. §Perf/P1."""
+    m = cfg.moe
+    B0, S0, d = x.shape
+    g = m.group_size
+    if g and g < S0 and S0 % g == 0:
+        x = x.reshape(B0 * (S0 // g), g, d)
+    B, S, _ = x.shape
+    E, K = m.num_experts, m.top_k
+    C = _capacity(S, E, K, m.capacity_factor)
+
+    gate_vals, gate_idx, aux = _router(params, x, cfg)
+
+    # --- positions within expert buffers, per sequence group ---
+    cdt = jnp.dtype(m.combine_dtype)
+    dispatch = jnp.zeros((B, S, E, C), x.dtype)
+    combine = jnp.zeros((B, S, E, C), cdt)
+    counts = jnp.zeros((B, E), jnp.int32)
+    for j in range(K):
+        sel = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)  # (B,S,E)
+        pos = jnp.cumsum(sel, axis=1) - 1 + counts[:, None, :]      # (B,S,E)
+        keep = (pos < C) & (sel > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), C, dtype=x.dtype)
+        slot = sel.astype(x.dtype)[..., None] * pos_oh              # (B,S,E,C)
+        dispatch = dispatch + slot
+        combine = combine + (gate_vals[..., j][..., None, None]
+                             * slot.astype(jnp.float32)).astype(cdt)
+        counts = counts + sel.sum(axis=1)
+
+    dispatch = constrain(dispatch, ("batch", None, "experts", None))
+    combine = constrain(combine, ("batch", None, "experts", None))
+
+    # --- dispatch -> batched expert FFN -> combine ---
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch, x)            # (E,B,C,d)
+    xe = constrain(xe, ("experts", "batch", None, None))
+    g = jnp.einsum("ebcd,edf->ebcf", xe, params["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("ebcd,edf->ebcf", xe, params["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("experts", "batch", None, "ffn"))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, params["wo"].astype(x.dtype))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), ye)
+    y = y.reshape(B0, S0, d)
+    return constrain(y, ("batch", None, "embed")), aux

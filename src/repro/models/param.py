@@ -1,0 +1,68 @@
+"""Parameter trees with logical-axis annotations.
+
+Model ``init`` functions build nested dicts whose leaves are
+``Annotated(value, axes)``; :func:`split` separates them into a value tree
+(what jax transforms see) and an axes tree (what the sharding planner sees).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Annotated:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if hasattr(self.value, "shape"):
+            assert len(self.axes) == len(self.value.shape), (
+                f"axes {self.axes} do not match shape {self.value.shape}")
+
+
+def is_annotated(x) -> bool:
+    return isinstance(x, Annotated)
+
+
+def split(tree):
+    """(annotated tree) -> (values, axes) as parallel pytrees."""
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annotated)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annotated)
+    return values, axes
+
+
+def dense_init(key, shape, axes, dtype=jnp.bfloat16, scale: Optional[float] = None) -> Annotated:
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Annotated(v, tuple(axes))
+
+
+def zeros_init(shape, axes, dtype=jnp.bfloat16) -> Annotated:
+    return Annotated(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype=jnp.bfloat16) -> Annotated:
+    return Annotated(jnp.ones(shape, dtype), tuple(axes))
+
+
+def const_init(value, axes) -> Annotated:
+    return Annotated(value, tuple(axes))
+
+
+def stack_layers(trees):
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    def _stack(*leaves):
+        vals = [l.value for l in leaves]
+        return Annotated(jnp.stack(vals, axis=0), ("layers",) + leaves[0].axes)
+    return jax.tree.map(_stack, *trees, is_leaf=is_annotated)
+
+
+def param_count(values_tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(values_tree))

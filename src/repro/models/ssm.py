@@ -1,0 +1,436 @@
+"""Sequence-mixing blocks that are sub-quadratic in sequence length:
+
+- Mamba2 (SSD, chunked scan) — zamba2 backbone;
+- mLSTM (xLSTM matrix memory, chunkwise-parallel log-space form);
+- sLSTM (xLSTM scalar memory, true recurrence via lax.scan).
+
+All three expose a full-sequence ``*_apply`` (train/prefill) and a
+single-token ``*_decode`` that carries a constant-size recurrent state —
+this is what makes long_500k decode feasible for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import constrain
+from repro.models.param import Annotated, const_init, dense_init, ones_init, zeros_init
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    N = s.state_dim
+    conv_ch = d_inner + 2 * N  # xc + B + C (ngroups = 1)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * N + H  # z, xc, B, C, dt
+    return {
+        "w_in": dense_init(ks[0], (d, in_dim), ("embed", "ffn"), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), ("conv", "ffn"), dtype,
+                             scale=0.5),
+        "A_log": const_init(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+                            ("ssm_heads",)),
+        "D": ones_init((H,), ("ssm_heads",), jnp.float32),
+        "dt_bias": zeros_init((H,), ("ssm_heads",), jnp.float32),
+        "norm_scale": ones_init((d_inner,), ("ffn",), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d), ("ffn", "embed"), dtype),
+    }
+
+
+def _split_zxbcdt(z_all, cfg):
+    d_inner, H = mamba2_dims(cfg)
+    N = cfg.ssm.state_dim
+    z, xc, Bm, Cm, dt = jnp.split(
+        z_all, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(x, w, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B,S,Ch), w: (W,Ch). state: (B,W-1,Ch)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked selective-state-space scan (SSD).
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    Bm/Cm: (B,S,N) input/output projections (ngroups=1).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // chunk
+    # chunked views: (nc, B, chunk, ...)
+    def chunked(t):
+        return t.reshape(B_, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xc_, dtc, Bc, Cc = chunked(xh), chunked(dt), chunked(Bm), chunked(Cm)
+
+    logdec = dtc * (-jnp.exp(A))[None, None, None, :]     # (nc,B,Q,H) negative
+    cums = jnp.cumsum(logdec, axis=2)                      # within-chunk cumulative
+
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xcb, dtb, Bb, Cb, cum, ld = inp                    # (B,Q,H,P) etc.
+        # intra-chunk (quadratic within chunk)
+        # decay from j to i: exp(cum_i - cum_j) for i>=j
+        li = cum[:, :, None, :]                            # (B,Q,1,H)
+        lj = cum[:, None, :, :]                            # (B,1,Q,H)
+        mask = jnp.tril(jnp.ones((cum.shape[1], cum.shape[1]), bool))[None, :, :, None]
+        # mask the *argument* before exp (double-where) so the cotangent of
+        # masked entries is exactly zero rather than inf * 0 = NaN.
+        arg = jnp.where(mask, li - lj, -1e30)
+        dmat = jnp.where(mask, jnp.exp(arg), 0.0)          # (B,Q,Q,H)
+        sc = jnp.einsum("bin,bjn->bij", Cb, Bb)            # (B,Q,Q)
+        w = sc[..., None] * dmat                            # (B,Q,Q,H)
+        xdt = xcb * dtb[..., None]                          # (B,Q,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xdt.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        dec_to_i = jnp.exp(cum)                             # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cb, state, dec_to_i)
+        # state update: S' = S * exp(total) + sum_j exp(total - cum_j) B_j xdt_j
+        total = cum[:, -1]                                  # (B,H)
+        dec_from_j = jnp.exp(total[:, None] - cum)          # (B,Q,H)
+        s_new = jnp.einsum("bjn,bjhp,bjh->bhpn", Bb, xdt.astype(jnp.float32),
+                           dec_from_j)
+        state = state * jnp.exp(total)[:, :, None, None] + s_new
+        return state, (y_intra + y_inter)
+
+    final_state, ys = jax.lax.scan(step, init_state, (xc_, dtc, Bc, Cc, cums, logdec))
+    y = ys.swapaxes(0, 1).reshape(B_, S_p, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba2_apply(params, x, cfg, init_state=None, conv_state=None,
+                 return_state: bool = False):
+    """Full-sequence Mamba2. x: (B,S,d)."""
+    d_inner, H = mamba2_dims(cfg)
+    N, P = cfg.ssm.state_dim, cfg.ssm.head_dim
+    z_all = jnp.einsum("bsd,di->bsi", x, params["w_in"].astype(x.dtype))
+    z, xc, Bm, Cm, dt = _split_zxbcdt(z_all, cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, new_conv_state = _causal_conv(conv_in, params["conv_w"].astype(x.dtype),
+                                            conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    xh = xc.reshape(*xc.shape[:2], H, P)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None))
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, state = _ssd_chunked(xh, dtv, params["A_log"], Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32), cfg.ssm.chunk_size, init_state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bsi,id->bsd", yf.astype(x.dtype),
+                     params["w_out"].astype(x.dtype))
+    out = constrain(out, ("batch", None, "embed"))
+    if return_state:
+        return out, (state, new_conv_state)
+    return out
+
+
+def mamba2_init_state(cfg, batch: int):
+    d_inner, H = mamba2_dims(cfg)
+    N = cfg.ssm.state_dim
+    conv_ch = d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm.head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba2_decode(params, x, state, cfg):
+    """One-token step. x: (B,1,d); state: {'ssm','conv'}."""
+    d_inner, H = mamba2_dims(cfg)
+    N, P = cfg.ssm.state_dim, cfg.ssm.head_dim
+    z_all = jnp.einsum("bsd,di->bsi", x, params["w_in"].astype(x.dtype))
+    z, xc, Bm, Cm, dt = _split_zxbcdt(z_all, cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"].astype(x.dtype),
+                                        state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    xh = xc[:, 0].reshape(-1, H, P).astype(jnp.float32)       # (B,H,P)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(dtv * (-jnp.exp(params["A_log"]))[None, :])   # (B,H)
+    Bv, Cv = Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)  # (B,N)
+    s = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bv, xh, dtv)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, s) + xh * params["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_inner)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bsi,id->bsd", yf.astype(x.dtype), params["w_out"].astype(x.dtype))
+    return out, {"ssm": s, "conv": conv_state}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory) — chunkwise-parallel, log-space gates
+# ===========================================================================
+
+def mlstm_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    dh = d_inner // cfg.n_heads
+    return d_inner, dh
+
+
+def mlstm_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    d_inner, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), ("embed", "ffn"), dtype),
+        "conv_w": dense_init(ks[1], (4, d_inner), ("conv", "ffn"), dtype, scale=0.5),
+        "wq": dense_init(ks[2], (d_inner, H, dh), ("ffn", "heads", None), dtype),
+        "wk": dense_init(ks[3], (d_inner, H, dh), ("ffn", "heads", None), dtype),
+        "wv": dense_init(ks[4], (d_inner, H, dh), ("ffn", "heads", None), dtype),
+        "w_if": dense_init(ks[5], (d_inner, 2 * H), ("ffn", "heads"), jnp.float32),
+        "if_bias": const_init(jnp.concatenate([
+            jnp.zeros((H,), jnp.float32), 3.0 * jnp.ones((H,), jnp.float32)]),
+            ("heads",)),
+        "skip_scale": ones_init((d_inner,), ("ffn",), dtype),
+        "norm_scale": ones_init((d_inner,), ("ffn",), dtype),
+        "w_down": dense_init(ks[6], (d_inner, d), ("ffn", "embed"), dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int, init_state=None):
+    """Chunkwise mLSTM. q,k,v: (B,S,H,Dh); log_i/log_f: (B,S,H).
+
+    Carries (C: (B,H,Dh,Dh), n: (B,H,Dh), m: (B,H)) across chunks — the
+    running stabilizer m follows the xLSTM paper.
+    """
+    B, S, H, Dh = q.shape
+    pad = (-S) % chunk
+    if pad:
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad4) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def chunked(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lic, lfc = map(chunked, (q, k, v, log_i, log_f))
+    cumf = jnp.cumsum(lfc, axis=2)                           # (nc,B,Q,H)
+    scale = 1.0 / jnp.sqrt(Dh)
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e9, jnp.float32)
+    else:
+        C0, n0, m0 = init_state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, li, cf = inp                              # (B,Q,H,*) / (B,Q,H)
+        # log weights: intra d[i,j] = cf_i - cf_j + li_j (j<=i); inter: cf_i + m
+        dlog = cf[:, :, None, :] - cf[:, None, :, :] + li[:, None, :, :]
+        mask = jnp.tril(jnp.ones((cf.shape[1], cf.shape[1]), bool))
+        dlog = jnp.where(mask[None, :, :, None], dlog, -1e30)
+        inter_log = cf + m[:, None, :]                        # (B,Q,H)
+        m_new = jnp.maximum(dlog.max(axis=2), inter_log)      # (B,Q,H) per-row stab
+        d = jnp.exp(dlog - m_new[:, :, None, :])              # (B,Q,Q,H)
+        inter_w = jnp.exp(inter_log - m_new)                  # (B,Q,H)
+        s = jnp.einsum("bihd,bjhd->bijh", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        w = s * d
+        h_intra = jnp.einsum("bijh,bjhd->bihd", w, vb.astype(jnp.float32))
+        h_inter = jnp.einsum("bihd,bhde,bih->bihe", qb.astype(jnp.float32), C,
+                             inter_w) * scale
+        # normalizer n_t = sum_j decay_ij i_j k_j (vector, carried as `n`);
+        # denom = max(|q . n|, exp(-m)). Linear in j *before* the abs, so
+        # the result is invariant to the chunking (decode chunk=1 must equal
+        # the train-time chunk=256 path exactly).
+        qn_intra = w.sum(axis=2)                              # (B,Q,H)
+        qn_inter = jnp.einsum("bihd,bhd,bih->bih", qb.astype(jnp.float32),
+                              n, inter_w) * scale
+        denom = jnp.maximum(jnp.abs(qn_intra + qn_inter), jnp.exp(-m_new))
+        h = (h_intra + h_inter) / denom[..., None]
+        # ---- state update to end of chunk ----
+        total = cf[:, -1]                                     # (B,H)
+        m_next = jnp.maximum(total + m, (total[:, None] - cf + li).max(axis=1))
+        dec_j = jnp.exp(total[:, None] - cf + li - m_next[:, None])  # (B,Q,H)
+        C_new = C * jnp.exp(total + m - m_next)[:, :, None, None] + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", kb.astype(jnp.float32),
+            vb.astype(jnp.float32), dec_j)
+        n_new = n * jnp.exp(total + m - m_next)[:, :, None] + jnp.einsum(
+            "bjhd,bjh->bhd", kb.astype(jnp.float32), dec_j)
+        return (C_new, n_new, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, cumf))
+    h = hs.swapaxes(0, 1).reshape(B, Sp, H, Dh)[:, :S]
+    return h, (C, n, m)
+
+
+def mlstm_apply(params, x, cfg, init_state=None, return_state: bool = False):
+    B, S, d = x.shape
+    d_inner, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"].astype(x.dtype))
+    xi, zg = jnp.split(up, 2, axis=-1)
+    conv_state = None if init_state is None else init_state.get("conv")
+    xconv, new_conv = _causal_conv(xi, params["conv_w"].astype(x.dtype), conv_state)
+    xconv = jax.nn.silu(xconv)
+    q = jnp.einsum("bsi,ihd->bshd", xconv, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsi,ihd->bshd", xconv, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsi,ihd->bshd", xi, params["wv"].astype(x.dtype))
+    q = constrain(q, ("batch", None, "heads", None))
+    gates = jnp.einsum("bsi,ig->bsg", xconv.astype(jnp.float32), params["w_if"])
+    gates = gates + params["if_bias"][None, None, :]
+    log_i, log_f = jnp.split(gates, 2, axis=-1)               # (B,S,H)
+    log_f = jax.nn.log_sigmoid(log_f)
+    mstate = None if init_state is None else init_state.get("mlstm")
+    h, new_m = _mlstm_chunked(q, k, v, log_i, log_f,
+                              chunk=min(getattr(cfg, "mlstm_chunk", 256),
+                                        max(S, 1)), init_state=mstate)
+    h = h.reshape(B, S, d_inner).astype(x.dtype)
+    h = h + params["skip_scale"].astype(x.dtype) * xconv
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(jnp.float32)
+    hf = hf * jax.nn.silu(zg.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", hf.astype(x.dtype), params["w_down"].astype(x.dtype))
+    out = constrain(out, ("batch", None, "embed"))
+    if return_state:
+        return out, {"mlstm": new_m, "conv": new_conv}
+    return out
+
+
+def mlstm_init_state(cfg, batch: int):
+    d_inner, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "mlstm": (jnp.zeros((batch, H, dh, dh), jnp.float32),
+                  jnp.zeros((batch, H, dh), jnp.float32),
+                  jnp.full((batch, H), -1e9, jnp.float32)),
+        "conv": jnp.zeros((batch, 3, d_inner), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mlstm_decode(params, x, state, cfg):
+    out, new_state = mlstm_apply(params, x, cfg, init_state=state,
+                                 return_state=True)
+    return out, new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar memory) — sequential scan
+# ===========================================================================
+
+def slstm_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    pf = 4 / 3
+    d_ff = int(pf * d) // 64 * 64 or 64
+    return {
+        # input weights for z,i,f,o stacked: (d, 4, H, dh)
+        "w_x": dense_init(ks[0], (d, 4, H, dh), ("embed", None, "heads", None), dtype),
+        # block-diagonal recurrent weights per head: (4, H, dh, dh)
+        "w_h": dense_init(ks[1], (4, H, dh, dh), (None, "heads", None, None), dtype,
+                          scale=0.3),
+        "bias": const_init(jnp.concatenate([
+            jnp.zeros((3, H, dh), jnp.float32),
+            jnp.ones((1, H, dh), jnp.float32)], axis=0), (None, "heads", None)),
+        "norm_scale": ones_init((d,), ("embed",), dtype),
+        "ffn_up": dense_init(ks[2], (d, 2 * d_ff), ("embed", "ffn"), dtype),
+        "ffn_down": dense_init(ks[3], (d_ff, d), ("ffn", "embed"), dtype),
+    }
+
+
+def _slstm_scan(wx_terms, w_h, bias, h0, c0, n0, m0):
+    """wx_terms: (B,S,4,H,dh) precomputed input contributions."""
+    B, S = wx_terms.shape[:2]
+
+    def step(carry, xt):
+        h, c, n, m = carry                                    # (B,H,dh) each
+        rec = jnp.einsum("bhd,ghde->bghe", h, w_h.astype(jnp.float32))
+        pre = xt.astype(jnp.float32) + rec + bias[None]       # (B,4,H,dh)
+        z = jnp.tanh(pre[:, 0])
+        i_t = pre[:, 1]
+        f_t = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+        h_new = o * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    wx_terms.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), (h, c, n, m)                    # (B,S,H,dh)
+
+
+def slstm_apply(params, x, cfg, init_state=None, return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"].astype(x.dtype))
+    if init_state is None:
+        zer = jnp.zeros((B, H, dh), jnp.float32)
+        init_state = (zer, zer, zer + 1e-6, zer - 1e9)
+    hs, state = _slstm_scan(wx, params["w_h"], params["bias"], *init_state)
+    y = hs.reshape(B, S, d).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    # gated FFN (proj factor 4/3 per xLSTM paper)
+    up = jnp.einsum("bsd,df->bsf", y, params["ffn_up"].astype(x.dtype))
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(a) * b, params["ffn_down"].astype(x.dtype))
+    y = constrain(y, ("batch", None, "embed"))
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_init_state(cfg, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    zer = jnp.zeros((batch, H, dh), jnp.float32)
+    return (zer, zer, zer + 1e-6, zer - 1e9)
+
+
+def slstm_decode(params, x, state, cfg):
+    return slstm_apply(params, x, cfg, init_state=state, return_state=True)

@@ -1,0 +1,71 @@
+"""AdamW with fp32 master weights — the optimizer whose state ZeRO
+partitions. State layout (mu, nu, master) mirrors the parameter tree, so
+the ZeRO sharding rules for a parameter apply leaf-wise to its state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * step
+        return mu, nu, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_ma = jax.tree.leaves(state["master"])
+    out = [upd(g, m, n, ma) for g, m, n, ma in
+           zip(flat_g, flat_mu, flat_nu, flat_ma)]
+    new_mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"mu": new_mu, "nu": new_nu, "master": new_master,
+                 "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}

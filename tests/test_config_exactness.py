@@ -1,0 +1,62 @@
+"""The assigned-architecture configs must match the assignment table
+EXACTLY (layers, d_model, heads, kv heads, d_ff, vocab, MoE/SSM specifics).
+Guards against drift while refactoring config machinery."""
+import pytest
+
+from repro.configs import get_config
+
+# (arch id, L, d_model, H, kv, d_ff, vocab, extras)
+TABLE = [
+    ("granite-moe-1b-a400m", 24, 1024, 16, 8, None, 49155,
+     dict(moe=(32, 8, 512))),
+    ("moonshot-v1-16b-a3b", 48, 2048, 16, 16, None, 163840,
+     dict(moe=(64, 6, 1408))),
+    ("xlstm-1.3b", 48, 2048, 4, 4, 0, 50304, dict(family="ssm")),
+    ("phi3.5-moe-42b-a6.6b", 32, 4096, 32, 8, None, 32064,
+     dict(moe=(16, 2, 6400))),
+    ("seamless-m4t-medium", 12, 1024, 16, 16, 4096, 256206,
+     dict(encdec=True)),
+    ("llava-next-34b", 60, 7168, 56, 8, 20480, 64000, dict(vlm=True)),
+    ("starcoder2-15b", 40, 6144, 48, 4, 24576, 49152, {}),
+    ("internlm2-20b", 48, 6144, 48, 8, 16384, 92544, {}),
+    ("minitron-4b", 32, 3072, 24, 8, 9216, 256000, {}),
+    ("zamba2-2.7b", 54, 2560, 32, 32, 10240, 32000,
+     dict(family="hybrid", ssm_state=64)),
+]
+
+
+@pytest.mark.parametrize("arch,L,d,H,kv,dff,V,extras",
+                         TABLE, ids=[t[0] for t in TABLE])
+def test_config_matches_assignment(arch, L, d, H, kv, dff, V, extras):
+    cfg = get_config(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.vocab_size == V
+    if dff is not None:
+        assert cfg.d_ff == dff
+    if "moe" in extras:
+        E, K, de = extras["moe"]
+        assert cfg.moe is not None
+        assert cfg.moe.num_experts == E
+        assert cfg.moe.top_k == K
+        assert cfg.moe.d_expert == de
+    if extras.get("family"):
+        assert cfg.family == extras["family"]
+    if extras.get("ssm_state"):
+        assert cfg.ssm is not None
+        assert cfg.ssm.state_dim == extras["ssm_state"]
+    if extras.get("encdec"):
+        assert cfg.encoder_layers > 0
+    if extras.get("vlm"):
+        assert cfg.num_image_tokens > 0 and cfg.frontend_dim > 0
+
+
+def test_reduced_variants_are_smoke_sized():
+    for t in TABLE:
+        cfg = get_config(t[0], reduced=True)
+        assert cfg.n_layers <= 4
+        assert cfg.d_model <= 512
+        if cfg.moe is not None:
+            assert cfg.moe.num_experts <= 4

@@ -1,0 +1,125 @@
+"""Decode-path correctness: sequential one-token decode must reproduce the
+full-sequence forward pass (KV cache / recurrent states are exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.models import model as mm
+
+
+def _tokens(cfg, B, S):
+    rng = np.random.default_rng(7)
+    return jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)), jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama-0.5b", "starcoder2-15b"])
+def test_dense_decode_matches_forward(arch):
+    cfg = replace(get_config(arch, reduced=True), param_dtype="float32",
+                  dtype="float32")
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 12
+    toks = _tokens(cfg, B, S)
+    hidden, _ = mm.forward(params, cfg, {"tokens": toks})
+    full_logits = mm.lm_logits(params, cfg, hidden)        # (B,S,V)
+
+    state = mm.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = mm.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_decode_matches_forward():
+    cfg = replace(get_config("zamba2-2.7b", reduced=True),
+                  param_dtype="float32", dtype="float32")
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 10
+    toks = _tokens(cfg, B, S)
+    hidden, _ = mm.forward(params, cfg, {"tokens": toks})
+    full_logits = mm.lm_logits(params, cfg, hidden)
+    state = mm.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = mm.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_slstm_decode_matches_forward():
+    cfg = replace(get_config("xlstm-1.3b", reduced=True),
+                  param_dtype="float32", dtype="float32")
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 8
+    toks = _tokens(cfg, B, S)
+    hidden, _ = mm.forward(params, cfg, {"tokens": toks})
+    full_logits = mm.lm_logits(params, cfg, hidden)
+    state = mm.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = mm.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_fp8_kv_cache_decode_close_to_bf16():
+    """fp8 cache storage (§Perf/P2 follow-up) must track the full-precision
+    decode within fp8 quantization error."""
+    cfg = replace(get_config("llama-0.5b", reduced=True),
+                  param_dtype="float32", dtype="float32")
+    cfg8 = replace(cfg, kv_cache_dtype="float8_e4m3fn")
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 10
+    toks = _tokens(cfg, B, S)
+
+    def run(c):
+        state = mm.init_decode_state(c, B, S)
+        outs = []
+        for t in range(S):
+            lg, state = mm.decode_step(params, c, toks[:, t:t + 1], state)
+            outs.append(lg[:, 0])
+        return jnp.stack(outs, axis=1)
+
+    ref = np.asarray(run(cfg), np.float32)
+    q8 = np.asarray(run(cfg8), np.float32)
+    assert mm.init_decode_state(cfg8, B, S)["layers"]["pos0"]["k"].dtype == \
+        jnp.float8_e4m3fn
+    # fp8 e4m3 has ~2 decimal digits; logits should stay close in rank
+    err = np.abs(ref - q8) / (np.abs(ref) + 1.0)
+    assert np.median(err) < 0.05, float(np.median(err))
+    assert np.isfinite(q8).all()
+
+
+def test_sliding_window_decode_ring_buffer():
+    """With window W, decode beyond W must equal a forward pass that masks
+    tokens older than W (ring-buffer cache correctness)."""
+    cfg = replace(get_config("llama-0.5b", reduced=True),
+                  param_dtype="float32", dtype="float32")
+    W = 4
+    B, S = 1, 10
+    toks = _tokens(cfg, B, S)
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    hidden, _ = mm.forward(params, cfg, {"tokens": toks}, window=W)
+    full_logits = mm.lm_logits(params, cfg, hidden)
+    state = mm.init_decode_state(cfg, B, W)  # cache only W slots
+    outs = []
+    for t in range(S):
+        lg, state = mm.decode_step(params, cfg, toks[:, t:t + 1], state,
+                                   window=W)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,103 @@
+"""Hetero batch layout + data pipeline + simulator + checkpoint tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.allocation import (AllocationPlan, DeviceAssignment,
+                                   allocate_stage01, fit_curve)
+from repro.core.cluster import make_cluster
+from repro.core.hetero import (HeteroBatchLayout, build_masks,
+                               layout_from_plan, pack_batch)
+from repro.core.planner import make_runners
+from repro.core.profiler import profile_cluster
+from repro.core.simulator import simulate_plan
+from repro.core.workload import train_flops_per_token
+from repro.data.pipeline import (ByteTokenizer, HeteroDataLoader,
+                                 SyntheticTokens)
+
+CFG = get_config("llama-0.5b")
+
+
+def _plan(gbs=64):
+    cluster = make_cluster("t", [("V100-16G", 2), ("T4-16G", 2)])
+    runners = make_runners(cluster, CFG, 512, 0)
+    profs = profile_cluster(runners, 0)
+    curves = {n: fit_curve(p) for n, p in profs.items()}
+    return allocate_stage01(curves, gbs), curves, cluster
+
+
+def test_layout_covers_plan_batch():
+    plan, _, _ = _plan(64)
+    layout = layout_from_plan(plan, group_multiple=2)
+    assert layout.total_real() == plan.total_batch
+    assert layout.padded_group_batch % 2 == 0
+
+
+def test_masks_match_layout():
+    plan, _, _ = _plan(96)
+    layout = layout_from_plan(plan)
+    masks = build_masks(layout)
+    assert masks.shape == (layout.gas, layout.padded_global_batch)
+    assert int(masks.sum()) == layout.total_real()
+
+
+@given(st.integers(8, 512))
+@settings(max_examples=10, deadline=None)
+def test_pack_batch_exact_token_accounting(gbs):
+    plan, _, _ = _plan(gbs)
+    layout = layout_from_plan(plan)
+    seq = 16
+    rows = SyntheticTokens(1000, seq).rows(layout.total_real())
+    packed = pack_batch(rows, layout, seq)
+    # every real row appears exactly once; mask counts the real rows
+    n_real = int(packed["loss_mask"][:, :, 0].sum())
+    assert n_real == min(layout.total_real(), len(rows)) == gbs
+    # labels are the shifted tokens
+    got = packed["tokens"][packed["loss_mask"][:, :, 0] > 0]
+    assert got.shape[0] == gbs
+
+
+def test_hetero_loader_stream():
+    plan, _, _ = _plan(32)
+    layout = layout_from_plan(plan)
+    src = SyntheticTokens(1000, 16)
+    loader = HeteroDataLoader(src, layout, 16)
+    b1 = loader.next_batch()
+    b2 = loader.next_batch()
+    assert b1["tokens"].shape == b2["tokens"].shape
+    assert not np.array_equal(b1["tokens"], b2["tokens"])  # new epoch data
+
+
+def test_simulator_invariants():
+    plan, curves, cluster = _plan(128)
+    fps = train_flops_per_token(CFG, 512) * 512
+    res = simulate_plan(plan, curves, CFG, 512, cluster, fps)
+    assert res.iter_time >= max(res.device_busy.values())
+    assert 0 < res.utilization <= 1.0
+    assert res.samples == 128
+    assert res.cluster_tflops > 0
+
+
+def test_byte_tokenizer_roundtrip():
+    t = ByteTokenizer()
+    s = "Poplar: heterogeneity-aware ZeRO."
+    assert t.decode(t.encode(s)) == s
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.models import model as mm
+    from repro.optim.adamw import adamw_init
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    save_checkpoint(str(tmp_path), 7, params, opt)
+    step, p2, o2 = restore_checkpoint(str(tmp_path), None, params, opt)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert int(o2["count"]) == 0

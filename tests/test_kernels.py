@@ -1,0 +1,150 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ------------------------------------------------------- flash attention --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,D", [
+    (1, 1, 64, 32), (2, 3, 128, 64), (1, 2, 200, 64),  # non-multiple S
+    (1, 1, 256, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, S, D, dtype, causal):
+    q, k, v = (_rand((B, H, S, D), dtype) for _ in range(3))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                 block_k=64, interpret=True)
+    want = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[dtype])
+
+
+# --------------------------------------------------------- flash decode --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,D", [
+    (1, 2, 64, 32), (2, 4, 256, 64), (1, 2, 200, 64),  # non-multiple S
+])
+@pytest.mark.parametrize("filled_frac", [0.01, 0.4, 1.0])
+def test_flash_decode_sweep(B, H, S, D, dtype, filled_frac):
+    from repro.kernels.flash_decode import flash_decode_pallas
+    filled = max(int(S * filled_frac), 1)
+    q = _rand((B, H, 1, D), dtype)
+    k = _rand((B, H, S, D), dtype)
+    v = _rand((B, H, S, D), dtype)
+    got = flash_decode_pallas(q, k, v, jnp.int32(filled), block_k=64,
+                              interpret=True)
+    want = ref.decode_attention_reference(q, k, v, filled)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_decode_matches_model_decode_softmax():
+    """Kernel vs the exact masked softmax the model decode path computes."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    B, H, S, D = 2, 4, 96, 32
+    q = _rand((B, H, 1, D), jnp.float32)
+    kc = _rand((B, H, S, D), jnp.float32)
+    vc = _rand((B, H, S, D), jnp.float32)
+    filled = 40
+    got = flash_decode_pallas(q, kc, vc, jnp.int32(filled), block_k=32,
+                              interpret=True)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / jnp.sqrt(D)
+    valid = jnp.arange(S)[None, None, None, :] < filled
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 1000])
+def test_flash_attention_sliding_window(window):
+    q, k, v = (_rand((1, 2, 160, 32), jnp.float32) for _ in range(3))
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=32, block_k=32, interpret=True)
+    want = ref.attention_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_reference_path():
+    """Kernel vs the model's chunked jnp attention (the path the dry-run
+    compiles) — the two long-seq implementations must agree."""
+    from repro.models.layers import _chunk_attn_flash
+    q, k, v = (_rand((2, 2, 192, 64), jnp.float32) for _ in range(3))
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                 block_q=64, block_k=64)
+    want = _chunk_attn_flash(q, k, v, causal=True, window=None,
+                             q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- rmsnorm --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 37, 256), (1, 1, 512),
+                                   (3, 130, 64)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = _rand(shape, dtype)
+    s = _rand(shape[-1:], dtype)
+    got = rmsnorm_pallas(x, s, interpret=True, block_rows=32)
+    want = ref.rmsnorm_reference(x, s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# ------------------------------------------------------------ mamba scan --
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 8, 4, 16), (2, 96, 4, 16, 8, 32),
+    (1, 100, 1, 32, 16, 32),  # S not a multiple of chunk
+    (1, 128, 2, 64, 64, 64),  # zamba2-like head_dim/state
+])
+def test_mamba_scan_sweep(B, S, H, P, N, chunk):
+    xh = _rand((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = _rand((B, S, N), jnp.float32)
+    Cm = _rand((B, S, N), jnp.float32)
+    got = mamba_scan_pallas(xh, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    want = ref.ssd_reference(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_scan_matches_model_chunked_path():
+    from repro.models.ssm import _ssd_chunked
+    B, S, H, P, N = 2, 80, 2, 16, 8
+    xh = _rand((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(np.log(RNG.uniform(0.5, 2.0, (H,))), jnp.float32)
+    Bm = _rand((B, S, N), jnp.float32)
+    Cm = _rand((B, S, N), jnp.float32)
+    want, _ = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=16)
+    got = mamba_scan_pallas(xh, dt, -jnp.exp(A), Bm, Cm, chunk=16,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,156 @@
+"""MoE dispatch correctness: grouped routing (§Perf/P1) vs the
+paper-faithful per-sequence-capacity baseline, plus invariants."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.models import moe as M
+
+
+def _cfg(E=4, K=2, d=32, d_expert=64, cf=4.0, g=None):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab_size=64,
+        moe=MoEConfig(num_experts=E, top_k=K, d_expert=d_expert,
+                      capacity_factor=cf, group_size=g))
+
+
+def _params(cfg, key=0):
+    from repro.models.param import split
+    values, _ = split(M.moe_init(jax.random.PRNGKey(key), cfg))
+    return values
+
+
+def test_grouped_matches_ungrouped_when_no_drops():
+    """With capacity_factor high enough that nothing drops, grouping the
+    sequence must not change any token's output (router is pointwise)."""
+    cfg0 = _cfg(cf=8.0, g=None)
+    cfg_g = replace(cfg0, moe=replace(cfg0.moe, group_size=8))
+    params = _params(cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32), jnp.float32)
+    y0, aux0 = M.moe_apply(params, x, cfg0)
+    y1, aux1 = M.moe_apply(params, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(float(aux0), float(aux1), rtol=1e-5)
+
+
+@pytest.mark.parametrize("g", [None, 8, 16])
+def test_moe_output_shape_and_finite(g):
+    cfg = _cfg(g=g)
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 32), jnp.float32)
+    y, aux = M.moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_group_size_ignored_when_not_divisible_or_larger():
+    cfg = _cfg(g=1000)   # does not divide S=32 -> falls back to baseline
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32), jnp.float32)
+    y_g, _ = M.moe_apply(params, x, cfg)
+    y_b, _ = M.moe_apply(params, x, _cfg(g=None))
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_b), rtol=1e-5)
+
+
+def test_capacity_drops_passthrough_residual():
+    """Tokens over capacity contribute zero from the MoE (their residual
+    passes through at the block level); output stays finite and bounded."""
+    cfg = _cfg(cf=0.25, g=None)      # brutal capacity squeeze
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 64, 32), jnp.float32)
+    y, _ = M.moe_apply(params, x, cfg)
+    # dropped tokens give exactly 0 rows; kept rows finite
+    assert np.isfinite(np.asarray(y)).all()
+    # at cf=0.25 with top2-of-4 at least half the slots are gone
+    zero_rows = (np.abs(np.asarray(y)).sum(-1) == 0).mean()
+    assert zero_rows > 0.1
+
+
+@given(E=st.sampled_from([2, 4, 8]), K=st.integers(1, 2),
+       g=st.sampled_from([4, 8, 16]), seed=st.integers(0, 10**6))
+@settings(max_examples=12, deadline=None)
+def test_grouping_invariance_property(E, K, g, seed):
+    """Property: for any (E, K, g) with capacity high enough that no
+    token drops, grouped and ungrouped dispatch agree — routing is
+    pointwise, so the group boundaries must be unobservable."""
+    K = min(K, E)
+    cfg0 = _cfg(E=E, K=K, cf=float(2 * E), g=None)
+    cfg_g = replace(cfg0, moe=replace(cfg0.moe, group_size=g))
+    params = _params(cfg0, key=seed % 97)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 32, 32), jnp.float32)
+    y0, _ = M.moe_apply(params, x, cfg0)
+    y1, _ = M.moe_apply(params, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=3e-2, atol=3e-2)
+
+
+def _dense_oracle(params, x, cfg):
+    """Exact dropless reference: every expert computes every token; gates
+    mask the combination. O(E*tokens) compute — tests only."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros((B, S, E), jnp.float32)
+    for j in range(K):
+        w = w + gate[..., j, None] * jax.nn.one_hot(idx[..., j], E)
+    g = jnp.einsum("bsd,edf->bsef", x, params["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,edf->bsef", x, params["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("bsef,efd->bsed", h, params["wo"].astype(x.dtype))
+    return jnp.einsum("bse,bsed->bsd", w.astype(x.dtype), ye)
+
+
+def test_ragged_matches_dense_oracle_exactly():
+    """The ragged_dot path is dropless: it must equal the exact
+    every-expert oracle (no capacity approximation at all)."""
+    cfg = _cfg(cf=1.0)
+    cfg = replace(cfg, moe=replace(cfg.moe, impl="ragged"))
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 48, 32), jnp.float32)
+    y, _ = M.moe_apply(params, x, cfg)
+    y_ref = _dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ragged_grad_finite():
+    cfg = replace(_cfg(), moe=replace(_cfg().moe, impl="ragged"))
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 16, 32), jnp.float32)
+
+    def loss(p):
+        y, aux = M.moe_apply(p, x, cfg)
+        return (y ** 2).mean() + aux
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_grouped_reduces_dispatch_footprint():
+    """The lowered HLO bytes of the grouped variant must be well below the
+    ungrouped baseline at long sequence (the §Perf/P1 claim, in miniature)."""
+    cfg0 = _cfg(cf=1.25, g=None)
+    cfg_g = replace(cfg0, moe=replace(cfg0.moe, group_size=32))
+    params = _params(cfg0)
+    x = jax.ShapeDtypeStruct((1, 1024, 32), jnp.float32)
+
+    def bytes_of(cfg):
+        ca = jax.jit(lambda p, xv: M.moe_apply(p, xv, cfg)[0]).lower(
+            params, x).cost_analysis()
+        return ca.get("bytes accessed", 0.0)
+
+    assert bytes_of(cfg_g) < 0.25 * bytes_of(cfg0)

@@ -1,0 +1,87 @@
+"""Property tests for the natural cubic spline (paper appendix)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.spline import CubicSpline, fit_natural_cubic, max_of_spline
+
+
+@st.composite
+def knot_data(draw, min_pts=3, max_pts=12):
+    n = draw(st.integers(min_pts, max_pts))
+    xs = draw(st.lists(st.floats(0.1, 1000, allow_nan=False),
+                       min_size=n, max_size=n, unique=True))
+    xs = sorted(xs)
+    # ensure separation so the tridiagonal system is well conditioned
+    xs = [x + i * 1e-3 for i, x in enumerate(xs)]
+    ys = draw(st.lists(st.floats(-100, 100, allow_nan=False),
+                       min_size=n, max_size=n))
+    return np.array(xs), np.array(ys)
+
+
+@given(knot_data())
+@settings(max_examples=60, deadline=None)
+def test_interpolates_knots(data):
+    xs, ys = data
+    sp = fit_natural_cubic(xs, ys)
+    np.testing.assert_allclose(sp(xs), ys, rtol=1e-8, atol=1e-7)
+
+
+@given(knot_data(min_pts=4))
+@settings(max_examples=60, deadline=None)
+def test_c1_c2_continuity_at_interior_knots(data):
+    """Algebraic continuity of S' and S'' at each interior knot (exact
+    left-segment polynomial evaluated at the knot vs right coefficients)."""
+    xs, ys = data
+    sp = fit_natural_cubic(xs, ys)
+    h = np.diff(sp.x)
+    for i in range(len(xs) - 2):
+        # derivative of segment i at its right end vs segment i+1 at left
+        d_left = sp.b[i] + 2 * sp.c[i] * h[i] + 3 * sp.d[i] * h[i] ** 2
+        d_right = sp.b[i + 1]
+        scale = max(abs(d_left), abs(d_right), 1.0)
+        assert abs(d_left - d_right) / scale < 1e-6
+        # second derivative
+        s_left = 2 * sp.c[i] + 6 * sp.d[i] * h[i]
+        s_right = 2 * sp.c[i + 1]
+        scale2 = max(abs(s_left), abs(s_right), 1.0)
+        assert abs(s_left - s_right) / scale2 < 1e-6
+
+
+@given(st.integers(3, 10), st.floats(-5, 5), st.floats(-5, 5))
+@settings(max_examples=40, deadline=None)
+def test_linear_data_reproduced(n, a, b):
+    xs = np.arange(1, n + 1, dtype=float)
+    ys = a * xs + b
+    sp = fit_natural_cubic(xs, ys)
+    grid = np.linspace(1, n, 50)
+    np.testing.assert_allclose(sp(grid), a * grid + b, rtol=1e-6, atol=1e-6)
+
+
+def test_natural_boundary_second_derivative_zero():
+    xs = np.array([1.0, 2.0, 4.0, 7.0, 11.0])
+    ys = np.array([1.0, 3.0, 2.0, 5.0, 4.0])
+    sp = fit_natural_cubic(xs, ys)
+    # c coefficients are S''/2 at knots; natural BC => c[0] == c[-1] == 0
+    assert abs(sp.c[0]) < 1e-12
+    assert abs(sp.c[-1]) < 1e-12
+
+
+def test_max_of_spline_finds_peak():
+    xs = np.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0])
+    ys = -(xs - 8.0) ** 2 + 100.0
+    sp = fit_natural_cubic(xs, ys)
+    argmax, mx = max_of_spline(sp, 1.0, 32.0)
+    assert 6.0 < argmax < 10.0
+    assert mx >= 99.0
+
+
+def test_spline_error_small_on_saturating_curve():
+    """Fig. 7 of the paper: spline vs dense ground truth on a GPU-like
+    saturating speed curve — interpolation error should be ~0."""
+    b = np.arange(1.0, 65.0)
+    speed = 100.0 * b / (b + 4.0)
+    knots = np.array([1, 2, 4, 8, 16, 24, 32, 48, 64], dtype=float)
+    sp = fit_natural_cubic(knots, 100.0 * knots / (knots + 4.0))
+    rel_err = np.abs(sp(b) - speed) / speed
+    assert rel_err.max() < 0.02

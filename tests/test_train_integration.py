@@ -1,0 +1,85 @@
+"""End-to-end integration: Poplar plan -> hetero loader -> masked train
+steps; loss decreases; hetero-masked gradients equal dense gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sharding import MeshRules
+from repro.core.zero import make_train_step, register_axes
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as mm
+from repro.optim.adamw import adamw_init
+
+
+def test_loss_decreases_small_llama():
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    rules = MeshRules(make_debug_mesh(1), zero_stage=0)
+    register_axes(rules, axes)
+    step = jax.jit(make_train_step(cfg, rules, lr=3e-3))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    # tiny memorizable dataset
+    toks = jnp.asarray(rng.integers(3, 64, (4, 33)), jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_mask": jnp.ones((4, 32), jnp.float32)}
+    losses = []
+    for _ in range(30):
+        params, opt, met = step(params, opt, batch)
+        losses.append(float(met["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_masked_padding_rows_do_not_change_gradients():
+    """The SPMD hetero layout's correctness hinge: a batch padded with
+    masked rows must produce identical loss/gradients to the dense batch."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (4, 17)), jnp.int32)
+    dense = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_mask": jnp.ones((4, 16), jnp.float32)}
+    # pad with 4 garbage rows, masked out
+    junk = jnp.asarray(rng.integers(3, cfg.vocab_size, (4, 16)), jnp.int32)
+    padded = {
+        "tokens": jnp.concatenate([dense["tokens"], junk]),
+        "labels": jnp.concatenate([dense["labels"], junk]),
+        "loss_mask": jnp.concatenate(
+            [dense["loss_mask"], jnp.zeros((4, 16), jnp.float32)]),
+    }
+
+    def loss(p, b):
+        return mm.loss_fn(p, cfg, b)[0]
+
+    l1, g1 = jax.value_and_grad(loss)(params, dense)
+    l2, g2 = jax.value_and_grad(loss)(params, padded)
+    assert abs(float(l1) - float(l2)) < 1e-4
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=3e-3)
+
+
+def test_grad_accumulation_matches_single_batch():
+    """gas>1 (Poplar's gmbs/lbs loop) must match the one-shot gradient."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    rules = MeshRules(make_debug_mesh(1), zero_stage=0)
+    register_axes(rules, axes)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (4, 17)), jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_mask": jnp.ones((4, 16), jnp.float32)}
+    stacked = jax.tree.map(lambda x: x.reshape((2, 2) + x.shape[1:]), batch)
+    opt = adamw_init(params)
+    one = jax.jit(make_train_step(cfg, rules, lr=1e-3))
+    acc = jax.jit(make_train_step(cfg, rules, lr=1e-3, accum_steps=2))
+    p1, _, m1 = one(params, opt, batch)
+    p2, _, m2 = acc(params, opt, stacked)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2, atol=3e-3)
