@@ -1,6 +1,8 @@
 """§Perf baseline-vs-variant comparison rows, read from the dry-run
-artifacts. One row per (arch, shape, mesh, variant) with the dominant-term
-speedup over the same combo's baseline artifact."""
+artifacts, plus a live fwd+bwd attention kernel timing: the jnp reference
+(chunked online-softmax) vs the custom-VJP Pallas flash kernels under
+``jax.value_and_grad``, with (block_q, block_k) taken from the autotuner
+(which persists its sweep to the on-disk cache as a side effect)."""
 from __future__ import annotations
 
 import json
@@ -9,6 +11,67 @@ from typing import Dict, List
 
 from benchmarks.common import csv_row
 from benchmarks.roofline import DRYRUN_DIR, roofline_terms
+
+
+def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
+                           D: int = 64) -> List[str]:
+    """Train-path (value_and_grad) attention timing: reference vs Pallas."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import autotune
+    from repro.kernels.flash_attention import flash_attention_vjp
+    from repro.kernels.ops import _interpret_default
+    from repro.models.layers import _chunk_attn_flash
+
+    interpret = _interpret_default()
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+               for _ in range(3))
+
+    def make_pallas(bq, bk):
+        @jax.jit
+        def fwd_bwd(q, k, v):
+            def loss(q, k, v):
+                return flash_attention_vjp(
+                    q, k, v, causal=True, block_q=bq, block_k=bk,
+                    interpret=interpret).astype(jnp.float32).sum()
+            return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+        return lambda: fwd_bwd(q, k, v)
+
+    # Tune under the key the training path (ops.flash_attention) reads.
+    # Interpret mode never sweeps: timings there measure the traced-Python
+    # interpreter, not hardware — the static-table lookup still writes the
+    # key through to the on-disk cache.
+    kw = dict(S=S, D=D, dtype="float32", causal=True, window=None)
+    if interpret:
+        bq, bk = autotune.lookup("flash_fwd", interpret=True, **kw)
+    else:
+        bq, bk = autotune.tune(
+            "flash_fwd", make_pallas,
+            candidates=((64, 64), (128, 64), (128, 128)), iters=3, **kw)
+
+    @jax.jit
+    def ref_fwd_bwd(q, k, v):
+        def loss(q, k, v):
+            return _chunk_attn_flash(q, k, v, causal=True, window=None
+                                     ).astype(jnp.float32).sum()
+        return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    ms_ref = autotune.median_ms(lambda: ref_fwd_bwd(q, k, v))
+    ms_pal = autotune.median_ms(make_pallas(bq, bk))
+    mode = "interpret" if interpret else "compiled"
+    shape = f"B{B}H{H}S{S}D{D}"
+    return [
+        csv_row(f"perf/kernels/attn_fwd_bwd/{shape}/reference",
+                ms_ref * 1e3, f"mode=jnp-chunked;ms={ms_ref:.3f}"),
+        csv_row(f"perf/kernels/attn_fwd_bwd/{shape}/pallas",
+                ms_pal * 1e3,
+                f"mode={mode};blocks=({bq},{bk});ms={ms_pal:.3f};"
+                f"speedup={ms_ref / ms_pal:.2f}x;"
+                f"autotune_cache={autotune.cache_path()}"),
+    ]
 
 
 def run() -> List[str]:
@@ -48,6 +111,11 @@ def run() -> List[str]:
     if not rows:
         rows.append(csv_row("perf/missing", 0.0,
                             "no variant artifacts; run dryrun --variant"))
+    try:
+        rows.extend(attention_fwd_bwd_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/kernels/attn_fwd_bwd/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
     return rows
 
 

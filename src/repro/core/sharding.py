@@ -46,6 +46,20 @@ DEFAULT_LOGICAL_RULES: Dict[str, Tuple] = {
 }
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across JAX versions: the function moved from
+    jax.experimental.shard_map to jax.shard_map, and the replication-check
+    kwarg was renamed check_rep -> check_vma. Always disables the check
+    (our local_fns mix replicated and sharded outputs)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def _axis_size(mesh: Mesh, axes) -> int:
     size = 1
     for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):

@@ -82,8 +82,14 @@ def make_train_step(cfg: ModelConfig, rules: MeshRules,
     with per-microbatch loss masks — the SPMD realization of Poplar's
     gmbs/lbs schedule (uneven per-device accumulation becomes masked rows;
     see core/hetero.py).
+
+    ``impl="auto"`` resolves to the Pallas kernel path on backends where
+    it compiles natively and to the jnp reference elsewhere (see
+    ``repro.kernels.ops.recommended_impl``); ``"pallas"`` forces the
+    custom-VJP kernels (interpret mode included).
     """
     stage = rules.zero_stage
+    impl = _resolve_impl(impl)
 
     def loss_of(params, batch):
         return mm.loss_fn(params, cfg, batch, window=window, impl=impl)
@@ -145,9 +151,18 @@ def register_axes(rules: MeshRules, axes) -> None:
     _AXES_CACHE[id(rules)] = axes
 
 
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        from repro.kernels.ops import recommended_impl
+        return recommended_impl()
+    return impl
+
+
 def make_prefill_step(cfg: ModelConfig, rules: MeshRules,
                       window: Optional[int] = None, impl: str = "reference"
                       ) -> Callable:
+    impl = _resolve_impl(impl)
+
     def prefill_step(params, batch):
         with use_rules(rules):
             return mm.prefill(params, cfg, batch, window=window, impl=impl)

@@ -1,0 +1,184 @@
+"""Block-size autotuner for the Pallas kernels.
+
+HARP-style automated per-device tuning: the best ``(block_q, block_k)``
+tile for flash attention depends on sequence length, head dim, dtype and
+masking pattern, and differs across accelerator generations. Rather than
+hard-coding 128x128 everywhere, the tuner
+
+  1. answers lookups from an in-process cache,
+  2. then from a JSON disk cache (``~/.cache/repro/autotune.json``,
+     override with ``REPRO_AUTOTUNE_CACHE``) so the sweep cost is paid
+     once per machine,
+  3. and otherwise falls back to a deterministic static table — always
+     used in interpret mode, where timing the traced-Python kernel body
+     would tune for the interpreter, not the hardware.
+
+``tune(...)`` runs the actual candidate sweep (compile + median-of-k
+timing) and writes the winner through both caches. The train step never
+sweeps implicitly: lookups inside a traced function only read the cache
+or the static table, keeping tracing deterministic.
+
+Cache file format — one JSON object per key::
+
+  {"flash_fwd|S512|D128|bfloat16|c1|w0":
+     {"blocks": [128, 128], "ms": 0.41, "source": "measured"}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["cache_path", "key_of", "lookup", "median_ms", "record",
+           "static_blocks", "tune", "clear_memory_cache", "CANDIDATES"]
+
+# (block_q, block_k) sweep grid; pruned per shape to blocks <= padded S
+CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (64, 64), (64, 128), (128, 64), (128, 128),
+    (128, 256), (256, 128), (256, 256), (512, 128),
+)
+
+_MEM_CACHE: Dict[str, Tuple[int, int]] = {}
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def clear_memory_cache() -> None:
+    _MEM_CACHE.clear()
+
+
+def key_of(kind: str, *, S: int, D: int, dtype: str, causal: bool,
+           window: Optional[int]) -> str:
+    return f"{kind}|S{S}|D{D}|{dtype}|c{int(causal)}|w{window or 0}"
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def static_blocks(*, S: int, D: int, dtype: str = "float32",
+                  causal: bool = True,
+                  window: Optional[int] = None) -> Tuple[int, int]:
+    """Deterministic fallback: MXU-aligned 128 tiles, shrunk for short
+    sequences (and for sliding windows narrower than a 128 tile, where a
+    big block wastes its area on masked keys)."""
+    blk = min(128, _pow2_floor(max(S, 8)))
+    bk = blk
+    if window is not None:
+        bk = min(bk, max(32, _pow2_floor(window)))
+    return blk, bk
+
+
+def _read_disk() -> Dict[str, dict]:
+    fp = cache_path()
+    try:
+        return json.loads(fp.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def _write_disk(entries: Dict[str, dict]) -> None:
+    fp = cache_path()
+    try:
+        fp.parent.mkdir(parents=True, exist_ok=True)
+        merged = _read_disk()
+        merged.update(entries)
+        tmp = fp.with_suffix(".json.tmp")
+        tmp.write_text(json.dumps(merged, indent=1, sort_keys=True))
+        tmp.replace(fp)
+    except OSError:  # read-only FS etc. — the in-process cache still works
+        pass
+
+
+def record(key: str, blocks: Tuple[int, int], *, ms: Optional[float] = None,
+           source: str = "measured") -> None:
+    _MEM_CACHE[key] = tuple(blocks)
+    entry = {"blocks": list(blocks), "source": source}
+    if ms is not None:
+        entry["ms"] = round(ms, 5)
+    _write_disk({key: entry})
+
+
+def lookup(kind: str, *, S: int, D: int, dtype: str, causal: bool = True,
+           window: Optional[int] = None,
+           interpret: bool = False) -> Tuple[int, int]:
+    """Cached (block_q, block_k) for a kernel-shape key; never sweeps."""
+    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window)
+    hit = _MEM_CACHE.get(key)
+    if hit is not None:
+        return hit
+    disk = _read_disk().get(key)
+    if disk and "blocks" in disk and len(disk["blocks"]) == 2:
+        blocks = (int(disk["blocks"][0]), int(disk["blocks"][1]))
+        _MEM_CACHE[key] = blocks
+        return blocks
+    blocks = static_blocks(S=S, D=D, dtype=dtype, causal=causal,
+                           window=window)
+    # record the static choice so the cache file documents every key the
+    # run touched (interpret-mode runs produce a fully static table)
+    record(key, blocks, source="static" if interpret else "static-default")
+    return blocks
+
+
+def median_ms(fn: Callable[[], object], iters: int = 3) -> float:
+    """Median wall-clock of ``fn()`` after one warm-up (compile) call."""
+    import jax
+    jax.block_until_ready(fn())          # compile / first-call overheads
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e3)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def tune(kind: str, make_fn: Callable[[int, int], Callable[[], object]], *,
+         S: int, D: int, dtype: str, causal: bool = True,
+         window: Optional[int] = None,
+         candidates: Optional[Sequence[Tuple[int, int]]] = None,
+         iters: int = 3, verbose: bool = False) -> Tuple[int, int]:
+    """Sweep candidates and cache the fastest.
+
+    ``make_fn(block_q, block_k)`` returns a zero-arg callable running the
+    kernel at that tile size (typically a jit closure over live inputs).
+    Candidates larger than the sequence collapse after the kernels'
+    ``min(block, S)`` clamp and are deduplicated before timing.
+    """
+    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window)
+    hit = _MEM_CACHE.get(key)
+    if hit is not None:
+        return hit
+    cand: List[Tuple[int, int]] = []
+    cap = _pow2_floor(max(S, 8))  # pow2 clamp keeps lcm(bq, bk) == max
+    for bq, bk in (candidates or CANDIDATES):
+        c = (min(bq, cap), min(bk, cap))
+        if c not in cand:
+            cand.append(c)
+    best, best_ms = None, float("inf")
+    for bq, bk in cand:
+        try:
+            ms = median_ms(make_fn(bq, bk), iters)
+        except Exception:  # candidate doesn't lower on this backend
+            continue
+        if verbose:
+            print(f"[autotune] {key} ({bq},{bk}) {ms:.3f} ms")
+        if ms < best_ms:
+            best, best_ms = (bq, bk), ms
+    if best is None:
+        best = static_blocks(S=S, D=D, dtype=dtype, causal=causal,
+                             window=window)
+        record(key, best, source="static-fallback")
+        return best
+    record(key, best, ms=best_ms, source="measured")
+    return best

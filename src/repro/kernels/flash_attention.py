@@ -1,4 +1,4 @@
-"""Blockwise causal flash attention — Pallas TPU kernel.
+"""Blockwise causal flash attention — Pallas TPU kernel, fwd + custom VJP.
 
 TPU-native adaptation (DESIGN.md §6): online-softmax over KV blocks staged
 through VMEM, MXU-aligned tiles (block_q x D and block_k x D, multiples of
@@ -8,13 +8,21 @@ iterates sequentially on TPU so scratch carries (m, l, acc) across KV
 blocks; fully-masked causal/window blocks are skipped via ``pl.when`` —
 the block-skipping the pure-jnp reference cannot do.
 
+Training path: the forward kernel additionally emits the per-row
+logsumexp ``L = m + log l`` so the backward pass (the recomputation
+scheme in ``flash_attention_bwd.py``) can rebuild ``p = exp(s - L)``
+block-by-block without materializing the S x S score matrix.
+``flash_attention_vjp`` wraps forward + backward in ``jax.custom_vjp``,
+which is what makes ``impl="pallas"`` usable under ``jax.value_and_grad``
+— a bare ``pallas_call`` has no autodiff rule.
+
 Heads arrive GQA-expanded from the wrapper, matching
 ``repro.models.layers._chunk_attn_flash`` (the oracle lives in ref.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +37,20 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
+def _lcm(a: int, b: int) -> int:
+    x, y = a, b
+    while y:
+        x, y = y, x % y
+    return a * b // x
+
+
+def _pad_len(S: int, block_q: int, block_k: int) -> int:
+    """Padded length divisible by BOTH blocks (unequal blocks included:
+    padding to max() alone truncates the grid for the smaller block)."""
+    m = _lcm(block_q, block_k)
+    return S + (-S) % m
+
+
 def _scratch_shapes(block_q: int, d: int):
     if _VMEM is not None:
         return [_VMEM((block_q,), jnp.float32),
@@ -39,8 +61,8 @@ def _scratch_shapes(block_q: int, d: int):
             jax.ShapeDtypeStruct((block_q, d), jnp.float32)]
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  block_q: int, block_k: int, seq_len: int, causal: bool,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
+                  *, block_q: int, block_k: int, seq_len: int, causal: bool,
                   window: Optional[int], scale: float, num_kv: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -88,21 +110,28 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == num_kv - 1)
     def _finalize():
-        denom = jnp.maximum(l_ref[...], 1e-20)
+        l = l_ref[...]
+        denom = jnp.maximum(l, 1e-20)
         o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        # L = m + log l; fully-masked (padded) rows get 0 so the backward
+        # recomputation exp(NEG_INF - 0) underflows to exactly 0.
+        lse_ref[0] = jnp.where(l > 0, m_ref[...] + jnp.log(denom), 0.0)
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool = True,
-                           window: Optional[int] = None,
-                           block_q: int = 128, block_k: int = 128,
-                           interpret: bool = False):
-    """q,k,v: (B, H, S, D), H already GQA-expanded. Returns (B, H, S, D)."""
+def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
+                               window: Optional[int] = None,
+                               block_q: int = 128, block_k: int = 128,
+                               interpret: bool = False):
+    """Forward with residual logsumexp.
+
+    q,k,v: (B, H, S, D), H already GQA-expanded.
+    Returns (out (B,H,S,D), lse (B,H,S) float32).
+    """
     B, H, S, D = q.shape
     assert k.shape == v.shape == (B, H, S, D)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
-    blk = max(block_q, block_k)
-    pad = (-S) % blk
+    pad = _pad_len(S, block_q, block_k) - S
     if pad:
         padcfg = ((0, 0), (0, 0), (0, pad), (0, 0))
         q = jnp.pad(q, padcfg)
@@ -116,7 +145,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
         causal=causal, window=window, scale=1.0 / (D ** 0.5), num_kv=nkv)
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nkv),
         in_specs=[
@@ -124,9 +153,78 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
             pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sp), jnp.float32),
+        ],
         scratch_shapes=_scratch_shapes(block_q, D),
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(B, H, Sp, D)[:, :, :S]
+    return (out.reshape(B, H, Sp, D)[:, :, :S],
+            lse.reshape(B, H, Sp)[:, :, :S])
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """Inference-path forward. q,k,v: (B,H,S,D). Returns (B,H,S,D)."""
+    out, _ = flash_attention_fwd_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# custom VJP (training path)
+# ---------------------------------------------------------------------------
+
+class AttnConfig(NamedTuple):
+    """Hashable static configuration threaded through the custom_vjp."""
+    causal: bool
+    window: Optional[int]
+    block_q: int
+    block_k: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_attention(cfg: AttnConfig, q, k, v):
+    out, _ = flash_attention_fwd_pallas(
+        q, k, v, causal=cfg.causal, window=cfg.window,
+        block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
+    return out
+
+
+def _flash_attention_fwd(cfg: AttnConfig, q, k, v):
+    out, lse = flash_attention_fwd_pallas(
+        q, k, v, causal=cfg.causal, window=cfg.window,
+        block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_attention_bwd(cfg: AttnConfig, residuals, do):
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
+    q, k, v, out, lse = residuals
+    return flash_attention_bwd_pallas(
+        q, k, v, out, lse, do, causal=cfg.causal, window=cfg.window,
+        block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """Differentiable flash attention (training entry point)."""
+    cfg = AttnConfig(causal=causal, window=window,
+                     block_q=min(block_q, q.shape[2]),
+                     block_k=min(block_k, q.shape[2]),
+                     interpret=interpret)
+    return _flash_attention(cfg, q, k, v)

@@ -1,0 +1,209 @@
+"""Flash-attention backward — Pallas dQ and dKV kernels (recomputation).
+
+Standard FlashAttention-2 backward: nothing O(S^2) is ever materialized.
+The forward saved only the per-row logsumexp ``L = m + log l``; each block
+of the backward recomputes ``s = qk^T * scale`` and ``p = exp(s - L)``,
+forms ``ds = p * (dp - delta)`` with ``dp = dO v^T`` and
+``delta = rowsum(dO * O)``, and accumulates
+
+  dQ  = sum_k (ds * scale) @ K      (grid: kv innermost, dQ in scratch)
+  dK  = sum_q (ds * scale)^T @ Q    (grid: q innermost, dK/dV in scratch)
+  dV  = sum_q p^T @ dO
+
+Both kernels reuse the forward's causal/window block-skipping (``pl.when``
+on the block coordinates), so the backward enjoys the same ~2x causal /
+O(window) sparsity win as the forward. ``delta`` is a cheap O(S*D)
+elementwise reduction done in plain jnp before the kernels launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import NEG_INF, _VMEM, _pad_len
+
+__all__ = ["flash_attention_bwd_pallas"]
+
+
+def _scratch(shape):
+    if _VMEM is not None:
+        return _VMEM(shape, jnp.float32)
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _block_needed(q_start, k_start, block_q, block_k, causal, window):
+    """False iff every (q, k) pair in the block is masked out."""
+    needed = jnp.asarray(True)
+    if causal:  # block fully above the diagonal
+        needed = jnp.logical_and(needed, k_start <= q_start + block_q - 1)
+    if window is not None:  # block fully left of the sliding window
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 >= q_start - window + 1)
+    return needed
+
+
+def _recompute_p(q, k, lse, q_start, k_start, *, seq_len, causal, window,
+                 scale):
+    """Rebuild the probability block p = exp(s - L) and its mask."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.logical_and(kpos < seq_len, qpos < seq_len)
+    if causal:
+        mask = jnp.logical_and(mask, qpos >= kpos)
+    if window is not None:
+        mask = jnp.logical_and(mask, qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    return p
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_acc, *, block_q: int, block_k: int, seq_len: int,
+               causal: bool, window: Optional[int], scale: float,
+               num_kv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = pl.program_id(1) * block_q
+    k_start = ki * block_k
+
+    @pl.when(_block_needed(q_start, k_start, block_q, block_k, causal, window))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)                 # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)               # (block_q, D)
+        p = _recompute_p(q, k, lse_ref[0], q_start, k_start,
+                         seq_len=seq_len, causal=causal, window=window,
+                         scale=scale)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0][:, None]) * scale    # (block_q, block_k)
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
+                block_k: int, seq_len: int, causal: bool,
+                window: Optional[int], scale: float, num_q: int):
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    k_start = pl.program_id(1) * block_k
+    q_start = qi * block_q
+
+    @pl.when(_block_needed(q_start, k_start, block_q, block_k, causal, window))
+    def _compute():
+        k = k_ref[0].astype(jnp.float32)                 # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        q = q_ref[0].astype(jnp.float32)                 # (block_q, D)
+        do = do_ref[0].astype(jnp.float32)
+        p = _recompute_p(q, k, lse_ref[0], q_start, k_start,
+                         seq_len=seq_len, causal=causal, window=window,
+                         scale=scale)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),             # p^T @ dO
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0][:, None]) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),             # ds^T @ Q
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == num_q - 1)
+    def _finalize():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
+                               window: Optional[int] = None,
+                               block_q: int = 128, block_k: int = 128,
+                               interpret: bool = False
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """dQ/dK/dV for ``flash_attention_fwd_pallas``.
+
+    q,k,v,out,do: (B,H,S,D); lse: (B,H,S) float32. Returns grads with the
+    input dtypes (accumulated in float32 inside the kernels).
+    """
+    B, H, S, D = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad = _pad_len(S, block_q, block_k) - S
+    # delta = rowsum(dO * O) — the softmax-jacobian correction term
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    if pad:
+        padcfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, padcfg)
+        k = jnp.pad(k, padcfg)
+        v = jnp.pad(v, padcfg)
+        do = jnp.pad(do, padcfg)
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, pad)))
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pad)))
+    Sp = q.shape[2]
+    nq, nkv = Sp // block_q, Sp // block_k
+    qf = q.reshape(B * H, Sp, D)
+    kf = k.reshape(B * H, Sp, D)
+    vf = v.reshape(B * H, Sp, D)
+    dof = do.reshape(B * H, Sp, D)
+    lsef = lse.reshape(B * H, Sp)
+    deltaf = delta.reshape(B * H, Sp)
+    scale = 1.0 / (D ** 0.5)
+
+    qspec = pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0))
+    kspec = pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0))
+    rowspec = pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
+                          seq_len=S, causal=causal, window=window,
+                          scale=scale, num_kv=nkv),
+        grid=(B * H, nq, nkv),
+        in_specs=[qspec, kspec, kspec, qspec, rowspec, rowspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[_scratch((block_q, D))],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    # dKV grid: kv blocks in the middle, q blocks innermost (sequential on
+    # TPU) so scratch accumulates over the q sweep for one kv block.
+    kspec2 = pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0))
+    qspec2 = pl.BlockSpec((1, block_q, D), lambda bh, ki, qi: (bh, qi, 0))
+    rowspec2 = pl.BlockSpec((1, block_q), lambda bh, ki, qi: (bh, qi))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q, block_k=block_k,
+                          seq_len=S, causal=causal, window=window,
+                          scale=scale, num_q=nq),
+        grid=(B * H, nkv, nq),
+        in_specs=[kspec2, kspec2, qspec2, qspec2, rowspec2, rowspec2],
+        out_specs=[kspec2, kspec2],
+        out_shape=[jax.ShapeDtypeStruct((B * H, Sp, D), k.dtype),
+                   jax.ShapeDtypeStruct((B * H, Sp, D), v.dtype)],
+        scratch_shapes=[_scratch((block_k, D)), _scratch((block_k, D))],
+        interpret=interpret,
+    )(kf, vf, qf, dof, lsef, deltaf)
+
+    unpad = lambda a: a.reshape(B, H, Sp, D)[:, :, :S]
+    return unpad(dq), unpad(dk), unpad(dv)

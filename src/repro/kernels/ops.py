@@ -4,6 +4,13 @@ On this CPU container the kernels execute in ``interpret=True`` mode (the
 kernel body runs as traced Python); on a real TPU backend set
 ``REPRO_PALLAS_INTERPRET=0`` (or rely on the auto-detect) to compile them
 for the MXU.
+
+``flash_attention`` and ``rmsnorm`` are the *training-grade* entry points:
+both carry a ``jax.custom_vjp`` (flash-recomputation backward for
+attention, analytic fused backward for rmsnorm) so ``impl="pallas"`` works
+under ``jax.value_and_grad`` end to end. When block sizes are not given
+explicitly they come from the autotune cache (``repro.kernels.autotune``),
+falling back to a deterministic static table in interpret mode.
 """
 from __future__ import annotations
 
@@ -14,10 +21,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels import autotune
+from repro.kernels.flash_attention import flash_attention_vjp
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
-from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.rmsnorm import rmsnorm_vjp
 
 
 def _interpret_default() -> bool:
@@ -27,20 +35,47 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def recommended_impl() -> str:
+    """The model ``impl`` the launchers should default to.
+
+    ``pallas`` wherever the kernels compile natively (TPU backends, or an
+    explicit ``REPRO_PALLAS_INTERPRET=0``); ``reference`` on CPU-only
+    hosts where interpret-mode kernels would *slow down* training.
+    Override with ``REPRO_TRAIN_IMPL``.
+    """
+    env = os.environ.get("REPRO_TRAIN_IMPL")
+    if env:
+        if env not in ("reference", "pallas", "naive"):
+            raise ValueError(
+                f"REPRO_TRAIN_IMPL={env!r}: expected one of "
+                "'reference', 'pallas', 'naive'")
+        return env
+    return "reference" if _interpret_default() else "pallas"
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
-                    block_q: int = 128, block_k: int = 128):
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  block_q=block_q, block_k=block_k,
-                                  interpret=_interpret_default())
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None):
+    """Differentiable flash attention; block sizes autotuned when None."""
+    interpret = _interpret_default()
+    if block_q is None or block_k is None:
+        bq, bk = autotune.lookup(
+            "flash_fwd", S=q.shape[2], D=q.shape[3], dtype=str(q.dtype),
+            causal=causal, window=window, interpret=interpret)
+        block_q = block_q or bq
+        block_k = block_k or bk
+    return flash_attention_vjp(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
-    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
-                          interpret=_interpret_default())
+    return rmsnorm_vjp(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=_interpret_default())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -1,13 +1,24 @@
-"""Fused RMSNorm — Pallas TPU kernel.
+"""Fused RMSNorm — Pallas TPU kernel, fwd + analytic custom VJP.
 
 One pass over rows staged through VMEM: mean-of-squares, rsqrt, scale —
 fused so the normalized tensor never round-trips to HBM in fp32. Grid
 tiles the flattened row dimension; the feature dimension stays whole in
 VMEM (d_model <= 8192 for every assigned arch => <= 32 KB fp32 per row).
+
+The backward is a single fused kernel with the closed-form jacobian
+(no recomputation tree, no saved normalized tensor):
+
+  r   = rsqrt(mean(x^2) + eps)        xhat = x * r
+  u   = g * scale
+  dx  = r * (u - xhat * mean(u * xhat))
+  dscale = sum_rows g * xhat           (accumulated across row blocks in
+                                        the sequentially-revisited output
+                                        block — TPU grids are sequential)
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -47,3 +58,95 @@ def rmsnorm_pallas(x, scale, *, eps: float = 1e-5, block_rows: int = 128,
         interpret=interpret,
     )(xf, scale)
     return out[:rows].reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _rmsnorm_bwd_kernel(x_ref, scale_ref, g_ref, dx_ref, dscale_ref, *,
+                        eps: float):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dscale_ref[...] = jnp.zeros_like(dscale_ref)
+
+    x = x_ref[...].astype(jnp.float32)                  # (block_rows, d)
+    g = g_ref[...].astype(jnp.float32)
+    sc = scale_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = x * r
+    u = g * sc
+    dx = r * (u - xhat * jnp.mean(u * xhat, axis=-1, keepdims=True))
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dscale_ref[...] += jnp.sum(g * xhat, axis=0)
+
+
+def rmsnorm_bwd_pallas(x, scale, g, *, eps: float = 1e-5,
+                       block_rows: int = 128, interpret: bool = False):
+    """Returns (dx, dscale) with the primal dtypes."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    gf = g.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        # zero-padded rows contribute exactly 0 to dscale (g = 0)
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        gf = jnp.pad(gf, ((0, pad), (0, 0)))
+    nrows = xf.shape[0]
+    dx, dscale = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps),
+        grid=(nrows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nrows, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf, scale, gf)
+    return (dx[:rows].reshape(orig_shape), dscale.astype(scale.dtype))
+
+
+class NormConfig(NamedTuple):
+    eps: float
+    block_rows: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _rmsnorm(cfg: NormConfig, x, scale):
+    return rmsnorm_pallas(x, scale, eps=cfg.eps, block_rows=cfg.block_rows,
+                          interpret=cfg.interpret)
+
+
+def _rmsnorm_fwd(cfg: NormConfig, x, scale):
+    return _rmsnorm(cfg, x, scale), (x, scale)
+
+
+def _rmsnorm_bwd(cfg: NormConfig, residuals, g):
+    x, scale = residuals
+    return rmsnorm_bwd_pallas(x, scale, g, eps=cfg.eps,
+                              block_rows=cfg.block_rows,
+                              interpret=cfg.interpret)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm_vjp(x, scale, *, eps: float = 1e-5, block_rows: int = 128,
+                interpret: bool = False):
+    """Differentiable fused RMSNorm (training entry point)."""
+    return _rmsnorm(NormConfig(eps, block_rows, interpret), x, scale)

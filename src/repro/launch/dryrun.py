@@ -80,7 +80,14 @@ def collective_bytes(hlo_text: str):
     return per_kind, count
 
 
-def build_step(cfg, rules, shape):
+def _cost_dict(ca):
+    """cost_analysis() returns a one-dict list on older JAX releases."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def build_step(cfg, rules, shape, impl: str = "reference"):
     """Returns (fn, example_args, in_shardings)."""
     window = SP.effective_window(cfg, shape)
     if shape.mode == "train":
@@ -89,7 +96,7 @@ def build_step(cfg, rules, shape):
         register_axes(rules, axes)
         batch = SP.batch_specs(cfg, shape)
         b_specs = SP.batch_spec_tree(rules, batch)
-        fn = make_train_step(cfg, rules, window=window)
+        fn = make_train_step(cfg, rules, window=window, impl=impl)
         args = (p_shapes, o_shapes, batch)
         in_sh = (jax.tree.map(rules.sharding, p_specs),
                  jax.tree.map(rules.sharding, opt_specs),
@@ -100,7 +107,7 @@ def build_step(cfg, rules, shape):
             cfg, rules, with_opt=False)
         batch = SP.batch_specs(cfg, shape)
         b_specs = SP.batch_spec_tree(rules, batch)
-        fn = make_prefill_step(cfg, rules, window=window)
+        fn = make_prefill_step(cfg, rules, window=window, impl=impl)
         args = (p_shapes, batch)
         in_sh = (jax.tree.map(rules.sharding, p_specs),
                  jax.tree.map(rules.sharding, b_specs))
@@ -147,7 +154,7 @@ def cost_pass(arch: str, shape_name: str, cfg_override=None, tag: str = ""):
     out = {}
 
     def _flops_of(fn, *args):
-        return jax.jit(fn).lower(*args).cost_analysis()
+        return _cost_dict(jax.jit(fn).lower(*args).cost_analysis())
 
     # params shapes without any mesh
     def initv(k):
@@ -229,13 +236,14 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     rules = MeshRules(mesh, zero_stage=stage, **rules_kw)
     t0 = time.time()
     with mesh:
-        fn, args, in_sh = build_step(cfg, rules, shape)
+        fn, args, in_sh = build_step(cfg, rules, shape,
+                                     impl=var.impl or "reference")
         lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
     coll, coll_n = collective_bytes(hlo)
     try:

@@ -44,6 +44,11 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--zero", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "reference", "pallas", "naive"],
+                    help="attention/norm implementation; 'auto' picks the "
+                         "custom-VJP Pallas kernels when they compile "
+                         "natively (TPU) and the jnp reference otherwise")
     ap.add_argument("--data", default=None, help="text file (byte-LM); "
                                                  "default synthetic")
     ap.add_argument("--ckpt", default=None)
@@ -53,6 +58,10 @@ def main(argv=None):
     cfg = get_config(args.arch, reduced=args.reduced)
     cluster = (CL.hetero_tpu_fleet() if args.cluster == "tpu"
                else CL.PAPER_CLUSTERS[args.cluster]())
+
+    from repro.kernels.ops import recommended_impl
+    impl = recommended_impl() if args.impl == "auto" else args.impl
+    print(f"[impl] {impl}" + (" (auto)" if args.impl == "auto" else ""))
 
     # ---- Poplar: fully automated configuration ----
     t0 = time.time()
@@ -91,7 +100,7 @@ def main(argv=None):
         params = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
         opt = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
         step_fn = jax.jit(make_train_step(
-            cfg, rules, lr=args.lr, accum_steps=layout.gas))
+            cfg, rules, lr=args.lr, impl=impl, accum_steps=layout.gas))
 
         tokens_seen = 0
         t_start = time.time()

@@ -26,10 +26,12 @@ def _remat(on: bool) -> Callable[[ModelConfig], ModelConfig]:
 
 class Variant:
     def __init__(self, cfg_fn: Optional[Callable] = None,
-                 rules_kw: Optional[Dict] = None, note: str = ""):
+                 rules_kw: Optional[Dict] = None, note: str = "",
+                 impl: Optional[str] = None):
         self.cfg_fn = cfg_fn or (lambda c: c)
         self.rules_kw = rules_kw or {}
         self.note = note
+        self.impl = impl  # model impl override ("pallas"/"reference"/None)
 
 
 def _moe_impl(impl: str) -> Callable[[ModelConfig], ModelConfig]:
@@ -62,6 +64,13 @@ VARIANTS: Dict[str, Variant] = {
             c, moe=replace(c.moe, group_size=1024,
                            combine_dtype="bfloat16"))),
         note="g=1024 + bf16 combine"),
+    # §Perf/P4 — training-grade Pallas kernels: custom-VJP flash attention
+    # (recomputation backward, causal/window block skipping) + fused
+    # rmsnorm VJP, with autotuned (block_q, block_k) tiles. The default
+    # train path on TPU backends; as a named variant it lets the dry-run
+    # compare kernel vs reference lowering on any backend.
+    "pallas": Variant(impl="pallas",
+                      note="custom-VJP flash-attention + rmsnorm kernels"),
     # §Perf/P3 — hierarchical ZeRO (ZeRO++ hpZ): params shard within pod
     "hpz": Variant(rules_kw=dict(hierarchical_params=True),
                    note="pod-local param shards; cross-pod grads only"),

@@ -172,9 +172,11 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
     k = constrain(k, ("batch", "heads", None, None))
     v = constrain(v, ("batch", "heads", None, None))
     causal = (mask_mode == "causal") and kv_override is None
-    if impl == "pallas" and causal and q.shape == k.shape:
+    if impl == "pallas" and kv_override is None and q.shape == k.shape:
+        # differentiable Pallas kernel (custom_vjp) — safe under
+        # jax.value_and_grad and gradient accumulation
         from repro.kernels import ops as kops
-        out = kops.flash_attention(q, k, v, causal=True, window=window)
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
     elif impl == "naive":
         # one-shot einsum attention: used ONLY by the dry-run cost pass
         # (XLA cost_analysis does not multiply loop bodies by trip count,
@@ -237,7 +239,7 @@ def _decode_attn_kvseq_sharded(rules, q, k_tok, v_tok, cache, slot, filled,
     """
     from jax.sharding import PartitionSpec as P
 
-    shard_map = jax.shard_map
+    from repro.core.sharding import shard_map_compat
     mesh = rules.mesh
     B, Hq, _, D = q.shape
     S = cache["k"].shape[1]
@@ -279,10 +281,10 @@ def _decode_attn_kvseq_sharded(rules, q, k_tok, v_tok, cache, slot, filled,
 
     qspec = P(bspec, None, None, None)
     cspec = P(bspec, "model", None, None)
-    out, k_new, v_new = shard_map(
+    out, k_new, v_new = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(qspec, qspec, qspec, cspec, cspec, P(), P()),
-        out_specs=(qspec, cspec, cspec), check_vma=False)(
+        out_specs=(qspec, cspec, cspec))(
         q, k_tok, v_tok, cache["k"], cache["v"], slot, filled)
     return out, {"k": k_new, "v": v_new}
 

@@ -177,10 +177,11 @@ def moe_apply_a2a(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
     xspec = P(bspec, "model", None)
     gspec = P(bspec, "model", None)
     wspec = P("model", None, None)
-    y = jax.shard_map(
+    from repro.core.sharding import shard_map_compat
+    y = shard_map_compat(
         local_fn, mesh=rules.mesh,
         in_specs=(xspec, gspec, gspec, wspec, wspec, wspec),
-        out_specs=xspec, check_vma=False)(
+        out_specs=xspec)(
         x, gate_vals, gate_idx, params["wi_gate"], params["wi_up"],
         params["wo"])
     return constrain(y, ("batch", None, "embed")), aux

@@ -1,6 +1,7 @@
 """Hetero batch layout + data pipeline + simulator + checkpoint tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

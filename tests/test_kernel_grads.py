@@ -1,0 +1,151 @@
+"""Training-path parity for the custom-VJP Pallas kernels (interpret mode):
+`impl="pallas"` under jax.value_and_grad must match `impl="reference"`
+exactly (<=1e-4 max-abs), plus autotune cache round-trip invariants."""
+import json
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import autotune, ref
+from repro.kernels.flash_attention import flash_attention_vjp
+from repro.kernels.rmsnorm import rmsnorm_vjp
+from repro.models import model as mm
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ------------------------------------------------- kernel-level gradients --
+
+@pytest.mark.parametrize("B,H,S,D,causal,window,blk", [
+    (1, 2, 128, 32, True, None, 64),
+    (2, 2, 200, 64, True, None, 64),     # S not a multiple of the block
+    (1, 2, 160, 32, True, 48, 32),       # sliding window
+    (1, 2, 50, 32, True, 16, 32),        # odd S + window
+    (1, 1, 96, 32, False, None, 32),     # non-causal
+])
+def test_flash_attention_grad_matches_reference(B, H, S, D, causal, window,
+                                                blk):
+    q, k, v = (_rand((B, H, S, D)) for _ in range(3))
+    co = _rand((B, H, S, D))
+
+    def loss_pallas(q, k, v):
+        o = flash_attention_vjp(q, k, v, causal=causal, window=window,
+                                block_q=blk, block_k=blk, interpret=True)
+        return (o.astype(jnp.float32) * co).sum()
+
+    def loss_ref(q, k, v):
+        o = ref.attention_reference(q, k, v, causal=causal, window=window)
+        return (o.astype(jnp.float32) * co).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 37, 256), (3, 130, 64)])
+def test_rmsnorm_grad_matches_reference(shape):
+    x = _rand(shape)
+    s = _rand(shape[-1:])
+    co = _rand(shape)
+
+    def loss_pallas(x, s):
+        return (rmsnorm_vjp(x, s, interpret=True, block_rows=32
+                            ).astype(jnp.float32) * co).sum()
+
+    def loss_ref(x, s):
+        return (ref.rmsnorm_reference(x, s).astype(jnp.float32) * co).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1))(x, s)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(x, s)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_flash_attention_bf16_grads_keep_dtype():
+    q, k, v = (_rand((1, 2, 64, 32), jnp.bfloat16) for _ in range(3))
+
+    def loss(q, k, v):
+        return flash_attention_vjp(q, k, v, causal=True, block_q=32,
+                                   block_k=32, interpret=True
+                                   ).astype(jnp.float32).sum()
+
+    gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    assert gq.dtype == gk.dtype == gv.dtype == jnp.bfloat16
+
+
+# ------------------------------------------------- loss_fn-level parity ---
+
+@pytest.mark.parametrize("S,window", [(50, None), (48, 16)])
+def test_loss_fn_grad_parity_pallas_vs_reference(S, window):
+    """jax.value_and_grad(loss_fn) end to end: the acceptance gate for the
+    training-grade kernel path (causal + sliding window, odd seq lens)."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    cfg = replace(cfg, dtype="float32", param_dtype="float32")
+    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(3, cfg.vocab_size, (2, S + 1)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_mask": jnp.ones((2, S), jnp.float32)}
+
+    def loss(p, impl):
+        return mm.loss_fn(p, cfg, batch, window=window, impl=impl)[0]
+
+    lr, gr = jax.value_and_grad(lambda p: loss(p, "reference"))(params)
+    lp, gp = jax.value_and_grad(lambda p: loss(p, "pallas"))(params)
+    assert abs(float(lr) - float(lp)) < 1e-4
+    for a, b in zip(jax.tree.leaves(gr), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+
+
+# ------------------------------------------------------- autotune cache ---
+
+def test_autotune_cache_round_trip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    kw = dict(S=333, D=64, dtype="float32", causal=True, window=None)
+    first = autotune.lookup("flash_fwd", interpret=True, **kw)
+    # identical key -> identical blocks, from memory and from disk
+    assert autotune.lookup("flash_fwd", interpret=True, **kw) == first
+    autotune.clear_memory_cache()
+    assert autotune.lookup("flash_fwd", interpret=True, **kw) == first
+    # the disk file documents the key with a well-formed entry
+    data = json.loads((tmp_path / "at.json").read_text())
+    key = autotune.key_of("flash_fwd", **kw)
+    assert data[key]["blocks"] == list(first)
+    assert data[key]["source"].startswith("static")
+
+
+def test_autotune_measured_sweep_writes_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    calls = []
+
+    def make_fn(bq, bk):
+        calls.append((bq, bk))
+        return lambda: jnp.zeros(())
+
+    best = autotune.tune("flash_fwd", make_fn, S=64, D=32, dtype="float32",
+                         candidates=((32, 32), (32, 64), (128, 128)),
+                         iters=1)
+    assert calls == [(32, 32), (32, 64), (64, 64)]  # clamped to S + deduped
+    assert best in calls
+    data = json.loads((tmp_path / "at.json").read_text())
+    key = autotune.key_of("flash_fwd", S=64, D=32, dtype="float32",
+                          causal=True, window=None)
+    assert data[key]["source"] == "measured"
+    assert "ms" in data[key]
+    # second tune for the same key is a pure cache hit (no new sweeps)
+    n = len(calls)
+    assert autotune.tune("flash_fwd", make_fn, S=64, D=32,
+                         dtype="float32") == best
+    assert len(calls) == n

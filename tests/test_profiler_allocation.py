@@ -3,6 +3,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never error
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.configs import get_config

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.qcomm import (dequantize_blocks, quantize_blocks,

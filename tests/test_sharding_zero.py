@@ -13,8 +13,18 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.core.sharding import MeshRules
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: 0.4.x wants ((name, size), ...);
+    newer releases want (sizes, names). Either way: no devices needed."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+MESH1 = _abstract_mesh((16, 16), ("data", "model"))
+MESH2 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_tp_axis_divisibility():

@@ -1,6 +1,7 @@
 """Property tests for the natural cubic spline (paper appendix)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, never error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.spline import CubicSpline, fit_natural_cubic, max_of_spline
