@@ -1,8 +1,13 @@
 """§Perf baseline-vs-variant comparison rows, read from the dry-run
-artifacts, plus a live fwd+bwd attention kernel timing: the jnp reference
+artifacts, plus live attention kernel timings: the jnp reference
 (chunked online-softmax) vs the custom-VJP Pallas flash kernels under
 ``jax.value_and_grad``, with (block_q, block_k) taken from the autotuner
-(which persists its sweep to the on-disk cache as a side effect)."""
+(which persists its sweep to the on-disk cache as a side effect).
+
+GQA rows compare the legacy hq-expanded reference against the GQA-native
+Pallas kernels at group sizes hq/hkv in {1, 6, 8} (fwd+bwd) plus a
+decode-latency row, reporting the K/V bytes the un-expanded layout saves
+per step."""
 from __future__ import annotations
 
 import json
@@ -13,22 +18,21 @@ from benchmarks.common import csv_row
 from benchmarks.roofline import DRYRUN_DIR, roofline_terms
 
 
-def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
-                           D: int = 64) -> List[str]:
-    """Train-path (value_and_grad) attention timing: reference vs Pallas."""
+def _time_attn_fwd_bwd(q, k, v, *, G: int, interpret: bool, expand_ref: bool):
+    """Shared fwd+bwd (value_and_grad) timing harness for the attention
+    rows: resolve (block_q, block_k) through the autotuner (lookup-only in
+    interpret mode — timings there measure the traced-Python interpreter,
+    not hardware; the static-table lookup still writes the key through to
+    the on-disk cache), then time the Pallas custom-VJP kernels against
+    the jnp reference. ``expand_ref`` times the legacy hq-expanded
+    reference (the GQA comparison); otherwise the GQA-native chunked one.
+    Returns (ms_ref, ms_pallas, (bq, bk))."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
-    from repro.kernels import autotune
+    from repro.kernels import autotune, ref
     from repro.kernels.flash_attention import flash_attention_vjp
-    from repro.kernels.ops import _interpret_default
     from repro.models.layers import _chunk_attn_flash
-
-    interpret = _interpret_default()
-    rng = np.random.default_rng(0)
-    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
-               for _ in range(3))
 
     def make_pallas(bq, bk):
         @jax.jit
@@ -40,11 +44,9 @@ def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
             return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
         return lambda: fwd_bwd(q, k, v)
 
-    # Tune under the key the training path (ops.flash_attention) reads.
-    # Interpret mode never sweeps: timings there measure the traced-Python
-    # interpreter, not hardware — the static-table lookup still writes the
-    # key through to the on-disk cache.
-    kw = dict(S=S, D=D, dtype="float32", causal=True, window=None)
+    # tune under the key the training path (ops.flash_attention) reads
+    kw = dict(S=q.shape[2], D=q.shape[3], dtype="float32", causal=True,
+              window=None, G=G)
     if interpret:
         bq, bk = autotune.lookup("flash_fwd", interpret=True, **kw)
     else:
@@ -55,12 +57,32 @@ def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
     @jax.jit
     def ref_fwd_bwd(q, k, v):
         def loss(q, k, v):
-            return _chunk_attn_flash(q, k, v, causal=True, window=None
+            ke = ref.expand_kv(k, G, 1) if expand_ref else k
+            ve = ref.expand_kv(v, G, 1) if expand_ref else v
+            return _chunk_attn_flash(q, ke, ve, causal=True, window=None
                                      ).astype(jnp.float32).sum()
         return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
 
     ms_ref = autotune.median_ms(lambda: ref_fwd_bwd(q, k, v))
     ms_pal = autotune.median_ms(make_pallas(bq, bk))
+    return ms_ref, ms_pal, (bq, bk)
+
+
+def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
+                           D: int = 64) -> List[str]:
+    """Train-path (value_and_grad) attention timing: reference vs Pallas."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import autotune
+    from repro.kernels.ops import _interpret_default
+
+    interpret = _interpret_default()
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+               for _ in range(3))
+    ms_ref, ms_pal, (bq, bk) = _time_attn_fwd_bwd(
+        q, k, v, G=1, interpret=interpret, expand_ref=False)
     mode = "interpret" if interpret else "compiled"
     shape = f"B{B}H{H}S{S}D{D}"
     return [
@@ -72,6 +94,83 @@ def attention_fwd_bwd_rows(B: int = 1, H: int = 4, S: int = 256,
                 f"speedup={ms_ref / ms_pal:.2f}x;"
                 f"autotune_cache={autotune.cache_path()}"),
     ]
+
+
+def gqa_attention_rows(B: int = 1, Hkv: int = 1,
+                       groups=(1, 6, 8)) -> List[str]:
+    """GQA fwd+bwd: legacy expanded reference vs the GQA-native Pallas
+    kernels at hq/hkv group sizes ``groups``, plus K/V bytes saved."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ops import _interpret_default
+
+    interpret = _interpret_default()
+    # interpret mode (CI smoke) runs the kernel body as traced Python:
+    # keep shapes small there, realistic when compiled for hardware
+    S, D = (128, 64) if interpret else (1024, 128)
+    rng = np.random.default_rng(1)
+    rows = []
+    for G in groups:
+        Hq = G * Hkv
+        q = jnp.asarray(rng.standard_normal((B, Hq, S, D)), jnp.float32)
+        k, v = (jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+                for _ in range(2))
+        ms_ref, ms_pal, (bq, bk) = _time_attn_fwd_bwd(
+            q, k, v, G=G, interpret=interpret, expand_ref=True)
+        itemsize = q.dtype.itemsize
+        kv_native = 2 * B * Hkv * S * D * itemsize
+        kv_expanded = 2 * B * Hq * S * D * itemsize
+        mode = "interpret" if interpret else "compiled"
+        rows.append(csv_row(
+            f"perf/kernels/gqa_attn_fwd_bwd/g{G}/B{B}Hq{Hq}Hkv{Hkv}S{S}D{D}",
+            ms_pal * 1e3,
+            f"mode={mode};blocks=({bq},{bk});ms_pallas={ms_pal:.3f};"
+            f"ms_ref_expanded={ms_ref:.3f};"
+            f"speedup={ms_ref / ms_pal:.2f}x;"
+            f"kv_bytes_native={kv_native};kv_bytes_expanded={kv_expanded};"
+            f"kv_bytes_saved_per_step={kv_expanded - kv_native}"))
+    return rows
+
+
+def gqa_decode_row(B: int = 1, Hkv: int = 2, G: int = 8) -> List[str]:
+    """Decode latency: GQA-native flash-decode (one cache read serves the
+    query group) vs the expanded jnp reference over a long cache."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import autotune, ref
+    from repro.kernels.flash_decode import flash_decode_pallas
+    from repro.kernels.ops import _interpret_default
+    import functools
+    import jax
+
+    interpret = _interpret_default()
+    S, D = (512, 64) if interpret else (8192, 128)
+    Hq = G * Hkv
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+    # cache in its stored (B, S, Hkv, D) layout — what the kernel reads
+    kc, vc = (jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+              for _ in range(2))
+    filled = jnp.int32(S - 3)
+
+    pal = jax.jit(functools.partial(flash_decode_pallas, block_k=256,
+                                    interpret=interpret))
+    ref_fn = jax.jit(lambda q, k, v, f: ref.gqa_decode_attention_reference(
+        q, k.swapaxes(1, 2), v.swapaxes(1, 2), f))
+    ms_pal = autotune.median_ms(lambda: pal(q, kc, vc, filled))
+    ms_ref = autotune.median_ms(lambda: ref_fn(q, kc, vc, filled))
+    itemsize = q.dtype.itemsize
+    kv_native = 2 * B * Hkv * S * D * itemsize
+    kv_expanded = 2 * B * Hq * S * D * itemsize
+    mode = "interpret" if interpret else "compiled"
+    return [csv_row(
+        f"perf/kernels/gqa_decode/g{G}/B{B}Hq{Hq}Hkv{Hkv}S{S}D{D}",
+        ms_pal * 1e3,
+        f"mode={mode};ms_pallas={ms_pal:.3f};ms_ref_expanded={ms_ref:.3f};"
+        f"speedup={ms_ref / ms_pal:.2f}x;"
+        f"kv_bytes_saved_per_step={kv_expanded - kv_native}")]
 
 
 def run() -> List[str]:
@@ -115,6 +214,12 @@ def run() -> List[str]:
         rows.extend(attention_fwd_bwd_rows())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/kernels/attn_fwd_bwd/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(gqa_attention_rows())
+        rows.extend(gqa_decode_row())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/kernels/gqa/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

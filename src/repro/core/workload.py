@@ -44,6 +44,10 @@ class MemoryModel:
     n_workers: int = 1
     remat: bool = True
     framework_overhead_gb: float = 0.9  # CUDA/XLA context etc.
+    # GQA-native attention kernels hold K/V at n_kv_heads (the Pallas path
+    # never builds the (B, n_heads, S, D) expansion); set False to model
+    # the legacy expanded layout.
+    gqa_native_attn: bool = True
 
     def model_state_bytes(self) -> float:
         P = float(self.cfg.total_params)
@@ -63,6 +67,29 @@ class MemoryModel:
         # otherwise ~14 (qkv, scores stats, mlp hidden, ...)
         per_layer = (2 if self.remat else 14) * self.seq_len * c.d_model * BF16
         act = per_layer * c.n_layers
+        # attention K/V working set: the GQA-native kernels allocate
+        # n_kv_heads-wide K/V (what the mbs probe / OOM oracle must see);
+        # the expanded layout costs the full n_heads.
+        n_attn = sum(1 for kind in c.blocks()
+                     if kind in ("attn", "moe", "shared_attn"))
+        if n_attn:
+            hd = c.resolved_head_dim
+            if self.remat:
+                # remat saves only the ~2 layer inputs above; K/V of the
+                # layer being (re)computed are transient but bound the
+                # peak (x2: forward pass + backward recompute). Counted
+                # explicitly because the kv-head width is exactly what
+                # the GQA-native layout changes.
+                kv_heads = (c.n_kv_heads if self.gqa_native_attn
+                            else c.n_heads)
+                act += 2 * self.seq_len * kv_heads * hd * BF16 * 2
+            elif self.gqa_native_attn:
+                # without remat the 14x catch-all above already charges
+                # saved K/V at full n_heads width (d_model per tensor);
+                # credit back the expansion the GQA-native layout avoids
+                # so the legacy estimate stays byte-identical to before
+                act -= (2 * self.seq_len * (c.n_heads - c.n_kv_heads)
+                        * hd * BF16 * n_attn)
         if c.moe is not None:
             # dispatched expert buffers ~ top_k/capacity overhead
             act += (2 * self.seq_len * c.d_model * BF16

@@ -135,20 +135,23 @@ def make_train_step(cfg: ModelConfig, rules: MeshRules,
     return train_step
 
 
-# grads sharding needs the axes tree; thread it via attribute to avoid
-# re-deriving inside the traced function.
-_AXES_CACHE: Dict[int, Any] = {}
+# grads sharding needs the axes tree; registration pins it on the rules
+# instance itself. (A module-level dict keyed on id(rules) is a use-after-
+# free hazard: once a MeshRules is garbage-collected CPython can hand its
+# id to a brand-new instance, silently serving the *old* rules' axes tree.
+# Instance storage has exactly the lifetime of the key.)
+_AXES_ATTR = "_registered_axes_tree"
 
 
 def _axes_of(params, rules):
-    key = id(rules)
-    if key not in _AXES_CACHE:
+    axes = getattr(rules, _AXES_ATTR, None)
+    if axes is None:
         raise RuntimeError("call register_axes(rules, axes) before tracing")
-    return _AXES_CACHE[key]
+    return axes
 
 
 def register_axes(rules: MeshRules, axes) -> None:
-    _AXES_CACHE[id(rules)] = axes
+    object.__setattr__(rules, _AXES_ATTR, axes)
 
 
 def _resolve_impl(impl: str) -> str:
@@ -170,8 +173,12 @@ def make_prefill_step(cfg: ModelConfig, rules: MeshRules,
 
 
 def make_decode_step(cfg: ModelConfig, rules: MeshRules,
-                     window: Optional[int] = None) -> Callable:
+                     window: Optional[int] = None, impl: str = "reference"
+                     ) -> Callable:
+    impl = _resolve_impl(impl)
+
     def serve_step(params, tokens, state):
         with use_rules(rules):
-            return mm.decode_step(params, cfg, tokens, state, window=window)
+            return mm.decode_step(params, cfg, tokens, state, window=window,
+                                  impl=impl)
     return serve_step

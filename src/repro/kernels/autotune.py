@@ -18,9 +18,11 @@ timing) and writes the winner through both caches. The train step never
 sweeps implicitly: lookups inside a traced function only read the cache
 or the static table, keeping tracing deterministic.
 
-Cache file format — one JSON object per key::
+Cache file format — one JSON object per key (``g`` is the GQA group
+size ``n_heads // n_kv_heads`` — the best tile for a 6-way grouped
+kernel differs from the MHA one, so the keys must not alias)::
 
-  {"flash_fwd|S512|D128|bfloat16|c1|w0":
+  {"flash_fwd|S512|D128|bfloat16|c1|w0|g6":
      {"blocks": [128, 128], "ms": 0.41, "source": "measured"}}
 """
 from __future__ import annotations
@@ -55,8 +57,10 @@ def clear_memory_cache() -> None:
 
 
 def key_of(kind: str, *, S: int, D: int, dtype: str, causal: bool,
-           window: Optional[int]) -> str:
-    return f"{kind}|S{S}|D{D}|{dtype}|c{int(causal)}|w{window or 0}"
+           window: Optional[int], G: int = 1) -> str:
+    """``G`` is the GQA group size (n_heads // n_kv_heads); tuned tiles
+    for grouped and MHA shapes must not alias."""
+    return f"{kind}|S{S}|D{D}|{dtype}|c{int(causal)}|w{window or 0}|g{G}"
 
 
 def _pow2_floor(n: int) -> int:
@@ -110,10 +114,11 @@ def record(key: str, blocks: Tuple[int, int], *, ms: Optional[float] = None,
 
 
 def lookup(kind: str, *, S: int, D: int, dtype: str, causal: bool = True,
-           window: Optional[int] = None,
+           window: Optional[int] = None, G: int = 1,
            interpret: bool = False) -> Tuple[int, int]:
     """Cached (block_q, block_k) for a kernel-shape key; never sweeps."""
-    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window)
+    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window,
+                 G=G)
     hit = _MEM_CACHE.get(key)
     if hit is not None:
         return hit
@@ -145,7 +150,7 @@ def median_ms(fn: Callable[[], object], iters: int = 3) -> float:
 
 def tune(kind: str, make_fn: Callable[[int, int], Callable[[], object]], *,
          S: int, D: int, dtype: str, causal: bool = True,
-         window: Optional[int] = None,
+         window: Optional[int] = None, G: int = 1,
          candidates: Optional[Sequence[Tuple[int, int]]] = None,
          iters: int = 3, verbose: bool = False) -> Tuple[int, int]:
     """Sweep candidates and cache the fastest.
@@ -155,7 +160,8 @@ def tune(kind: str, make_fn: Callable[[int, int], Callable[[], object]], *,
     Candidates larger than the sequence collapse after the kernels'
     ``min(block, S)`` clamp and are deduplicated before timing.
     """
-    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window)
+    key = key_of(kind, S=S, D=D, dtype=dtype, causal=causal, window=window,
+                 G=G)
     hit = _MEM_CACHE.get(key)
     if hit is not None:
         return hit

@@ -16,8 +16,11 @@ block-by-block without materializing the S x S score matrix.
 which is what makes ``impl="pallas"`` usable under ``jax.value_and_grad``
 — a bare ``pallas_call`` has no autodiff rule.
 
-Heads arrive GQA-expanded from the wrapper, matching
-``repro.models.layers._chunk_attn_flash`` (the oracle lives in ref.py).
+GQA-native: K/V arrive with ``Hkv <= Hq`` heads and are NEVER expanded
+to ``(B, Hq, S, D)``. Each Q-head grid row reads the KV head of its
+group directly through the BlockSpec ``index_map`` (``h // group_size``),
+so HBM holds exactly one copy of the cache-sized tensors. The expansion
+survives only in the jnp parity oracle (``ref.py``).
 """
 from __future__ import annotations
 
@@ -49,6 +52,25 @@ def _pad_len(S: int, block_q: int, block_k: int) -> int:
     padding to max() alone truncates the grid for the smaller block)."""
     m = _lcm(block_q, block_k)
     return S + (-S) % m
+
+
+def _group_sizes(q_shape, kv_shape):
+    """(Hq, Hkv, group_size) with divisibility checked."""
+    Hq, Hkv = q_shape[1], kv_shape[1]
+    if Hq % Hkv:
+        raise ValueError(
+            f"GQA head counts must divide: n_heads={Hq}, n_kv_heads={Hkv}")
+    return Hq, Hkv, Hq // Hkv
+
+
+def _kv_head_map(Hq: int, Hkv: int):
+    """Flattened-(b*h) index of the KV head serving flattened q head
+    ``bh``: q head ``h`` reads KV head ``h // group_size``. Identity for
+    MHA so the index_map stays a plain passthrough there."""
+    if Hq == Hkv:
+        return lambda bh: bh
+    group = Hq // Hkv
+    return lambda bh: (bh // Hq) * Hkv + (bh % Hq) // group
 
 
 def _scratch_shapes(block_q: int, d: int):
@@ -124,11 +146,14 @@ def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
                                interpret: bool = False):
     """Forward with residual logsumexp.
 
-    q,k,v: (B, H, S, D), H already GQA-expanded.
-    Returns (out (B,H,S,D), lse (B,H,S) float32).
+    q: (B, Hq, S, D); k,v: (B, Hkv, S, D) un-expanded — Hq == Hkv is
+    plain MHA, otherwise each group of Hq/Hkv query heads reads its KV
+    head through the grid index_map (no replication in HBM).
+    Returns (out (B,Hq,S,D), lse (B,Hq,S) float32).
     """
-    B, H, S, D = q.shape
-    assert k.shape == v.shape == (B, H, S, D)
+    B, _, S, D = q.shape
+    Hq, Hkv, _ = _group_sizes(q.shape, k.shape)
+    assert k.shape == v.shape == (B, Hkv, S, D)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     pad = _pad_len(S, block_q, block_k) - S
@@ -139,40 +164,44 @@ def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
         v = jnp.pad(v, padcfg)
     Sp = q.shape[2]
     nq, nkv = Sp // block_q, Sp // block_k
-    qf = q.reshape(B * H, Sp, D)
-    kf = k.reshape(B * H, Sp, D)
-    vf = v.reshape(B * H, Sp, D)
+    qf = q.reshape(B * Hq, Sp, D)
+    kf = k.reshape(B * Hkv, Sp, D)
+    vf = v.reshape(B * Hkv, Sp, D)
+    kvmap = _kv_head_map(Hq, Hkv)
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
         causal=causal, window=window, scale=1.0 / (D ** 0.5), num_kv=nkv)
     out, lse = pl.pallas_call(
         kernel,
-        grid=(B * H, nq, nkv),
+        grid=(B * Hq, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki: (kvmap(bh), ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki: (kvmap(bh), ki, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
             pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
-            jax.ShapeDtypeStruct((B * H, Sp), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hq, Sp, D), q.dtype),
+            jax.ShapeDtypeStruct((B * Hq, Sp), jnp.float32),
         ],
         scratch_shapes=_scratch_shapes(block_q, D),
         interpret=interpret,
     )(qf, kf, vf)
-    return (out.reshape(B, H, Sp, D)[:, :, :S],
-            lse.reshape(B, H, Sp)[:, :, :S])
+    return (out.reshape(B, Hq, Sp, D)[:, :, :S],
+            lse.reshape(B, Hq, Sp)[:, :, :S])
 
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: Optional[int] = None,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = False):
-    """Inference-path forward. q,k,v: (B,H,S,D). Returns (B,H,S,D)."""
+    """Inference-path forward. q: (B,Hq,S,D); k,v: (B,Hkv,S,D).
+    Returns (B,Hq,S,D)."""
     out, _ = flash_attention_fwd_pallas(
         q, k, v, causal=causal, window=window, block_q=block_q,
         block_k=block_k, interpret=interpret)

@@ -14,6 +14,13 @@ Both kernels reuse the forward's causal/window block-skipping (``pl.when``
 on the block coordinates), so the backward enjoys the same ~2x causal /
 O(window) sparsity win as the forward. ``delta`` is a cheap O(S*D)
 elementwise reduction done in plain jnp before the kernels launch.
+
+GQA-native: K/V (and therefore dK/dV) carry ``Hkv`` heads. The dQ grid
+maps each Q head onto its KV head (``h // group_size`` index_map); the
+dKV grid runs one program row per *KV* head and fuses ``group_size x
+num_q_blocks`` into its innermost sequential dimension, so dK/dV
+accumulate across every Q head of the group in VMEM scratch — the
+``(B, Hq, S, D)`` expanded gradient is never materialized either.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.flash_attention import NEG_INF, _VMEM, _pad_len
+from repro.kernels.flash_attention import (NEG_INF, _VMEM, _group_sizes,
+                                           _kv_head_map, _pad_len)
 
 __all__ = ["flash_attention_bwd_pallas"]
 
@@ -100,10 +108,15 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
                 dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
                 block_k: int, seq_len: int, causal: bool,
-                window: Optional[int], scale: float, num_q: int):
-    qi = pl.program_id(2)
+                window: Optional[int], scale: float, num_q: int,
+                num_inner: int):
+    # innermost dim fuses (group member, q block): t = g * num_q + qi.
+    # dK/dV scratch therefore accumulates across ALL Q heads sharing
+    # this KV head before the single writeback.
+    t = pl.program_id(2)
+    qi = t % num_q
 
-    @pl.when(qi == 0)
+    @pl.when(t == 0)
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
@@ -130,7 +143,7 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
             ds, q, (((0,), (0,)), ((), ())),             # ds^T @ Q
             preferred_element_type=jnp.float32)
 
-    @pl.when(qi == num_q - 1)
+    @pl.when(t == num_inner - 1)
     def _finalize():
         dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
@@ -144,10 +157,13 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
                                           jnp.ndarray]:
     """dQ/dK/dV for ``flash_attention_fwd_pallas``.
 
-    q,k,v,out,do: (B,H,S,D); lse: (B,H,S) float32. Returns grads with the
-    input dtypes (accumulated in float32 inside the kernels).
+    q,out,do: (B,Hq,S,D); k,v: (B,Hkv,S,D); lse: (B,Hq,S) float32.
+    Returns grads with the *primal* shapes/dtypes — dK/dV come back with
+    ``Hkv`` heads, already summed over each KV head's query group
+    (accumulated in float32 inside the kernels).
     """
-    B, H, S, D = q.shape
+    B, _, S, D = q.shape
+    Hq, Hkv, group = _group_sizes(q.shape, k.shape)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     pad = _pad_len(S, block_q, block_k) - S
@@ -163,47 +179,58 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
         delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pad)))
     Sp = q.shape[2]
     nq, nkv = Sp // block_q, Sp // block_k
-    qf = q.reshape(B * H, Sp, D)
-    kf = k.reshape(B * H, Sp, D)
-    vf = v.reshape(B * H, Sp, D)
-    dof = do.reshape(B * H, Sp, D)
-    lsef = lse.reshape(B * H, Sp)
-    deltaf = delta.reshape(B * H, Sp)
+    qf = q.reshape(B * Hq, Sp, D)
+    kf = k.reshape(B * Hkv, Sp, D)
+    vf = v.reshape(B * Hkv, Sp, D)
+    dof = do.reshape(B * Hq, Sp, D)
+    lsef = lse.reshape(B * Hq, Sp)
+    deltaf = delta.reshape(B * Hq, Sp)
     scale = 1.0 / (D ** 0.5)
+    kvmap = _kv_head_map(Hq, Hkv)
 
     qspec = pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0))
-    kspec = pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0))
+    kspec = pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki: (kvmap(bh), ki, 0))
     rowspec = pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi))
 
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
                           seq_len=S, causal=causal, window=window,
                           scale=scale, num_kv=nkv),
-        grid=(B * H, nq, nkv),
+        grid=(B * Hq, nq, nkv),
         in_specs=[qspec, kspec, kspec, qspec, rowspec, rowspec],
         out_specs=qspec,
-        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sp, D), q.dtype),
         scratch_shapes=[_scratch((block_q, D))],
         interpret=interpret,
     )(qf, kf, vf, dof, lsef, deltaf)
 
-    # dKV grid: kv blocks in the middle, q blocks innermost (sequential on
-    # TPU) so scratch accumulates over the q sweep for one kv block.
-    kspec2 = pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0))
-    qspec2 = pl.BlockSpec((1, block_q, D), lambda bh, ki, qi: (bh, qi, 0))
-    rowspec2 = pl.BlockSpec((1, block_q), lambda bh, ki, qi: (bh, qi))
+    # dKV grid: one program row per KV head; kv blocks in the middle;
+    # innermost (sequential on TPU) fuses group x q-blocks (t = g*nq + qi)
+    # so scratch accumulates the whole query group for one kv block.
+    def qmap(bhk, t):
+        # flattened q head: batch (bhk // Hkv), kv head (bhk % Hkv),
+        # group member (t // nq)
+        return (bhk // Hkv) * Hq + (bhk % Hkv) * group + t // nq
+
+    kspec2 = pl.BlockSpec((1, block_k, D), lambda bh, ki, t: (bh, ki, 0))
+    qspec2 = pl.BlockSpec((1, block_q, D),
+                          lambda bh, ki, t: (qmap(bh, t), t % nq, 0))
+    rowspec2 = pl.BlockSpec((1, block_q),
+                            lambda bh, ki, t: (qmap(bh, t), t % nq))
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, block_q=block_q, block_k=block_k,
                           seq_len=S, causal=causal, window=window,
-                          scale=scale, num_q=nq),
-        grid=(B * H, nkv, nq),
+                          scale=scale, num_q=nq, num_inner=group * nq),
+        grid=(B * Hkv, nkv, group * nq),
         in_specs=[kspec2, kspec2, qspec2, qspec2, rowspec2, rowspec2],
         out_specs=[kspec2, kspec2],
-        out_shape=[jax.ShapeDtypeStruct((B * H, Sp, D), k.dtype),
-                   jax.ShapeDtypeStruct((B * H, Sp, D), v.dtype)],
+        out_shape=[jax.ShapeDtypeStruct((B * Hkv, Sp, D), k.dtype),
+                   jax.ShapeDtypeStruct((B * Hkv, Sp, D), v.dtype)],
         scratch_shapes=[_scratch((block_k, D)), _scratch((block_k, D))],
         interpret=interpret,
     )(kf, vf, qf, dof, lsef, deltaf)
 
-    unpad = lambda a: a.reshape(B, H, Sp, D)[:, :, :S]
-    return unpad(dq), unpad(dk), unpad(dv)
+    def unpad(a, H):
+        return a.reshape(B, H, Sp, D)[:, :, :S]
+    return unpad(dq, Hq), unpad(dk, Hkv), unpad(dv, Hkv)

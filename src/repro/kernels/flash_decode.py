@@ -7,9 +7,17 @@ Blocks entirely past ``filled`` (the number of valid cache slots) are
 skipped via ``pl.when`` — for a ring buffer that's a no-op (all slots
 valid), for a growing cache it prunes the tail without re-compiling.
 
-Grid = (batch*heads, num_kv_blocks); the kv dim iterates sequentially on
-TPU so scratch carries (m, l, acc). Heads arrive GQA-expanded from the
-wrapper (ops.flash_decode), matching the model's decode path.
+GQA-native and cache-layout-native: K/V arrive exactly as the model
+stores them — ``(B, S, Hkv, D)``, un-expanded — and the BlockSpec
+index_map slices the sequence dim in place, so no transposed or
+hq-expanded copy of the cache is ever materialized in HBM. The grid
+runs one program row per *KV* head; all ``group = Hq/Hkv`` query heads
+of that head ride in the q block together, so each cache tile is
+fetched once and serves the whole group — HBM reads per step shrink by
+the group factor versus the expanded layout.
+
+Grid = (batch, kv_heads, num_kv_blocks); the kv-block dim iterates
+sequentially on TPU so scratch carries per-group-row (m, l, acc).
 """
 from __future__ import annotations
 
@@ -28,19 +36,19 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
-def _scratch(d: int):
+def _scratch(group: int, d: int):
     if _VMEM is not None:
-        return [_VMEM((1,), jnp.float32), _VMEM((1,), jnp.float32),
-                _VMEM((1, d), jnp.float32)]
-    return [jax.ShapeDtypeStruct((1,), jnp.float32),
-            jax.ShapeDtypeStruct((1,), jnp.float32),
-            jax.ShapeDtypeStruct((1, d), jnp.float32)]
+        return [_VMEM((group,), jnp.float32), _VMEM((group,), jnp.float32),
+                _VMEM((group, d), jnp.float32)]
+    return [jax.ShapeDtypeStruct((group,), jnp.float32),
+            jax.ShapeDtypeStruct((group,), jnp.float32),
+            jax.ShapeDtypeStruct((group, d), jnp.float32)]
 
 
 def _decode_kernel(filled_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *,
                    block_k: int, scale: float, num_kv: int):
-    ki = pl.program_id(1)
+    ki = pl.program_id(2)
     filled = filled_ref[0, 0]
 
     @pl.when(ki == 0)
@@ -53,58 +61,66 @@ def _decode_kernel(filled_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(k_start < filled)
     def _block():
-        q = q_ref[...].astype(jnp.float32)                 # (1, D)
+        q = q_ref[...].astype(jnp.float32)                 # (group, D)
         k = k_ref[...].astype(jnp.float32)                 # (block_k, D)
         v = v_ref[...].astype(jnp.float32)
-        s = (q @ k.T) * scale                              # (1, block_k)
+        s = (q @ k.T) * scale                              # (group, block_k)
         pos = k_start + jax.lax.iota(jnp.int32, block_k)
         s = jnp.where((pos < filled)[None, :], s, NEG_INF)
-        m_prev = m_ref[0]
-        m_new = jnp.maximum(m_prev, s.max())
-        p = jnp.exp(s - m_new)                             # (1, block_k)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])                    # (group, block_k)
         corr = jnp.exp(m_prev - m_new)
-        l_ref[0] = l_ref[0] * corr + p.sum()
-        acc_ref[...] = acc_ref[...] * corr + p @ v
-        m_ref[0] = m_new
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
 
     @pl.when(ki == num_kv - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...]
-                      / jnp.maximum(l_ref[0], 1e-20)).astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
 def flash_decode_pallas(q, k, v, filled, *, block_k: int = 512,
                         interpret: bool = False):
-    """q: (B, H, 1, D); k/v: (B, H, S, D) GQA-expanded cache;
-    filled: scalar int32 — number of valid cache slots. Returns (B,H,1,D)."""
-    B, H, _, D = q.shape
-    S = k.shape[2]
+    """q: (B, Hq, 1, D); k/v: (B, S, Hkv, D) — the model's cache storage
+    layout, un-expanded; filled: scalar int32 — number of valid cache
+    slots. Returns (B, Hq, 1, D)."""
+    B, Hq, _, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    if Hq % Hkv:
+        raise ValueError(
+            f"GQA head counts must divide: n_heads={Hq}, n_kv_heads={Hkv}")
+    group = Hq // Hkv
     block_k = min(block_k, S)
     pad = (-S) % block_k
     if pad:
-        padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
         k = jnp.pad(k, padw)
         v = jnp.pad(v, padw)
-    Sp = k.shape[2]
+    Sp = k.shape[1]
     num_kv = Sp // block_k
-    qf = q.reshape(B * H, 1, D)
-    kf = k.reshape(B * H, Sp, D)
-    vf = v.reshape(B * H, Sp, D)
+    # q heads j*group .. (j+1)*group-1 share kv head j (repeat semantics);
+    # this reshape of the contiguous head dim is free
+    qf = q.reshape(B, Hkv, group, D)
     filled_arr = jnp.full((1, 1), filled, jnp.int32)
     scale = 1.0 / float(D) ** 0.5
     out = pl.pallas_call(
         functools.partial(_decode_kernel, block_k=block_k, scale=scale,
                           num_kv=num_kv),
-        grid=(B * H, num_kv),
+        grid=(B, Hkv, num_kv),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, i: (0, 0)),
-            pl.BlockSpec((None, 1, D), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((None, block_k, D), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((None, block_k, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i: (0, 0)),
+            pl.BlockSpec((None, None, group, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, block_k, None, D),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, block_k, None, D),
+                         lambda b, h, i: (b, i, h, 0)),
         ],
-        out_specs=pl.BlockSpec((None, 1, D), lambda b, i: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
-        scratch_shapes=_scratch(D),
+        out_specs=pl.BlockSpec((None, None, group, D),
+                               lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        scratch_shapes=_scratch(group, D),
         interpret=interpret,
-    )(filled_arr, qf, kf, vf)
-    return out.reshape(B, H, 1, D)
+    )(filled_arr, qf, k, v)
+    return out.reshape(B, Hq, 1, D)

@@ -59,12 +59,19 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     block_q: Optional[int] = None,
                     block_k: Optional[int] = None):
-    """Differentiable flash attention; block sizes autotuned when None."""
+    """Differentiable flash attention; block sizes autotuned when None.
+
+    GQA-native: ``k``/``v`` carry ``n_kv_heads`` heads (pass them
+    un-expanded); the kernels map each query head onto its KV group in
+    the grid. The autotune key includes the group size so tuned tiles
+    don't alias between MHA and GQA shapes.
+    """
     interpret = _interpret_default()
     if block_q is None or block_k is None:
         bq, bk = autotune.lookup(
             "flash_fwd", S=q.shape[2], D=q.shape[3], dtype=str(q.dtype),
-            causal=causal, window=window, interpret=interpret)
+            causal=causal, window=window, G=q.shape[1] // k.shape[1],
+            interpret=interpret)
         block_q = block_q or bq
         block_k = block_k or bk
     return flash_attention_vjp(q, k, v, causal=causal, window=window,
@@ -86,6 +93,8 @@ def mamba_scan(xh, dt, A, Bm, Cm, *, chunk: int = 128):
 
 @functools.partial(jax.jit, static_argnames=("block_k",))
 def flash_decode(q, k, v, filled, *, block_k: int = 512):
-    """Single-token decode attention over a GQA-expanded cache."""
+    """Single-token decode attention over the un-expanded GQA cache in
+    its stored layout: q (B,Hq,1,D), k/v (B,S,Hkv,D) — each cache tile
+    is read once, in place, and serves the whole query-head group."""
     return flash_decode_pallas(q, k, v, filled, block_k=block_k,
                                interpret=_interpret_default())

@@ -1,10 +1,41 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+``expand_kv`` lives here and ONLY here: the production kernels and model
+paths are GQA-native (K/V keep ``n_kv_heads`` heads end to end), so the
+physical head replication survives solely as the parity oracle's way of
+reducing grouped attention to the plain MHA reference.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def expand_kv(k: jnp.ndarray, n_rep: int, head_axis: int) -> jnp.ndarray:
+    """Replicate each KV head ``n_rep`` times along ``head_axis`` (oracle
+    only — the fast paths never materialize this)."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=head_axis)
+
+
+def gqa_attention_reference(q, k, v, *, causal: bool = True,
+                            window: Optional[int] = None):
+    """Grouped-query oracle: q (B,Hq,S,D), k/v (B,Hkv,S,D) — expands K/V
+    and defers to the MHA reference."""
+    n_rep = q.shape[1] // k.shape[1]
+    return attention_reference(q, expand_kv(k, n_rep, 1),
+                               expand_kv(v, n_rep, 1),
+                               causal=causal, window=window)
+
+
+def gqa_decode_attention_reference(q, k, v, filled):
+    """Grouped-query decode oracle: q (B,Hq,1,D), k/v (B,Hkv,S,D)."""
+    n_rep = q.shape[1] // k.shape[1]
+    return decode_attention_reference(q, expand_kv(k, n_rep, 1),
+                                      expand_kv(v, n_rep, 1), filled)
 
 
 def attention_reference(q, k, v, *, causal: bool = True,

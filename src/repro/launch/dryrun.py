@@ -118,7 +118,7 @@ def build_step(cfg, rules, shape, impl: str = "reference"):
     state_shapes, state_specs = SP.decode_state_specs(cfg, rules, shape)
     tokens = SP.SDS((shape.global_batch, 1), jnp.int32)
     tok_spec = rules.activation_spec(("batch", None), tokens.shape)
-    fn = make_decode_step(cfg, rules, window=window)
+    fn = make_decode_step(cfg, rules, window=window, impl=impl)
     args = (p_shapes, tokens, state_shapes)
     in_sh = (jax.tree.map(rules.sharding, p_specs),
              rules.sharding(tok_spec),

@@ -6,6 +6,11 @@ Everything is pure jnp + logical-axis sharding constraints. The chunked
 attention here is the *reference* implementation (linear memory, flash-style
 two-level scan); the Pallas TPU kernel in ``repro.kernels`` is numerically
 checked against it.
+
+All attention paths are GQA-native: K/V keep ``n_kv_heads`` heads from
+projection through the kernels (grouped einsums on the jnp paths, grid
+index maps in Pallas) — the ``n_heads/n_kv_heads`` head replication
+exists only in the parity oracle ``repro.kernels.ref.expand_kv``.
 """
 from __future__ import annotations
 
@@ -70,21 +75,19 @@ def attention_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
     }
 
 
-def _expand_kv(k: jnp.ndarray, n_rep: int, head_axis: int) -> jnp.ndarray:
-    if n_rep == 1:
-        return k
-    return jnp.repeat(k, n_rep, axis=head_axis)
-
-
 def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
                       q_offset: int = 0, q_chunk: int = 1024, kv_chunk: int = 1024):
-    """Two-level online-softmax attention. q: (B,H,Sq,D), k/v: (B,H,Skv,D).
+    """Two-level online-softmax attention, GQA-native.
+    q: (B,Hq,Sq,D); k/v: (B,Hkv,Skv,D) with Hq % Hkv == 0 — each group of
+    Hq//Hkv query heads reads its KV head through a grouped einsum, so
+    K/V are never replicated to Hq heads.
 
     Linear memory in sequence length; computes the full rectangle of blocks
     (masked) — block skipping is a hillclimb item for the Pallas kernel.
     """
-    B, H, Sq, D = q.shape
-    Skv = k.shape[2]
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
     q_chunk = min(q_chunk, Sq)
     kv_chunk = min(kv_chunk, Skv)
     # pad to multiples
@@ -96,9 +99,11 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
     nq, nkv = qp.shape[2] // q_chunk, kp.shape[2] // kv_chunk
     scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
 
-    qb = qp.reshape(B, H, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)    # (nq,B,H,qc,D)
-    kb = kp.reshape(B, H, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)  # (nkv,...)
-    vb = vp.reshape(B, H, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    # q heads g*G..(g+1)*G-1 share kv head g (repeat semantics)
+    qb = qp.reshape(B, Hkv, G, nq, q_chunk, D).transpose(3, 0, 1, 2, 4, 5)
+    #                                          (nq, B, Hkv, G, qc, D)
+    kb = kp.reshape(B, Hkv, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, Hkv, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
 
     q_pos_base = jnp.arange(q_chunk)
     kv_pos_base = jnp.arange(kv_chunk)
@@ -111,7 +116,7 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
             m, l, acc = carry
             ki, kblk, vblk = ki_kv
             kpos = ki * kv_chunk + kv_pos_base               # (kc,)
-            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
                            preferred_element_type=jnp.float32) * scale
             mask = (kpos[None, :] <= Skv - 1)                # valid (unpadded) keys
             mask = mask & (qpos[:, None] >= 0)
@@ -119,30 +124,31 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
                 mask = mask & (qpos[:, None] >= kpos[None, :])
             if window is not None:
                 mask = mask & (qpos[:, None] - kpos[None, :] < window)
-            s = jnp.where(mask[None, None], s, -jnp.inf)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
             m_new = jnp.maximum(m, s.max(axis=-1))
             # guard fully-masked rows
             m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
             p = jnp.exp(s - m_safe[..., None])
-            p = jnp.where(mask[None, None], p, 0.0)
+            p = jnp.where(mask[None, None, None], p, 0.0)
             corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
             corr = jnp.where(jnp.isinf(m), 0.0, corr)
             l_new = l * corr + p.sum(axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
-                "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+                "bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk,
                 preferred_element_type=jnp.float32)
             return (m_new, l_new, acc_new), None
 
-        init = (jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32),
-                jnp.zeros((B, H, q_chunk), jnp.float32),
-                jnp.zeros((B, H, q_chunk, D), jnp.float32))
+        init = (jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32))
         (m, l, acc), _ = jax.lax.scan(
             kv_step, init, (jnp.arange(nkv), kb, vb))
         out = acc / jnp.maximum(l, 1e-20)[..., None]
         return None, out.astype(q.dtype)
 
-    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))  # (nq,B,H,qc,D)
-    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, nq * q_chunk, D)
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # (nq, B, Hkv, G, qc, D) -> (B, Hq, Sq, D)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * q_chunk, D)
     return out[:, :, :Sq]
 
 
@@ -167,12 +173,12 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     q = constrain(q, ("batch", "heads", None, None))
-    k = _expand_kv(k, hq // hkv, head_axis=1)
-    v = _expand_kv(v, hq // hkv, head_axis=1)
-    k = constrain(k, ("batch", "heads", None, None))
-    v = constrain(v, ("batch", "heads", None, None))
+    # K/V stay at hkv heads end to end — every impl below is GQA-native,
+    # so the (B, Hq, S, D) expansion is never materialized.
+    k = constrain(k, ("batch", "kv_heads", None, None))
+    v = constrain(v, ("batch", "kv_heads", None, None))
     causal = (mask_mode == "causal") and kv_override is None
-    if impl == "pallas" and kv_override is None and q.shape == k.shape:
+    if impl == "pallas" and kv_override is None:
         # differentiable Pallas kernel (custom_vjp) — safe under
         # jax.value_and_grad and gradient accumulation
         from repro.kernels import ops as kops
@@ -182,7 +188,10 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
         # (XLA cost_analysis does not multiply loop bodies by trip count,
         # so the chunked-scan path under-reports FLOPs). O(S^2) memory —
         # never executed, only lowered for counting.
-        s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+        B_, Hq_, Sq_, D_ = q.shape
+        Hkv_ = k.shape[1]
+        qg = q.reshape(B_, Hkv_, Hq_ // Hkv_, Sq_, D_)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
                        preferred_element_type=jnp.float32) / jnp.sqrt(
                            q.shape[-1]).astype(jnp.float32)
         qpos = jnp.arange(q.shape[2])[:, None]
@@ -192,9 +201,10 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
             mask &= qpos >= kpos
         if window is not None:
             mask &= (qpos - kpos) < window
-        s = jnp.where(mask[None, None], s, -1e30)
+        s = jnp.where(mask[None, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v
+                         ).reshape(B_, Hq_, Sq_, D_)
     else:
         out = _chunk_attn_flash(q, k, v, causal=causal, window=window)
     out = constrain(out, ("batch", "heads", None, None))
@@ -261,23 +271,28 @@ def _decode_attn_kvseq_sharded(rules, q, k_tok, v_tok, cache, slot, filled,
             vc, vt.astype(vc.dtype), (0, lclamp, 0, 0))
         kc2 = jnp.where(in_range, kc2, kc)
         vc2 = jnp.where(in_range, vc2, vc)
-        kk = _expand_kv(kc2.astype(qb.dtype), n_rep, head_axis=2)
-        vv = _expand_kv(vc2.astype(qb.dtype), n_rep, head_axis=2)
-        s = jnp.einsum("bhqd,bshd->bhqs", qb, kk,
+        # grouped attention over the local un-expanded cache slice: the
+        # q heads fold to (Hkv, n_rep) so K/V are read at Hkv heads
+        Bl, Hq_, one, D_ = qb.shape
+        Hkv_ = kc2.shape[2]
+        kk = kc2.astype(qb.dtype)                             # (B,S_loc,Hkv,D)
+        vv = vc2.astype(qb.dtype)
+        qg = qb.reshape(Bl, Hkv_, n_rep, one, D_)
+        s = jnp.einsum("bhgqd,bshd->bhgqs", qg, kk,
                        preferred_element_type=jnp.float32) * scale
-        valid = (off + jnp.arange(S_loc))[None, None, None, :] < filled_
+        valid = (off + jnp.arange(S_loc))[None, None, None, None, :] < filled_
         s = jnp.where(valid, s, -jnp.inf)
-        m_loc = s.max(axis=-1)                                # (B,Hq,1)
+        m_loc = s.max(axis=-1)                                # (B,Hkv,G,1)
         m_glob = jax.lax.pmax(m_loc, "model")
         m_safe = jnp.where(jnp.isinf(m_glob), 0.0, m_glob)
         p = jnp.exp(s - m_safe[..., None])
         p = jnp.where(valid, p, 0.0)
         l_glob = jax.lax.psum(p.sum(axis=-1), "model")
-        acc = jnp.einsum("bhqs,bshd->bhqd", p.astype(jnp.float32),
+        acc = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(jnp.float32),
                          vv.astype(jnp.float32))
         acc = jax.lax.psum(acc, "model")
         out = (acc / jnp.maximum(l_glob, 1e-20)[..., None]).astype(qb.dtype)
-        return out, kc2, vc2
+        return out.reshape(Bl, Hq_, one, D_), kc2, vc2
 
     qspec = P(bspec, None, None, None)
     cspec = P(bspec, "model", None, None)
@@ -290,11 +305,13 @@ def _decode_attn_kvseq_sharded(rules, q, k_tok, v_tok, cache, slot, filled,
 
 
 def attention_decode(params, x, cache, index, cfg, *,
-                     window: Optional[int] = None):
+                     window: Optional[int] = None, impl: str = "reference"):
     """One-token decode. x: (B, 1, d). cache: {'k','v'} (B, S, Hkv, D).
     ``index``: scalar int32 — number of tokens already in the cache.
     Returns (y, new_cache). With a sliding window the cache is a ring buffer
-    of size min(window, S)."""
+    of size min(window, S). ``impl="pallas"`` streams the un-expanded GQA
+    cache through the flash-decode kernel (one read serves each query
+    group); the jnp path uses the same grouped layout via einsum."""
     B = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     S = cache["k"].shape[1]
@@ -328,15 +345,22 @@ def attention_decode(params, x, cache, index, cfg, *,
         cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), (0, slot, 0, 0))
     k_new = constrain(k_new, axes)
     v_new = constrain(v_new, axes)
-    # expanded attention over the cache
-    kk = _expand_kv(k_new.astype(x.dtype), hq // hkv, head_axis=2)
-    vv = _expand_kv(v_new.astype(x.dtype), hq // hkv, head_axis=2)
-    s = jnp.einsum("bhqd,bshd->bhqs", q, kk,
-                   preferred_element_type=jnp.float32) / jnp.sqrt(hd)
-    valid = jnp.arange(S)[None, None, None, :] < filled
-    s = jnp.where(valid, s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhqs,bshd->bhqd", p.astype(vv.dtype), vv)
+    if impl == "pallas":
+        # GQA-native flash-decode kernel streaming the cache in its
+        # stored (B, S, Hkv, D) layout — no transposed copy is built
+        from repro.kernels import ops as kops
+        out = kops.flash_decode(q, k_new.astype(x.dtype),
+                                v_new.astype(x.dtype), filled)
+    else:
+        # grouped attention over the un-expanded cache
+        qg = q.reshape(B, hkv, hq // hkv, 1, hd)
+        s = jnp.einsum("bhgqd,bshd->bhgqs", qg, k_new.astype(x.dtype),
+                       preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+        valid = jnp.arange(S)[None, None, None, None, :] < filled
+        s = jnp.where(valid, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(x.dtype),
+                         v_new.astype(x.dtype)).reshape(B, hq, 1, hd)
     y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(y, ("batch", None, "embed")), {"k": k_new, "v": v_new}
 

@@ -325,11 +325,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _apply_block_decode(kind, bp, x, cache, index, cfg, *, window, enc_out=None,
-                        cross_p=None):
+                        cross_p=None, impl: str = "reference"):
     if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
         h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
         y, cache = L.attention_decode(bp["attn"], h, cache, index, cfg,
-                                      window=window)
+                                      window=window, impl=impl)
         x = x + y
         if cross_p is not None:
             h = L.rmsnorm(cross_p["norm"], x, cfg.norm_eps)
@@ -355,8 +355,10 @@ def _apply_block_decode(kind, bp, x, cache, index, cfg, *, window, enc_out=None,
 
 
 def decode_step(params, cfg: ModelConfig, tokens, state, *, window=None,
-                unroll: bool = False):
-    """tokens: (B,1) int32. Returns (logits (B,1,V), new state)."""
+                unroll: bool = False, impl: str = "reference"):
+    """tokens: (B,1) int32. Returns (logits (B,1,V), new state).
+    ``impl="pallas"`` routes dense attention decode through the GQA-native
+    flash-decode kernel."""
     unit, n_rep = pattern_unit(cfg)
     x = L.embed(params["embed"], tokens)
     index = state["index"]
@@ -375,7 +377,7 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, window=None,
                                  kind in (BLOCK_ATTN, BLOCK_MOE)) else None
             x, cache = _apply_block_decode(kind, bp, x, cache, index, cfg,
                                            window=window, enc_out=enc_out,
-                                           cross_p=cp)
+                                           cross_p=cp, impl=impl)
             new_caches[f"pos{pos}"] = cache
         return x, new_caches
 

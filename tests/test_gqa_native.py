@@ -1,0 +1,226 @@
+"""GQA-native attention: structural guarantees that the compiled pallas
+paths never materialize an hq-expanded K/V tensor, plus decode parity
+over a partially-filled cache, the zero axes-registration lifetime fix,
+and the MemoryModel's kv-heads accounting."""
+from dataclasses import replace
+
+import jax
+import jax.core as jcore
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import model as mm
+from repro.models.param import split
+
+RNG = np.random.default_rng(11)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def _gqa_cfg():
+    # reduced llama-0.5b is already grouped: 4 q heads over 2 kv heads
+    cfg = replace(get_config("llama-0.5b", reduced=True),
+                  dtype="float32", param_dtype="float32")
+    assert cfg.n_heads != cfg.n_kv_heads
+    return cfg
+
+
+# ------------------------------------------------------------ jaxpr walk --
+
+def _iter_eqns(jaxpr):
+    """Every eqn in ``jaxpr`` including nested call/scan/custom_vjp/pallas
+    sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            items = val if isinstance(val, (list, tuple)) else (val,)
+            for item in items:
+                if isinstance(item, jcore.ClosedJaxpr):
+                    yield from _iter_eqns(item.jaxpr)
+                elif isinstance(item, jcore.Jaxpr):
+                    yield from _iter_eqns(item)
+
+
+def _all_shapes(jaxpr):
+    shapes = set()
+    for eqn in _iter_eqns(jaxpr):
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is not None:
+                shapes.add(tuple(shape))
+    return shapes
+
+
+def test_gqa_train_step_has_no_expanded_kv_intermediate():
+    """The acceptance gate: tracing value_and_grad(loss_fn, impl=pallas)
+    for a GQA config must show (a) no jnp.repeat-style broadcast
+    intermediate that an hq-expansion would create, and (b) the flash
+    pallas_calls receiving K/V at B*Hkv leading dim (un-expanded)."""
+    cfg = _gqa_cfg()
+    # B=3 keeps the banned (B, Hkv, G, S, hd) signature distinct from the
+    # (n_layers=2)-leading stacked scan residuals of the 2-layer config
+    B, S = 3, 16
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = Hq // Hkv
+    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(3, cfg.vocab_size, (B, S + 1)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+    def loss(p):
+        return mm.loss_fn(p, cfg, batch, impl="pallas")[0]
+
+    jaxpr = jax.make_jaxpr(jax.value_and_grad(loss))(params)
+    shapes = _all_shapes(jaxpr.jaxpr)
+    # jnp.repeat(k, G, axis=1) lowers through a (B, Hkv, G, S, hd)
+    # broadcast before reshaping to (B, Hq, S, hd) — its absence means no
+    # K/V expansion anywhere in the step (fwd, custom-VJP bwd included)
+    assert (B, Hkv, G, S, hd) not in shapes
+    assert (B, Hkv, 1, S, hd) not in shapes
+
+    kv_lead = set()
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        for var in eqn.invars:
+            shape = tuple(var.aval.shape)
+            if len(shape) == 3 and shape[2] == hd and shape[1] >= S:
+                kv_lead.add(shape[0])
+    # flash kernels see q at B*Hq and K/V at B*Hkv — both leading dims
+    # must appear among the attention pallas_call operands
+    assert B * Hkv in kv_lead, kv_lead
+    assert B * Hq in kv_lead, kv_lead
+
+
+def test_gqa_decode_step_has_no_expanded_cache():
+    cfg = _gqa_cfg()
+    B, S = 2, 24
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    params, _ = split(L.attention_init(jax.random.PRNGKey(0), cfg,
+                                       dtype=jnp.float32))
+    cache = {"k": _rand((B, S, Hkv, hd)), "v": _rand((B, S, Hkv, hd))}
+    x = _rand((B, 1, cfg.d_model))
+
+    def step(p, xv, c, i):
+        return L.attention_decode(p, xv, c, i, cfg, impl="pallas")
+
+    jaxpr = jax.make_jaxpr(step)(params, x, cache, jnp.int32(7))
+    shapes = _all_shapes(jaxpr.jaxpr)
+    # an expanded cache would appear as (B, S, Hq, hd) (jnp.repeat on
+    # axis 2) or as a (B, Hq, S, hd) kernel operand; only Hkv may occur
+    assert (B, S, Hq, hd) not in shapes
+    assert (B, S, Hkv, Hq // Hkv, hd) not in shapes
+    assert (B, Hq, S, hd) not in shapes
+
+
+# ------------------------------------------------------- decode parity ---
+
+@pytest.mark.parametrize("index", [0, 3, 22])
+def test_decode_pallas_matches_reference_partial_cache(index):
+    """Pallas decode vs the jnp reference with a partially-filled cache:
+    identical outputs AND identical cache updates at every fill level."""
+    cfg = _gqa_cfg()
+    B, S = 2, 24
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    params, _ = split(L.attention_init(jax.random.PRNGKey(1), cfg,
+                                       dtype=jnp.float32))
+    cache = {"k": _rand((B, S, Hkv, hd)), "v": _rand((B, S, Hkv, hd))}
+    x = _rand((B, 1, cfg.d_model))
+    y_ref, c_ref = L.attention_decode(params, x, cache, jnp.int32(index),
+                                      cfg, impl="reference")
+    y_pal, c_pal = L.attention_decode(params, x, cache, jnp.int32(index),
+                                      cfg, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=2e-5, atol=2e-5)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(c_ref[key]),
+                                   np.asarray(c_pal[key]), atol=0)
+
+
+def test_full_model_decode_pallas_matches_forward():
+    """Sequential pallas decode reproduces the full-sequence forward on a
+    GQA model (cache exactness through the flash-decode kernel)."""
+    cfg = _gqa_cfg()
+    B, S = 2, 10
+    toks = jnp.asarray(RNG.integers(3, cfg.vocab_size, (B, S)), jnp.int32)
+    params, _ = mm.init_model(jax.random.PRNGKey(1), cfg)
+    hidden, _ = mm.forward(params, cfg, {"tokens": toks})
+    full_logits = mm.lm_logits(params, cfg, hidden)
+    state = mm.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = mm.decode_step(params, cfg, toks[:, t:t + 1], state,
+                                   impl="pallas")
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------- zero axes registration ----
+
+def test_register_axes_lives_and_dies_with_the_rules_instance():
+    """Regression for the id(rules)-keyed cache: axes must be stored on
+    the instance (so a recycled id can never serve a stale tree) and two
+    live instances must never share a registration."""
+    from repro.core.sharding import MeshRules
+    from repro.core.zero import _AXES_ATTR, _axes_of, register_axes
+
+    mesh = jax.make_mesh((1,), ("data",))
+    r1 = MeshRules(mesh, zero_stage=0)
+    r2 = MeshRules(mesh, zero_stage=0)
+    axes1, axes2 = {"a": ("embed",)}, {"a": ("vocab",)}
+    register_axes(r1, axes1)
+    register_axes(r2, axes2)
+    assert _axes_of(None, r1) is axes1
+    assert _axes_of(None, r2) is axes2
+    assert getattr(r1, _AXES_ATTR) is axes1  # instance-held, not global
+    r3 = MeshRules(mesh, zero_stage=0)
+    with pytest.raises(RuntimeError):
+        _axes_of(None, r3)
+
+
+# -------------------------------------------------- MemoryModel satellite -
+
+def test_memory_model_counts_kv_at_n_kv_heads():
+    from repro.core.workload import MemoryModel
+
+    cfg = get_config("llama-1.1b")          # 32 q heads over 4 kv heads
+    assert cfg.n_kv_heads < cfg.n_heads
+    hd = cfg.resolved_head_dim
+    kv_gap = 2 * 4096 * (cfg.n_heads - cfg.n_kv_heads) * hd * 2
+
+    # remat: the live (re)computed layer's K/V (x2) is counted at the
+    # width the kernels allocate
+    native = MemoryModel(cfg, 4096, 0, 4)
+    legacy = MemoryModel(cfg, 4096, 0, 4, gqa_native_attn=False)
+    a_native = native.activation_bytes_per_sample()
+    a_legacy = legacy.activation_bytes_per_sample()
+    assert a_legacy - a_native == pytest.approx(kv_gap * 2)
+    # wider feasible micro-batch on the same device — the Poplar payoff
+    assert native.max_batch(16.0) >= legacy.max_batch(16.0)
+
+    # no remat: every saved attention layer's K/V shrinks; the legacy
+    # estimate is byte-identical to the pre-GQA accounting (the 14x
+    # catch-all already included expanded K/V — no double count)
+    nat_nr = MemoryModel(cfg, 4096, 0, 4, remat=False)
+    leg_nr = MemoryModel(cfg, 4096, 0, 4, remat=False,
+                         gqa_native_attn=False)
+    base_nr = 14 * 4096 * cfg.d_model * 2 * cfg.n_layers
+    assert leg_nr.activation_bytes_per_sample() >= base_nr
+    assert (leg_nr.activation_bytes_per_sample()
+            - nat_nr.activation_bytes_per_sample()
+            == pytest.approx(kv_gap * cfg.n_layers))
+
+    mha = get_config("llama-0.5b")          # 16/16: no GQA, no change
+    assert (MemoryModel(mha, 4096, 0, 4).activation_bytes_per_sample()
+            == MemoryModel(mha, 4096, 0, 4, gqa_native_attn=False
+                           ).activation_bytes_per_sample())

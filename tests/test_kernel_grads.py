@@ -70,6 +70,45 @@ def test_rmsnorm_grad_matches_reference(shape):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
+@pytest.mark.parametrize("Hq,Hkv,S,causal,window,dtype", [
+    (2, 2, 96, True, None, jnp.float32),    # G=1 (MHA degenerate case)
+    (6, 1, 80, True, None, jnp.float32),    # G=6 (internlm2-like ratio)
+    (8, 1, 50, True, None, jnp.float32),    # G=8, odd seq len
+    (8, 2, 70, True, 24, jnp.float32),      # G=4 + sliding window + odd S
+    (6, 2, 33, False, None, jnp.float32),   # G=3, non-causal, odd S
+    (4, 2, 64, True, None, jnp.bfloat16),   # G=2, bf16
+])
+def test_flash_attention_gqa_grads_match_expanded_reference(
+        Hq, Hkv, S, causal, window, dtype):
+    """hq != hkv gradients: the fused dKV group accumulation must equal
+    differentiating through the oracle's physical expansion (which sums
+    the expanded dK/dV over each group via the repeat's transpose)."""
+    D = 32
+    q = _rand((1, Hq, S, D), dtype)
+    k = _rand((1, Hkv, S, D), dtype)
+    v = _rand((1, Hkv, S, D), dtype)
+    co = _rand((1, Hq, S, D))
+
+    def loss_pallas(q, k, v):
+        o = flash_attention_vjp(q, k, v, causal=causal, window=window,
+                                block_q=32, block_k=32, interpret=True)
+        return (o.astype(jnp.float32) * co).sum()
+
+    def loss_ref(q, k, v):
+        o = ref.gqa_attention_reference(q, k, v, causal=causal,
+                                        window=window)
+        return (o.astype(jnp.float32) * co).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    for a, b in zip(gp, gr):
+        assert a.shape == b.shape  # dK/dV stay at Hkv heads
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol)
+
+
 def test_flash_attention_bf16_grads_keep_dtype():
     q, k, v = (_rand((1, 2, 64, 32), jnp.bfloat16) for _ in range(3))
 
@@ -123,6 +162,21 @@ def test_autotune_cache_round_trip(tmp_path, monkeypatch):
     key = autotune.key_of("flash_fwd", **kw)
     assert data[key]["blocks"] == list(first)
     assert data[key]["source"].startswith("static")
+
+
+def test_autotune_gqa_group_size_does_not_alias(tmp_path, monkeypatch):
+    """MHA and GQA shapes must resolve to distinct cache keys, so a tile
+    measured for G=1 never answers a G=6 lookup (and vice versa)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    kw = dict(S=256, D=64, dtype="float32", causal=True, window=None)
+    k1 = autotune.key_of("flash_fwd", **kw)          # default G=1
+    k6 = autotune.key_of("flash_fwd", G=6, **kw)
+    assert k1 != k6
+    autotune.record(k1, (128, 128))
+    autotune.record(k6, (64, 128))
+    assert autotune.lookup("flash_fwd", G=1, **kw) == (128, 128)
+    assert autotune.lookup("flash_fwd", G=6, **kw) == (64, 128)
 
 
 def test_autotune_measured_sweep_writes_cache(tmp_path, monkeypatch):

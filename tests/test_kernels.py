@@ -39,6 +39,24 @@ def test_flash_attention_sweep(B, H, S, D, dtype, causal):
                                **TOL[dtype])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Hq,Hkv,S", [
+    (6, 1, 96), (8, 2, 128), (4, 2, 200),  # non-multiple S
+    (56, 8, 64),                           # llava-next-34b head ratio
+])
+def test_flash_attention_gqa_sweep(Hq, Hkv, S, dtype):
+    """Un-expanded K/V through the grid index_map vs the expanding oracle."""
+    D = 32
+    q = _rand((1, Hq, S, D), dtype)
+    k = _rand((1, Hkv, S, D), dtype)
+    v = _rand((1, Hkv, S, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=32,
+                                 block_k=32, interpret=True)
+    want = ref.gqa_attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
 # --------------------------------------------------------- flash decode --
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -52,11 +70,30 @@ def test_flash_decode_sweep(B, H, S, D, dtype, filled_frac):
     q = _rand((B, H, 1, D), dtype)
     k = _rand((B, H, S, D), dtype)
     v = _rand((B, H, S, D), dtype)
-    got = flash_decode_pallas(q, k, v, jnp.int32(filled), block_k=64,
-                              interpret=True)
+    # the kernel takes the cache's stored (B, S, H, D) layout
+    got = flash_decode_pallas(q, k.swapaxes(1, 2), v.swapaxes(1, 2),
+                              jnp.int32(filled), block_k=64, interpret=True)
     want = ref.decode_attention_reference(q, k, v, filled)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(6, 1), (8, 2), (16, 2)])
+@pytest.mark.parametrize("filled_frac", [0.05, 0.6, 1.0])
+def test_flash_decode_gqa_sweep(Hq, Hkv, filled_frac):
+    """GQA decode over a partially-filled un-expanded cache: the grouped
+    q block must see exactly the valid prefix of its KV head."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    B, S, D = 2, 96, 32
+    filled = max(int(S * filled_frac), 1)
+    q = _rand((B, Hq, 1, D), jnp.float32)
+    k = _rand((B, Hkv, S, D), jnp.float32)
+    v = _rand((B, Hkv, S, D), jnp.float32)
+    got = flash_decode_pallas(q, k.swapaxes(1, 2), v.swapaxes(1, 2),
+                              jnp.int32(filled), block_k=32, interpret=True)
+    want = ref.gqa_decode_attention_reference(q, k, v, filled)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_flash_decode_matches_model_decode_softmax():
@@ -67,8 +104,8 @@ def test_flash_decode_matches_model_decode_softmax():
     kc = _rand((B, H, S, D), jnp.float32)
     vc = _rand((B, H, S, D), jnp.float32)
     filled = 40
-    got = flash_decode_pallas(q, kc, vc, jnp.int32(filled), block_k=32,
-                              interpret=True)
+    got = flash_decode_pallas(q, kc.swapaxes(1, 2), vc.swapaxes(1, 2),
+                              jnp.int32(filled), block_k=32, interpret=True)
     s = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / jnp.sqrt(D)
     valid = jnp.arange(S)[None, None, None, :] < filled
     s = jnp.where(valid, s, -jnp.inf)
