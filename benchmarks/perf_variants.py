@@ -7,10 +7,18 @@ artifacts, plus live attention kernel timings: the jnp reference
 GQA rows compare the legacy hq-expanded reference against the GQA-native
 Pallas kernels at group sizes hq/hkv in {1, 6, 8} (fwd+bwd) plus a
 decode-latency row, reporting the K/V bytes the un-expanded layout saves
-per step."""
+per step.
+
+ZeRO-3 overlap rows time the XLA-auto stage-3 step against the scheduled
+shard_map step (core/overlap.py) on an 8-device CPU mesh (subprocess),
+reporting step time, tokens/sec and the analytic exposed-comm bytes of
+each schedule."""
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 from pathlib import Path
 from typing import Dict, List
 
@@ -173,6 +181,88 @@ def gqa_decode_row(B: int = 1, Hkv: int = 2, G: int = 8) -> List[str]:
         f"kv_bytes_saved_per_step={kv_expanded - kv_native}")]
 
 
+_OVERLAP_SUBPROC = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_config
+from repro.core import overlap
+from repro.core.sharding import MeshRules
+from repro.core.zero import make_train_step, model_shardings, register_axes
+from repro.models import model as mm
+from repro.optim.adamw import adamw_init
+
+cfg = get_config("llama-0.5b", reduced=True)
+mesh = jax.make_mesh((8,), ("data",))
+params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+B, S = 16, 64
+toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)), jnp.int32)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+         "loss_mask": jnp.ones((B, S), jnp.float32)}
+out = {}
+for mode in ("xla", "scheduled"):
+    rules = MeshRules(mesh, zero_stage=3, overlap=mode)
+    register_axes(rules, axes)
+    p_specs, o_specs, _ = model_shardings(rules, params, axes)
+    with mesh:
+        pp = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
+        oo = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
+        step = jax.jit(make_train_step(cfg, rules, lr=1e-3))
+        pp, oo, met = step(pp, oo, batch)   # compile + warm up
+        jax.block_until_ready(met["loss"])
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            pp, oo, met = step(pp, oo, batch)
+            jax.block_until_ready(met["loss"])
+            times.append(time.perf_counter() - t0)
+    plan = overlap.plan_comm(rules, params, axes, batch)
+    rep = (overlap.comm_report(plan, params, remat=cfg.remat)
+           if not isinstance(plan, str) else {})
+    ms = sorted(times)[len(times) // 2] * 1e3
+    out[mode] = {"ms": ms, "tokens_per_sec": B * S / (ms / 1e3),
+                 "report": rep}
+print("OVERLAP_JSON " + json.dumps(out))
+"""
+
+
+def zero3_overlap_rows() -> List[str]:
+    """Auto-vs-scheduled ZeRO-3 rows: wall time per train step on an
+    8-placeholder-device CPU mesh (subprocess — the bench process keeps
+    its single device) plus each schedule's exposed-comm bytes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(Path(__file__).resolve().parents[1] / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _OVERLAP_SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=900)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith("OVERLAP_JSON ")), None)
+    if line is None:
+        raise RuntimeError(f"overlap subprocess failed: "
+                           f"{proc.stdout[-500:]}{proc.stderr[-500:]}")
+    data = json.loads(line[len("OVERLAP_JSON "):])
+    rep = data["scheduled"]["report"]
+    exposed_auto = rep["exposed_bytes_auto"]
+    exposed_sched = rep["exposed_bytes_scheduled"]
+    ms_a, ms_s = data["xla"]["ms"], data["scheduled"]["ms"]
+    return [
+        csv_row("perf/zero3_overlap/8dev_cpu/auto", ms_a * 1e3,
+                f"ms={ms_a:.2f};"
+                f"tokens_per_sec={data['xla']['tokens_per_sec']:.0f};"
+                f"exposed_comm_bytes={int(exposed_auto)}"),
+        csv_row("perf/zero3_overlap/8dev_cpu/scheduled", ms_s * 1e3,
+                f"ms={ms_s:.2f};"
+                f"tokens_per_sec={data['scheduled']['tokens_per_sec']:.0f};"
+                f"speedup={ms_a / ms_s:.2f}x;"
+                f"exposed_comm_bytes={int(exposed_sched)};"
+                f"hidden_comm_bytes={int(rep['hidden_bytes_scheduled'])};"
+                f"exposed_lower_than_auto={exposed_sched < exposed_auto}"),
+    ]
+
+
 def run() -> List[str]:
     base: Dict = {}
     variants = []
@@ -220,6 +310,11 @@ def run() -> List[str]:
         rows.extend(gqa_decode_row())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/kernels/gqa/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(zero3_overlap_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/zero3_overlap/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

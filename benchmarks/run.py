@@ -1,11 +1,64 @@
 """Benchmark driver — one section per paper table/figure + the roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py)
+and writes a ``BENCH_<n>.json`` perf-trajectory artifact at the repo root
+(next index after the existing artifacts), so successive PRs have a
+machine-readable baseline: every perf row's step time plus the parsed
+tokens/sec and exposed-comm bytes where a row reports them.
 """
 from __future__ import annotations
 
+import json
+import re
 import sys
 import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _parse_derived(derived: str) -> dict:
+    """Pull the trajectory-relevant numeric fields out of a row's derived
+    k=v;k=v blob (best effort — rows are free-form)."""
+    out = {}
+    for key in ("ms", "tokens_per_sec", "exposed_comm_bytes",
+                "hidden_comm_bytes", "kv_bytes_saved_per_step", "speedup"):
+        m = re.search(rf"{key}=([-0-9.eE]+)x?(?:;|$)", derived)
+        if m:
+            try:
+                out[key] = float(m.group(1))
+            except ValueError:
+                pass
+    return out
+
+
+def write_bench_artifact(rows_by_section: dict) -> Path:
+    """Persist the perf rows as BENCH_<n>.json (n = next free index)."""
+    taken = []
+    for fp in REPO_ROOT.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", fp.name)
+        if m:
+            taken.append(int(m.group(1)))
+    n = max(taken) + 1 if taken else 0
+    entries = []
+    for section, rows in rows_by_section.items():
+        for r in rows:
+            name, us, derived = r.split(",", 2)
+            entries.append({"section": section, "name": name,
+                            "us_per_call": float(us), "derived": derived,
+                            **_parse_derived(derived)})
+    artifact = {
+        "bench_index": n,
+        "created": datetime.now(timezone.utc).isoformat(),
+        "schema": "name/us_per_call/derived + parsed ms, tokens_per_sec, "
+                  "exposed_comm_bytes, hidden_comm_bytes, "
+                  "kv_bytes_saved_per_step, speedup",
+        "rows": entries,
+    }
+    fp = REPO_ROOT / f"BENCH_{n}.json"
+    fp.write_text(json.dumps(artifact, indent=1))
+    return fp
 
 
 def main() -> None:
@@ -24,6 +77,7 @@ def main() -> None:
         ("perf (baseline vs optimized variants)", perf_variants.run),
     ]
     print("name,us_per_call,derived")
+    artifact_sections = {}
     for title, fn in sections:
         t0 = time.time()
         try:
@@ -34,8 +88,13 @@ def main() -> None:
             continue
         for r in rows:
             print(r)
+        if title.startswith(("perf", "roofline")):
+            artifact_sections[title.split()[0]] = rows
         print(f"# {title}: {len(rows)} rows in {time.time()-t0:.1f}s",
               file=sys.stderr)
+    if artifact_sections:
+        fp = write_bench_artifact(artifact_sections)
+        print(f"# perf-trajectory artifact: {fp}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -151,7 +151,15 @@ def allocate_stage01(curves: Dict[str, PerfCurve], gbs: int) -> AllocationPlan:
 
 def allocate_stage23(curves: Dict[str, PerfCurve], gbs: int,
                      comm_time_per_step: float, zero_stage: int,
-                     sweep_points: int = 200) -> AllocationPlan:
+                     sweep_points: int = 200,
+                     overlap_factor: float = 0.0) -> AllocationPlan:
+    """Algorithm 2's per-microstep time-budget sweep. ``overlap_factor``
+    models the scheduled ZeRO path: only the *exposed* part of the
+    per-step collective extends the wall time, which shifts the sweep's
+    load-balance vs. collective-count trade-off (hiding comm under
+    compute makes extra accumulation steps cheaper, so shorter budgets /
+    more micro-steps can win)."""
+    from repro.core.workload import exposed_comm_time
     names = list(curves)
     t_min = min(curves[n].time_of_batch(1) for n in names)
     t_max = max(curves[n].time_of_batch(curves[n].mbs) for n in names)
@@ -164,7 +172,9 @@ def allocate_stage23(curves: Dict[str, PerfCurve], gbs: int,
         gas = math.ceil(gbs / msbs)
         # actual per-microstep time is the max over devices of their chosen b
         t_step = max(curves[n].time_of_batch(bs[n]) for n in names)
-        wall = (t_step + comm_time_per_step) * gas
+        comm_exposed = exposed_comm_time(comm_time_per_step, t_step,
+                                         overlap_factor)
+        wall = (t_step + comm_exposed) * gas
         if best is None or wall < best[0]:
             best = (wall, dict(bs), gas, float(t))
     assert best is not None, "no feasible allocation"

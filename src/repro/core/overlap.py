@@ -1,0 +1,456 @@
+"""Explicitly scheduled ZeRO-3: double-buffered parameter prefetch +
+per-layer gradient reduce-scatter, as a `shard_map` train step.
+
+The XLA-auto stage-3 path (``rules.overlap="xla"``, the parity oracle)
+leaves every collective to SPMD: one all-gather per parameter *use*,
+serialized against the compute that needs it, and a grad tree that is
+materialized in full before the optimizer's sharding constraint turns it
+back into shards. Poplar's premise is that heterogeneous clusters live
+or die by exactly these per-stage collectives, so this module makes them
+explicit and schedulable:
+
+- parameters enter the step as their ZeRO-3 shards (`shard_map` over the
+  mesh, in_specs = the stage-3 param specs);
+- non-stacked leaves (embeddings, final norm, ...) are all-gathered once
+  at step start;
+- the scanned layer stack is *streamed*: while layer ``l`` computes, the
+  all-gather for layer ``l+1``'s shard is already in flight (a two-deep
+  software pipeline carried through the scan — `models/model._run_stack`
+  consumes it via a :class:`LayerStream`);
+- the backward of each gather is a *reduce-scatter* (`gather_params` is a
+  ``jax.custom_vjp``), so each layer's gradient is scattered back to
+  shards inside the backward sweep — the full gradient tree never exists,
+  and gradient accumulation (`accum_steps>1`) accumulates shards;
+- with ``rules.comm_dtype="int8"`` the sharded collectives ride
+  `core/qcomm`'s quantized wire format (ZeRO++ qwZ/qgZ style).
+
+Scheduling note (prefetch vs. remat): with ``rules.overlap_prefetch``
+(default) the gathered unit params live in the scan carry, so the
+backward consumes the saved gather (one AG per layer total) at the cost
+of holding gathered layers in the fwd residuals. ``overlap_prefetch=
+False`` moves the gather inside the remat region instead: residuals stay
+sharded and the backward re-gathers (AG fwd + AG bwd + RS — the classic
+ZeRO-3 schedule, and what `workload.comm_time_per_microstep` models).
+
+The scheduled path is the pure ZeRO/data-parallel regime — exactly
+Poplar's setting. Tensor-parallel parameter sharding (a ``model`` axis
+outside ``dp_only``) is not schedulable here and falls back to the XLA
+path under ``rules.overlap="auto"``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qcomm
+from repro.core.sharding import MeshRules, shard_map_compat, use_rules
+
+# layer-scan comm hidden under compute: the fraction of per-microstep
+# collective time the prefetch pipeline can hide. 0.7 is the calibration
+# default for the planner/simulator overlap term (first-layer fill +
+# last-layer drain + the non-stacked leaves stay exposed); replace with a
+# measured value from `benchmarks/perf_variants.py` overlap rows on real
+# hardware.
+SCHEDULED_OVERLAP_FACTOR = 0.7
+
+# subtrees of the param dict that are stacked over the layer scan and
+# therefore streamed layer-by-layer instead of gathered up front
+STREAM_KEYS = ("stack", "cross")
+
+
+# ---------------------------------------------------------------------------
+# per-leaf communication metadata
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafComm:
+    """How one param leaf moves between its shard and its full form.
+
+    ``shard_dim``: the dimension sharded over the ZeRO axes (None = the
+    leaf is replicated — no divisible dim); ``shard_axes``: the mesh axes
+    on that dim; ``psum_axes``: data-parallel axes the leaf is *not*
+    sharded over (its gradient must be psum'd across them — e.g. the
+    ``pod`` axis under hierarchical ZeRO); ``nshard``: product of the
+    shard axis sizes; ``comm_dtype``: "int8" routes the sharded
+    collectives through qcomm.
+    """
+    shard_dim: Optional[int]
+    shard_axes: Tuple[str, ...] = ()
+    psum_axes: Tuple[str, ...] = ()
+    nshard: int = 1
+    comm_dtype: Optional[str] = None
+
+    def slice_comm(self) -> "LeafComm":
+        """Comm meta for a layer slice of a stacked leaf (drops dim 0)."""
+        sd = None if self.shard_dim is None else self.shard_dim - 1
+        return LeafComm(sd, self.shard_axes, self.psum_axes, self.nshard,
+                        self.comm_dtype)
+
+
+def _spec_names(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+# ---------------------------------------------------------------------------
+# gather (fwd) / reduce-scatter (bwd) — the scheduled collective pair
+# ---------------------------------------------------------------------------
+
+def _q_all_gather(shard: jnp.ndarray, comm: LeafComm) -> jnp.ndarray:
+    axis = comm.shard_axes[0]
+    moved = jnp.moveaxis(shard, comm.shard_dim, 0)
+    full = qcomm.quantized_all_gather(moved.reshape(-1), axis)
+    full = full.reshape((comm.nshard * moved.shape[0],) + moved.shape[1:])
+    return jnp.moveaxis(full, 0, comm.shard_dim).astype(shard.dtype)
+
+
+def _q_reduce_scatter(g: jnp.ndarray, comm: LeafComm) -> jnp.ndarray:
+    axis = comm.shard_axes[0]
+    moved = jnp.moveaxis(g, comm.shard_dim, 0)
+    loc_shape = (moved.shape[0] // comm.nshard,) + moved.shape[1:]
+    part = qcomm.quantized_reduce_scatter(
+        moved.astype(jnp.float32).reshape(-1), axis)
+    n_loc = 1
+    for d in loc_shape:
+        n_loc *= d
+    part = part[:n_loc].reshape(loc_shape)
+    return jnp.moveaxis(part, 0, comm.shard_dim).astype(g.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def gather_params(shard, comm: LeafComm):
+    """shard -> full parameter. VJP: full-grad -> reduce-scattered shard
+    grad (plus a psum over the data axes the leaf is replicated across).
+    The custom VJP is what puts the reduce-scatter *inside* the backward
+    layer sweep instead of after it."""
+    return _gather_impl(shard, comm)
+
+
+def _gather_impl(shard, comm: LeafComm):
+    if comm.shard_dim is None:
+        return shard
+    if comm.comm_dtype == "int8":
+        return _q_all_gather(shard, comm)
+    return jax.lax.all_gather(shard, comm.shard_axes, axis=comm.shard_dim,
+                              tiled=True)
+
+
+def _gather_fwd(shard, comm: LeafComm):
+    return _gather_impl(shard, comm), None
+
+
+def _gather_bwd(comm: LeafComm, _, g):
+    if comm.shard_dim is not None:
+        if comm.comm_dtype == "int8":
+            g = _q_reduce_scatter(g, comm)
+        else:
+            g = jax.lax.psum_scatter(g, comm.shard_axes,
+                                     scatter_dimension=comm.shard_dim,
+                                     tiled=True)
+    if comm.psum_axes:
+        g = jax.lax.psum(g, comm.psum_axes)
+    return (g,)
+
+
+gather_params.defvjp(_gather_fwd, _gather_bwd)
+
+
+def gather_tree(shards, comm_tree):
+    return jax.tree.map(gather_params, shards, comm_tree)
+
+
+@dataclass
+class LayerStream:
+    """Handed to `models/model._run_stack`: ``gather`` maps one layer's
+    sharded slice tree to its full form; ``prefetch`` selects the
+    double-buffered carry pipeline (vs. gather-inside-remat)."""
+    gather: Callable[[Any], Any]
+    prefetch: bool = True
+
+
+# ---------------------------------------------------------------------------
+# planning: specs + comm metadata for one (rules, params, batch) triple
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CommPlan:
+    rules: MeshRules
+    p_specs: Any
+    o_specs: Any
+    b_specs: Any
+    comm: Any                       # tree of LeafComm, same structure as params
+    stream_keys: Tuple[str, ...]
+    dp_axes: Tuple[str, ...]
+    n_dp: int
+
+
+class _Unsupported(Exception):
+    pass
+
+
+def plan_comm(rules: MeshRules, params, axes, batch,
+              accum_steps: int = 1):
+    """Build the CommPlan for the scheduled step, or return a ``str``
+    reason why this (mesh, rules, batch) combination is not schedulable.
+    """
+    try:
+        return _plan_comm(rules, params, axes, batch, accum_steps)
+    except _Unsupported as e:
+        return str(e)
+
+
+def _plan_comm(rules, params, axes, batch, accum_steps):
+    from repro.core import zero
+
+    if rules.zero_stage != 3:
+        raise _Unsupported(
+            f"scheduled overlap targets ZeRO-3 (stage={rules.zero_stage})")
+    mesh = rules.mesh
+    zaxes = rules._zero_axes()
+
+    bdim = 1 if accum_steps > 1 else 0
+    tokens = batch["tokens"]
+    if tokens.ndim < bdim + 1:
+        raise _Unsupported("batch rank does not match accum_steps")
+    bsz = tokens.shape[bdim]
+    bentry = rules.activation_spec(("batch",), (bsz,))[0]
+    dp_axes = _spec_names(bentry)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    for a in zaxes:
+        if mesh.shape.get(a, 1) > 1 and a not in dp_axes:
+            raise _Unsupported(
+                f"batch of {bsz} does not divide across zero axis {a!r}")
+
+    p_specs, o_specs, _ = zero.model_shardings(rules, params, axes)
+
+    def leaf_comm(spec: P):
+        shard_dim, shard_axes = None, ()
+        for i, entry in enumerate(spec):
+            # size-1 mesh axes are sharding no-ops (e.g. the debug mesh's
+            # model axis): nothing to gather or reduce over them
+            names = tuple(n for n in _spec_names(entry)
+                          if mesh.shape.get(n, 1) > 1)
+            if not names:
+                continue
+            non_zero = [n for n in names if n not in zaxes]
+            if non_zero:
+                raise _Unsupported(
+                    f"tensor-parallel param axes {non_zero} — the scheduled "
+                    "path is ZeRO/data-parallel only")
+            shard_dim, shard_axes = i, names
+        for a in shard_axes:
+            if a not in dp_axes:
+                raise _Unsupported(
+                    f"param sharded over {a!r} but batch is not")
+        nshard = 1
+        for a in shard_axes:
+            nshard *= mesh.shape[a]
+        cd = rules.comm_dtype
+        if cd == "int8" and len(shard_axes) != 1:
+            cd = None  # quantized path rides a single axis; fall back
+        psum_axes = tuple(a for a in dp_axes if a not in shard_axes)
+        return LeafComm(shard_dim, tuple(shard_axes), psum_axes, nshard, cd)
+
+    comm = jax.tree.map(leaf_comm, p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+    def bspec(v):
+        parts = [None] * v.ndim
+        parts[bdim] = bentry
+        return P(*parts)
+
+    b_specs = jax.tree.map(bspec, batch)
+    stream_keys = tuple(k for k in STREAM_KEYS if k in params)
+    return CommPlan(rules, p_specs, o_specs, b_specs, comm,
+                    stream_keys, dp_axes, n_dp)
+
+
+# ---------------------------------------------------------------------------
+# the scheduled train step
+# ---------------------------------------------------------------------------
+
+def _psum(x, axes):
+    return jax.lax.psum(x, axes) if axes else x
+
+
+def _global_grad_sq(grads, comm_tree):
+    """Global sum of squared gradients over sharded + replicated leaves
+    (grouped by shard axes so each axis set is psum'd once)."""
+    flat_g = jax.tree.leaves(grads)
+    flat_c = jax.tree.leaves(
+        comm_tree, is_leaf=lambda x: isinstance(x, LeafComm))
+    groups: Dict[Tuple[str, ...], Any] = {}
+    for g, c in zip(flat_g, flat_c):
+        axes = c.shard_axes if c.shard_dim is not None else ()
+        sq = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        groups[axes] = groups.get(axes, 0.0) + sq
+    total = jnp.zeros((), jnp.float32)
+    for axes, s in groups.items():
+        total = total + (jax.lax.psum(s, axes) if axes else s)
+    return total
+
+
+def scheduled_train_step(plan: CommPlan, cfg, adamw_cfg, lr: float,
+                         window, impl: str, accum_steps: int,
+                         params, opt_state, batch):
+    """Run one explicitly scheduled ZeRO-3 step (call under jit)."""
+    from repro.models import model as mm
+    from repro.optim.adamw import adamw_update
+
+    rules = plan.rules
+    dp = plan.dp_axes
+    prefetch = getattr(rules, "overlap_prefetch", True)
+    stream_comm = (
+        jax.tree.map(lambda c: c.slice_comm(), plan.comm["stack"],
+                     is_leaf=lambda x: isinstance(x, LeafComm)),
+        (jax.tree.map(lambda c: c.slice_comm(), plan.comm["cross"],
+                      is_leaf=lambda x: isinstance(x, LeafComm))
+         if "cross" in plan.stream_keys else None),
+    )
+    rest_comm = {k: v for k, v in plan.comm.items()
+                 if k not in plan.stream_keys}
+
+    def gather_slice(slice_tree):
+        return jax.tree.map(gather_params, slice_tree, stream_comm)
+
+    stream = LayerStream(gather=gather_slice, prefetch=prefetch)
+
+    def objective(p_loc, mb):
+        streamed = {k: p_loc[k] for k in plan.stream_keys}
+        rest = {k: v for k, v in p_loc.items() if k not in plan.stream_keys}
+        full = dict(gather_tree(rest, rest_comm), **streamed)
+        with use_rules(None):   # local compute: no SPMD constraints inside
+            terms = mm.loss_terms(full, cfg, mb, window=window, impl=impl,
+                                  stream=stream)
+        # psum'd token count is constant wrt params, so no cotangent flows
+        # through it — the *local* objective's gradients sum to the global
+        # gradient exactly via the reduce-scatters (psum itself must stay
+        # out of the differentiated path: its shard_map transpose would
+        # scale cotangents by n_dp).
+        tok_g = jnp.maximum(_psum(terms["tokens"], dp), 1.0)
+        obj = terms["nll"] / tok_g + terms["aux"] / plan.n_dp
+        return obj, terms
+
+    def body(p_loc, opt_loc, b_loc):
+        if accum_steps == 1:
+            (obj, terms), grads = jax.value_and_grad(
+                objective, has_aux=True)(p_loc, b_loc)
+            tokens = _psum(terms["tokens"], dp)
+            loss_tok = _psum(terms["nll"], dp) / jnp.maximum(tokens, 1.0)
+            metrics = {"loss": loss_tok,
+                       "aux": _psum(terms["aux"], dp) / plan.n_dp,
+                       "tokens": tokens}
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc, t_acc = carry
+                (obj, terms), g = jax.value_and_grad(
+                    objective, has_aux=True)(p_loc, mb)
+                w = _psum(terms["tokens"], dp)
+                l_g = _psum(obj, dp)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) * w, g_acc, g)
+                return (g_acc, l_acc + l_g * w, t_acc + w), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), p_loc)
+            (grads, lsum, tokens), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), jnp.zeros(())), b_loc)
+            denom = jnp.maximum(tokens, 1.0)
+            grads = jax.tree.map(lambda g: g / denom, grads)
+            metrics = {"loss": lsum / denom, "aux": jnp.zeros(()),
+                       "tokens": tokens}
+        gnorm = jnp.sqrt(_global_grad_sq(grads, plan.comm))
+        new_params, new_opt, om = adamw_update(grads, opt_loc, p_loc, lr,
+                                               adamw_cfg, gnorm=gnorm)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return new_params, new_opt, metrics
+
+    metric_specs = {"loss": P(), "aux": P(), "tokens": P(), "grad_norm": P()}
+    step = shard_map_compat(
+        body, mesh=rules.mesh,
+        in_specs=(plan.p_specs, plan.o_specs, plan.b_specs),
+        out_specs=(plan.p_specs, plan.o_specs, metric_specs))
+    return step(params, opt_state, batch)
+
+
+# ---------------------------------------------------------------------------
+# analytic wire/exposed-byte accounting (drives benchmarks + the planner)
+# ---------------------------------------------------------------------------
+
+def _leaf_wire_bytes(shape, dtype, comm: LeafComm) -> float:
+    """Bytes one device receives for a full gather of this leaf (== bytes
+    it contributes to the leaf's reduce-scatter)."""
+    if comm.shard_dim is None:
+        return 0.0
+    n_elems = 1
+    for d in shape:
+        n_elems *= int(d)
+    if comm.comm_dtype == "int8":
+        q, _ = qcomm.wire_bytes(n_elems)
+        full = float(q)
+    else:
+        full = float(n_elems * jnp.dtype(dtype).itemsize)
+    return full * (comm.nshard - 1) / comm.nshard
+
+
+def comm_report(plan: CommPlan, params, *, remat: bool = True
+                ) -> Dict[str, float]:
+    """Analytic per-device wire bytes for one micro-step, XLA-auto vs.
+    scheduled, and the *exposed* (not hidden under compute) bytes.
+
+    auto: every collective serializes at its use site — all wire bytes
+    are exposed. scheduled: streamed layers hide behind the prefetch
+    pipeline except the fill (first layer's AG), the drain (last layer's
+    RS, plus the first re-gather when ``overlap_prefetch=False``), and
+    the non-stacked leaves gathered at step start.
+    """
+    prefetch = getattr(plan.rules, "overlap_prefetch", True)
+    regather = remat and not prefetch
+
+    stream_ag = stream_rs = stream_ag_first = stream_rs_last = 0.0
+    rest_ag = rest_rs = 0.0
+    for key in params:
+        leaves_v = jax.tree.leaves(params[key])
+        leaves_c = jax.tree.leaves(
+            plan.comm[key], is_leaf=lambda x: isinstance(x, LeafComm))
+        streamed = key in plan.stream_keys
+        for v, c in zip(leaves_v, leaves_c):
+            b = _leaf_wire_bytes(v.shape, v.dtype, c)
+            if streamed:
+                n_scan = int(v.shape[0])
+                stream_ag += b
+                stream_rs += b
+                stream_ag_first += b / max(n_scan, 1)
+                stream_rs_last += b / max(n_scan, 1)
+            else:
+                rest_ag += b
+                rest_rs += b
+
+    # the bwd re-gather only applies to the *streamed* leaves: the rest
+    # tree is gathered once outside any remat region, so its full form is
+    # a saved residual and backward reuses it in every schedule variant
+    ag_passes = 2.0 if regather else 1.0   # stream fwd (+ bwd re-gather)
+    wire = stream_ag * ag_passes + rest_ag + stream_rs + rest_rs
+    # XLA-auto always re-gathers in backward under remat'd scans
+    wire_auto = (stream_ag * (2.0 if remat else 1.0) + rest_ag
+                 + stream_rs + rest_rs)
+    exposed_sched = (rest_ag + rest_rs
+                     + stream_ag_first * ag_passes + stream_rs_last)
+    return {
+        "wire_bytes_auto": wire_auto,
+        "wire_bytes_scheduled": wire,
+        "exposed_bytes_auto": wire_auto,
+        "exposed_bytes_scheduled": exposed_sched,
+        "hidden_bytes_scheduled": wire - exposed_sched,
+    }

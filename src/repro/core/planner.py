@@ -47,15 +47,26 @@ def make_runners(cluster: ClusterSpec, cfg: ModelConfig, seq_len: int,
 def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
          zero_stage: Optional[int] = None, remat: bool = True,
          runner_factory: Optional[Callable[[int], Dict[str, DeviceRunner]]] = None,
+         overlap_factor: float = 0.0,
          ) -> PoplarPlan:
     """Run the full Poplar pipeline.
 
     ``zero_stage=None`` enables automatic stage escalation (paper: start at
     ZeRO-0; if any device cannot fit one sample, escalate).
+
+    ``overlap_factor`` feeds the scheduled-ZeRO overlap term into the
+    batch-allocation sweep and the simulator replay (0 = the serial
+    XLA-auto model; see core/overlap.SCHEDULED_OVERLAP_FACTOR for the
+    scheduled path's calibration default) — hetero allocations then
+    account for comm hidden under compute. The scheduled execution path
+    only exists at stage 3, so the factor is zeroed for any other stage
+    the escalation settles on (crediting hiding the runtime can't
+    deliver would inflate predictions and skew the sweep).
     """
     stages = [zero_stage] if zero_stage is not None else [0, 1, 2, 3]
     last_err: Optional[Exception] = None
     for stage in stages:
+        stage_overlap = overlap_factor if stage == 3 else 0.0
         runners = (runner_factory(stage) if runner_factory
                    else make_runners(cluster, cfg, seq_len, stage, remat))
         profiles = profile_cluster(runners, stage)
@@ -68,10 +79,12 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
         else:
             comm = comm_time_per_microstep(cfg, stage, cluster.n,
                                            cluster.effective_link_gbps(cluster.n))
-            alloc = allocate_stage23(curves, gbs, comm, stage)
+            alloc = allocate_stage23(curves, gbs, comm, stage,
+                                     overlap_factor=stage_overlap)
         alloc.zero_stage = stage
         fps = train_flops_per_token(cfg, seq_len) * seq_len
-        predicted = simulate_plan(alloc, curves, cfg, seq_len, cluster, fps)
+        predicted = simulate_plan(alloc, curves, cfg, seq_len, cluster, fps,
+                                  overlap_factor=stage_overlap)
         return PoplarPlan(stage, alloc, curves, profiles, predicted,
                           profiling_probes=sum(p.probes for p in profiles.values()))
     raise last_err or SimOOM("no feasible stage")

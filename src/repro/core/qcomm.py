@@ -12,11 +12,11 @@ f32 at a bounded quantization error (tests pin the bound).
 all_to_all -> dequantize -> local sum, so the reduction itself happens
 in f32 (int8 psum would overflow and compound error).
 
-Integration note: these compose with shard_map-style explicit-collective
-training steps. The default train path lets XLA SPMD insert its own
-(unquantized) reductions — swapping those for qgZ requires taking the
-gradient exchange out of auto-SPMD, which is future work here exactly as
-it is in the paper.
+Integration note: the scheduled ZeRO-3 train path (core/overlap.py,
+``rules.overlap="scheduled"`` + ``rules.comm_dtype="int8"``) rides these
+as its wire format — parameter all-gathers go out quantized and each
+layer's backward reduce-scatter follows the qgZ schedule. The XLA-auto
+train path still lets SPMD insert its own (unquantized) reductions.
 """
 from __future__ import annotations
 
@@ -27,6 +27,16 @@ import jax
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
+
+
+def axis_size(axis_name) -> int:
+    """Mapped-axis size across JAX versions: ``jax.lax.axis_size`` only
+    exists on newer releases; ``psum(1, axis)`` is the portable spelling
+    (special-cased to a static int)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
 
 
 def _pad_to(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
@@ -58,18 +68,25 @@ def quantized_reduce_scatter(x: jnp.ndarray, axis_name: str,
     """Inside shard_map: reduce a replicated-shape per-device tensor over
     ``axis_name`` and return this device's 1/n partition (flattened).
 
+    Partitions are *shard-aligned*: the flat tensor is padded to a
+    multiple of n (not n*block) before splitting, so partition i is
+    exactly elements [i*ceil(len/n), (i+1)*ceil(len/n)) of the reduced
+    tensor — composable with a tiled all-gather of ZeRO shards. Block
+    padding for quantization happens per-partition inside
+    ``quantize_blocks`` (and is trimmed by ``dequantize_blocks``).
+
     Wire traffic per participant: n-1 int8 partitions + scales
     (vs n-1 f32 partitions for an unquantized reduce-scatter).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     flat = x.reshape(-1).astype(jnp.float32)
-    flat, _ = _pad_to(flat, n * block)
+    flat, _ = _pad_to(flat, n)
     part = flat.reshape(n, -1)                       # (n, per)
+    per = part.shape[1]
     q, scale = jax.vmap(lambda p: quantize_blocks(p, block))(part)
     # exchange: device i keeps the pieces destined to partition i
     q = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0)
     scale = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0)
-    per = part.shape[1]
     deq = jax.vmap(lambda qq, ss: dequantize_blocks(qq, ss, per))(q, scale)
     return deq.sum(axis=0)                           # (per,) f32
 

@@ -83,6 +83,20 @@ class MeshRules:
     # head count can't use the model axis (e.g. xLSTM H=4 on a 16-way TP
     # axis) — TP buys nothing there but forces per-scan-chunk resharding.
     dp_only: bool = False
+    # ZeRO-3 collective scheduling (core/overlap.py): "xla" leaves every
+    # all-gather/reduce-scatter to auto-SPMD (the parity oracle);
+    # "scheduled" runs the explicit shard_map step with double-buffered
+    # layer prefetch + per-layer grad reduce-scatter; "auto" picks
+    # scheduled whenever the (mesh, stage, batch) combination supports it.
+    overlap: str = "xla"
+    # wire format of the scheduled path's sharded collectives: None keeps
+    # the param dtype; "int8" rides qcomm's block-quantized AG/RS.
+    comm_dtype: Optional[str] = None
+    # scheduled path only: True = two-deep prefetch pipeline (layer l+1's
+    # all-gather in flight under layer l's compute; backward reuses the
+    # saved gather); False = gather inside the remat region (backward
+    # re-gathers; lowest memory, the classic ZeRO-3 schedule).
+    overlap_prefetch: bool = True
 
     def __post_init__(self):
         if self.dp_only:

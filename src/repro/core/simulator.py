@@ -15,7 +15,7 @@ from typing import Dict, List, Optional
 
 from repro.core.allocation import AllocationPlan, PerfCurve
 from repro.core.cluster import ClusterSpec
-from repro.core.workload import comm_time_per_microstep
+from repro.core.workload import comm_time_per_microstep, exposed_comm_time
 
 
 @dataclass
@@ -25,10 +25,11 @@ class SimResult:
     iter_time: float                     # seconds per iteration
     device_busy: Dict[str, float]        # compute seconds per device
     device_idle: Dict[str, float]        # idle (sync wait) seconds
-    comm_time: float
+    comm_time: float                     # *exposed* collective seconds
     samples: int
     cluster_tflops: float = 0.0
     tokens_per_sec: float = 0.0
+    comm_hidden: float = 0.0             # collective seconds overlapped away
 
     @property
     def utilization(self) -> float:
@@ -40,8 +41,16 @@ class SimResult:
 
 def simulate_plan(plan: AllocationPlan, curves: Dict[str, PerfCurve],
                   cfg, seq_len: int, cluster: ClusterSpec,
-                  flops_per_sample: float) -> SimResult:
-    """Replay one BSP iteration of `plan` on the cluster."""
+                  flops_per_sample: float,
+                  overlap_factor: float = 0.0) -> SimResult:
+    """Replay one BSP iteration of `plan` on the cluster.
+
+    ``overlap_factor > 0`` models the scheduled ZeRO execution path:
+    per-sync collective time hides under the concurrent compute up to
+    ``overlap_factor * compute`` (bounded by the schedulable comm
+    fraction — see workload.exposed_comm_time); only the exposed
+    remainder extends the iteration.
+    """
     stage = plan.zero_stage
     names = [n for n, a in plan.assignments.items() if a.gmbs > 0]
     n_active = max(len(names), 1)
@@ -50,6 +59,7 @@ def simulate_plan(plan: AllocationPlan, curves: Dict[str, PerfCurve],
     busy: Dict[str, float] = {}
     per_dev_time: Dict[str, float] = {}
     total_comm = 0.0
+    hidden_comm = 0.0
 
     if stage <= 1:
         # single sync point at iteration end: one all-reduce (stage 0) or
@@ -64,7 +74,9 @@ def simulate_plan(plan: AllocationPlan, curves: Dict[str, PerfCurve],
             per_dev_time[n] = t
             busy[n] = t
         compute_wall = max(per_dev_time.values(), default=0.0)
-        total_comm = comm_step                      # once per iteration
+        total_comm = exposed_comm_time(comm_step, compute_wall,
+                                       overlap_factor)
+        hidden_comm = comm_step - total_comm
         iter_time = compute_wall + total_comm
     else:
         # every accumulation micro-step ends in a collective sync (RS for
@@ -86,8 +98,11 @@ def simulate_plan(plan: AllocationPlan, curves: Dict[str, PerfCurve],
                 step_times[n] = curves[n].time_of_batch(b) if b else 0.0
                 busy[n] += step_times[n]
             step_wall = max(step_times.values(), default=0.0)
-            iter_time += step_wall + comm_step
-            total_comm += comm_step
+            comm_exposed = exposed_comm_time(comm_step, step_wall,
+                                             overlap_factor)
+            iter_time += step_wall + comm_exposed
+            total_comm += comm_exposed
+            hidden_comm += comm_step - comm_exposed
         per_dev_time = dict(busy)
 
     idle = {n: iter_time - total_comm - busy.get(n, 0.0) for n in names}
@@ -99,5 +114,6 @@ def simulate_plan(plan: AllocationPlan, curves: Dict[str, PerfCurve],
         samples=samples,
         cluster_tflops=model_flops / max(iter_time, 1e-12) / 1e12,
         tokens_per_sec=samples * seq_len / max(iter_time, 1e-12),
+        comm_hidden=hidden_comm,
     )
     return result

@@ -138,3 +138,27 @@ def comm_time_per_microstep(cfg: ModelConfig, zero_stage: int, n: int,
         return gather + hop_lat * cfg.n_layers
     # AG fwd + AG bwd + RS grads, each launched per layer
     return 3.0 * (gather + hop_lat * cfg.n_layers)
+
+
+# fraction of a sync period's collective time that can never hide under
+# compute: the prefetch pipeline's fill (first layer's all-gather) and
+# drain (last reduce-scatter) plus the non-stacked leaves at step start.
+EXPOSED_COMM_FLOOR = 0.1
+
+
+def exposed_comm_time(comm_s: float, compute_s: float,
+                      overlap_factor: float,
+                      exposed_floor: float = EXPOSED_COMM_FLOOR) -> float:
+    """Collective seconds left *exposed* (serialized with compute) when a
+    schedule can hide comm under compute.
+
+    ``overlap_factor`` is the fraction of concurrent compute time usable
+    for hiding collectives (0 = the XLA-auto serial model; the scheduled
+    ZeRO-3 path's calibration default lives in core/overlap.py). Hiding
+    is bounded both by the available compute (factor * compute_s) and by
+    the schedulable fraction of the comm itself (1 - exposed_floor).
+    """
+    if overlap_factor <= 0.0 or comm_s <= 0.0:
+        return comm_s
+    hidden = min(overlap_factor * compute_s, (1.0 - exposed_floor) * comm_s)
+    return comm_s - hidden

@@ -11,6 +11,12 @@ Mapping (DESIGN.md §3):
 
 All of it composes with tensor parallelism on the `model` axis and the
 hierarchical-ZeRO (`hierarchical_params`) pod-local variant via MeshRules.
+
+Stage 3 additionally supports the *explicitly scheduled* execution path
+(`rules.overlap="scheduled"|"auto"`, core/overlap.py): a shard_map step
+that double-buffers the next layer's parameter all-gather under the
+current layer's compute and reduce-scatters each layer's gradient inside
+the backward sweep. The XLA-auto path here remains the parity oracle.
 """
 from __future__ import annotations
 
@@ -30,14 +36,6 @@ from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 # ---------------------------------------------------------------------------
 # sharding trees
 # ---------------------------------------------------------------------------
-
-def param_specs(rules: MeshRules, axes_tree) -> Any:
-    """PartitionSpec tree for the parameters at the configured stage."""
-    shard_params = rules.zero_stage >= 3
-    return jax.tree.map(
-        lambda ax: None,  # placeholder, replaced below with shapes
-        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
-
 
 def specs_for(rules: MeshRules, values_tree, axes_tree, *, zero_sharded: bool):
     def leaf(v, ax):
@@ -87,6 +85,12 @@ def make_train_step(cfg: ModelConfig, rules: MeshRules,
     it compiles natively and to the jnp reference elsewhere (see
     ``repro.kernels.ops.recommended_impl``); ``"pallas"`` forces the
     custom-VJP kernels (interpret mode included).
+
+    ``rules.overlap``: "scheduled" routes stage 3 through the explicit
+    shard_map schedule in core/overlap.py (raising if the mesh/batch
+    combination cannot support it); "auto" does so only when supported
+    *and* there is more than one data-parallel device; "xla" (default)
+    keeps the auto-SPMD path below.
     """
     stage = rules.zero_stage
     impl = _resolve_impl(impl)
@@ -95,6 +99,19 @@ def make_train_step(cfg: ModelConfig, rules: MeshRules,
         return mm.loss_fn(params, cfg, batch, window=window, impl=impl)
 
     def train_step(params, opt_state, batch):
+        mode = getattr(rules, "overlap", "xla")
+        if mode in ("scheduled", "auto"):
+            from repro.core import overlap
+            plan = overlap.plan_comm(rules, params, _axes_of(params, rules),
+                                     batch, accum_steps)
+            if isinstance(plan, str):
+                if mode == "scheduled":
+                    raise ValueError(
+                        f"rules.overlap='scheduled' unsupported: {plan}")
+            elif mode == "scheduled" or plan.n_dp > 1:
+                return overlap.scheduled_train_step(
+                    plan, cfg, adamw_cfg, lr, window, impl, accum_steps,
+                    params, opt_state, batch)
         with use_rules(rules):
             if accum_steps == 1:
                 (loss, metrics), grads = jax.value_and_grad(

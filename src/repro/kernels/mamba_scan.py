@@ -11,10 +11,18 @@ separate state pass would round-trip states through HBM; on TPU the
 sequential grid + VMEM scratch removes that traffic).
 
 Oracle: repro.kernels.ref.ssd_reference (== models.ssm._ssd_chunked).
+
+``mamba_scan_vjp`` is the training entry point: a ``jax.custom_vjp``
+whose forward runs the Pallas kernel and whose backward *recomputes*
+through the sequential reference scan (no saved chunk intermediates —
+residuals are just the five inputs, mirroring the flash-attention
+recomputation backward). A fused Pallas reverse-scan backward is the
+promoted follow-up (see ROADMAP).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -118,3 +126,45 @@ def mamba_scan_pallas(xh, dt, A, Bm, Cm, *, chunk: int = 128,
         interpret=interpret,
     )(xT, dtT, A.astype(jnp.float32), Bm, Cm)
     return out.transpose(0, 2, 1, 3)[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# custom VJP (training path)
+# ---------------------------------------------------------------------------
+
+class ScanConfig(NamedTuple):
+    """Hashable static configuration threaded through the custom_vjp."""
+    chunk: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mamba_scan(cfg: ScanConfig, xh, dt, A, Bm, Cm):
+    return mamba_scan_pallas(xh, dt, A, Bm, Cm, chunk=cfg.chunk,
+                             interpret=cfg.interpret)
+
+
+def _mamba_scan_fwd(cfg: ScanConfig, xh, dt, A, Bm, Cm):
+    out = mamba_scan_pallas(xh, dt, A, Bm, Cm, chunk=cfg.chunk,
+                            interpret=cfg.interpret)
+    return out, (xh, dt, A, Bm, Cm)
+
+
+def _mamba_scan_bwd(cfg: ScanConfig, residuals, gy):
+    # recomputation backward: differentiate the sequential reference scan
+    # (the kernel's ground-truth oracle) from the saved inputs — nothing
+    # chunk-internal is stored, matching the kernel's HBM-light forward
+    from repro.kernels import ref
+    xh, dt, A, Bm, Cm = residuals
+    _, vjp = jax.vjp(ref.ssd_reference, xh, dt, A, Bm, Cm)
+    return vjp(gy.astype(xh.dtype))
+
+
+_mamba_scan.defvjp(_mamba_scan_fwd, _mamba_scan_bwd)
+
+
+def mamba_scan_vjp(xh, dt, A, Bm, Cm, *, chunk: int = 128,
+                   interpret: bool = False):
+    """Differentiable chunked SSD scan (training entry point)."""
+    cfg = ScanConfig(chunk=min(chunk, xh.shape[1]), interpret=interpret)
+    return _mamba_scan(cfg, xh, dt, A, Bm, Cm)

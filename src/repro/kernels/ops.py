@@ -5,10 +5,11 @@ kernel body runs as traced Python); on a real TPU backend set
 ``REPRO_PALLAS_INTERPRET=0`` (or rely on the auto-detect) to compile them
 for the MXU.
 
-``flash_attention`` and ``rmsnorm`` are the *training-grade* entry points:
-both carry a ``jax.custom_vjp`` (flash-recomputation backward for
-attention, analytic fused backward for rmsnorm) so ``impl="pallas"`` works
-under ``jax.value_and_grad`` end to end. When block sizes are not given
+``flash_attention``, ``rmsnorm`` and ``mamba_scan`` are the
+*training-grade* entry points: each carries a ``jax.custom_vjp``
+(flash-recomputation backward for attention, analytic fused backward for
+rmsnorm, reference-recomputation backward for the SSD scan) so
+``impl="pallas"`` works under ``jax.value_and_grad`` end to end. When block sizes are not given
 explicitly they come from the autotune cache (``repro.kernels.autotune``),
 falling back to a deterministic static table in interpret mode.
 """
@@ -24,7 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels.flash_attention import flash_attention_vjp
 from repro.kernels.flash_decode import flash_decode_pallas
-from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.mamba_scan import mamba_scan_vjp
 from repro.kernels.rmsnorm import rmsnorm_vjp
 
 
@@ -87,8 +88,10 @@ def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def mamba_scan(xh, dt, A, Bm, Cm, *, chunk: int = 128):
-    return mamba_scan_pallas(xh, dt, A, Bm, Cm, chunk=chunk,
-                             interpret=_interpret_default())
+    """Differentiable chunked SSD scan (custom-VJP recomputation
+    backward), so ``impl="pallas"`` trains through Mamba2 blocks too."""
+    return mamba_scan_vjp(xh, dt, A, Bm, Cm, chunk=chunk,
+                          interpret=_interpret_default())
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

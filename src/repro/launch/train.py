@@ -49,6 +49,16 @@ def main(argv=None):
                     help="attention/norm implementation; 'auto' picks the "
                          "custom-VJP Pallas kernels when they compile "
                          "natively (TPU) and the jnp reference otherwise")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "scheduled", "xla"],
+                    help="ZeRO-3 collective scheduling: 'scheduled' runs "
+                         "the explicit shard_map step (double-buffered "
+                         "layer prefetch + per-layer grad reduce-scatter), "
+                         "'xla' leaves collectives to auto-SPMD, 'auto' "
+                         "picks scheduled when the mesh supports it")
+    ap.add_argument("--comm-dtype", default=None, choices=[None, "int8"],
+                    help="wire format for the scheduled path's sharded "
+                         "collectives (int8 = qcomm quantized AG/RS)")
     ap.add_argument("--data", default=None, help="text file (byte-LM); "
                                                  "default synthetic")
     ap.add_argument("--ckpt", default=None)
@@ -64,9 +74,13 @@ def main(argv=None):
     print(f"[impl] {impl}" + (" (auto)" if args.impl == "auto" else ""))
 
     # ---- Poplar: fully automated configuration ----
+    from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR
+    overlap_factor = (SCHEDULED_OVERLAP_FACTOR if args.overlap != "xla"
+                      else 0.0)
     t0 = time.time()
     pplan = poplar_plan(cluster, get_config(args.arch), args.gbs,
-                        seq_len=max(args.seq, 512), zero_stage=args.zero)
+                        seq_len=max(args.seq, 512), zero_stage=args.zero,
+                        overlap_factor=overlap_factor)
     print(f"[poplar] stage={pplan.zero_stage} "
           f"probes={pplan.profiling_probes} "
           f"predicted {pplan.predicted.cluster_tflops:.1f} TFLOPs "
@@ -91,7 +105,8 @@ def main(argv=None):
     loader = HeteroDataLoader(src, layout, args.seq)
 
     # ---- model + ZeRO shardings ----
-    rules = MeshRules(mesh, zero_stage=pplan.zero_stage)
+    rules = MeshRules(mesh, zero_stage=pplan.zero_stage,
+                      overlap=args.overlap, comm_dtype=args.comm_dtype)
     params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
     register_axes(rules, axes)
     p_specs, o_specs, _ = model_shardings(rules, params, axes)

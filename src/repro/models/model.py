@@ -162,14 +162,14 @@ def _apply_block(kind: str, bp, x, cfg, *, window, impl, enc_out=None,
     elif kind == BLOCK_SLSTM:
         x = x + S.slstm_apply(bp["cell"], h, cfg)
     elif kind == BLOCK_MAMBA2:
-        x = x + S.mamba2_apply(bp["cell"], h, cfg)
+        x = x + S.mamba2_apply(bp["cell"], h, cfg, impl=impl)
     else:
         raise ValueError(kind)
     return x, aux
 
 
 def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
-               unroll: bool = False):
+               unroll: bool = False, stream=None):
     unit, n_rep = pattern_unit(cfg)
     shared = params.get("shared")
     cross = params.get("cross")  # (layers,...) stacked — only for uniform attn decoders
@@ -198,6 +198,12 @@ def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
     else:
         n_scan = n_rep
         xs = (params["stack"], None)
+    if stream is not None:
+        # Scheduled ZeRO-3 (core/overlap.py): `xs` leaves are this
+        # device's parameter *shards*; each scan step consumes the full
+        # layer params from `stream.gather` (all-gather fwd, per-layer
+        # reduce-scatter bwd via its custom VJP).
+        return _run_stack_streamed(unit_body, xs, x, cfg, n_scan, stream)
     if unroll:
         # python loop (dry-run cost pass: XLA cost_analysis does not
         # multiply while-loop bodies by trip count)
@@ -208,6 +214,58 @@ def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
         return carry
     (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
                                length=n_scan)
+    return x, aux
+
+
+def _run_stack_streamed(unit_body, xs, x, cfg, n_scan: int, stream):
+    """Layer scan over *sharded* stacked params, gathered layer-by-layer.
+
+    ``stream.prefetch``: two-deep software pipeline — the carry holds the
+    gathered params of the layer being computed while the next layer's
+    all-gather is already issued (layer ``l+1`` prefetched under layer
+    ``l``'s compute; remat wraps only the compute, so the backward reuses
+    the saved gather). Without prefetch the gather sits *inside* the
+    remat region: residuals stay sharded and the backward re-gathers
+    (AG-fwd + AG-bwd + RS, the memory-light classic ZeRO-3 schedule).
+    """
+    def take(i):
+        return jax.tree.map(
+            lambda v: jax.lax.dynamic_index_in_dim(v, i, 0, keepdims=False),
+            xs)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if stream.prefetch:
+        compute = unit_body
+        if cfg.remat:
+            compute = jax.checkpoint(unit_body, prevent_cse=False)
+
+        def body(carry, i):
+            (x, aux), cur = carry
+            nxt = stream.gather(take(i + 1))
+            (x, aux), _ = compute((x, aux), cur)
+            return ((x, aux), nxt), None
+
+        # final iteration peeled: its params were prefetched by step
+        # n_scan-2, and no step issues a gather past the last layer —
+        # exactly n_scan all-gathers per sweep
+        first = stream.gather(take(0))
+        ((x, aux), last), _ = jax.lax.scan(body, ((x, aux0), first),
+                                           jnp.arange(n_scan - 1))
+        (x, aux), _ = compute((x, aux), last)
+        return x, aux
+
+    def gathered_body(carry, shard_slice):
+        return unit_body(carry, stream.gather(shard_slice))
+
+    inner = gathered_body
+    if cfg.remat:
+        inner = jax.checkpoint(gathered_body, prevent_cse=False)
+
+    def body(carry, i):
+        carry, _ = inner(carry, take(i))
+        return carry, None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), jnp.arange(n_scan))
     return x, aux
 
 
@@ -253,13 +311,15 @@ def _encode(params, cfg, batch, impl, unroll: bool = False):
 
 
 def forward(params, cfg: ModelConfig, batch: Dict, *, window=None,
-            impl: str = "reference", unroll: bool = False):
-    """Returns (final hidden states (B,S,d), aux_loss)."""
+            impl: str = "reference", unroll: bool = False, stream=None):
+    """Returns (final hidden states (B,S,d), aux_loss). ``stream`` (a
+    core/overlap.LayerStream) switches the layer scan to gathered-from-
+    shards streaming for the scheduled ZeRO-3 path."""
     enc_out = (_encode(params, cfg, batch, impl, unroll=unroll)
                if cfg.encoder_layers else None)
     x = _embed_inputs(params, cfg, batch, impl)
     x, aux = _run_stack(params, x, cfg, window=window, impl=impl,
-                        enc_out=enc_out, unroll=unroll)
+                        enc_out=enc_out, unroll=unroll, stream=stream)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, impl=impl)
     return x, aux
 
@@ -269,11 +329,14 @@ def lm_logits(params, cfg, hidden):
     return L.logits(head, hidden)
 
 
-def loss_fn(params, cfg: ModelConfig, batch: Dict, *, window=None,
-            impl: str = "reference", unroll: bool = False):
-    """Masked token cross-entropy. batch: tokens, labels, loss_mask."""
+def loss_terms(params, cfg: ModelConfig, batch: Dict, *, window=None,
+               impl: str = "reference", unroll: bool = False, stream=None):
+    """Unnormalized loss pieces: ``{"nll": Σ masked nll, "tokens": Σ mask,
+    "aux": aux loss}``. The scheduled ZeRO-3 step consumes these raw sums
+    so the cross-device token normalization can happen outside the
+    differentiated region (see core/overlap.py)."""
     hidden, aux = forward(params, cfg, batch, window=window, impl=impl,
-                          unroll=unroll)
+                          unroll=unroll, stream=stream)
     logits = lm_logits(params, cfg, hidden)
     labels = batch["labels"]
     mask = batch.get("loss_mask")
@@ -283,9 +346,18 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict, *, window=None,
     logz = jax.nn.logsumexp(logits_f, axis=-1)
     gold = jnp.take_along_axis(logits_f, labels[..., None], axis=-1)[..., 0]
     nll = (logz - gold) * mask
-    denom = jnp.maximum(mask.sum(), 1.0)
-    loss = nll.sum() / denom
-    return loss + aux, {"loss": loss, "aux": aux, "tokens": mask.sum()}
+    return {"nll": nll.sum(), "tokens": mask.sum(), "aux": aux}
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, *, window=None,
+            impl: str = "reference", unroll: bool = False):
+    """Masked token cross-entropy. batch: tokens, labels, loss_mask."""
+    t = loss_terms(params, cfg, batch, window=window, impl=impl,
+                   unroll=unroll)
+    denom = jnp.maximum(t["tokens"], 1.0)
+    loss = t["nll"] / denom
+    return loss + t["aux"], {"loss": loss, "aux": t["aux"],
+                             "tokens": t["tokens"]}
 
 
 # ---------------------------------------------------------------------------

@@ -217,21 +217,8 @@ def _moe_apply_gshard(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
     gate_vals, gate_idx, aux = _router(params, x, cfg)
 
     # --- positions within expert buffers, per sequence group ---
-    cdt = jnp.dtype(m.combine_dtype)
-    dispatch = jnp.zeros((B, S, E, C), x.dtype)
-    combine = jnp.zeros((B, S, E, C), cdt)
-    counts = jnp.zeros((B, E), jnp.int32)
-    for j in range(K):
-        sel = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)  # (B,S,E)
-        pos = jnp.cumsum(sel, axis=1) - 1 + counts[:, None, :]      # (B,S,E)
-        keep = (pos < C) & (sel > 0)
-        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), C, dtype=x.dtype)
-        slot = sel.astype(x.dtype)[..., None] * pos_oh              # (B,S,E,C)
-        dispatch = dispatch + slot
-        combine = combine + (gate_vals[..., j][..., None, None]
-                             * slot.astype(jnp.float32)).astype(cdt)
-        counts = counts + sel.sum(axis=1)
-
+    dispatch, combine = _onehot_dispatch(gate_vals, gate_idx, E, C, x.dtype,
+                                         m.combine_dtype)
     dispatch = constrain(dispatch, ("batch", None, "experts", None))
     combine = constrain(combine, ("batch", None, "experts", None))
 

@@ -130,8 +130,11 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
 
 
 def mamba2_apply(params, x, cfg, init_state=None, conv_state=None,
-                 return_state: bool = False):
-    """Full-sequence Mamba2. x: (B,S,d)."""
+                 return_state: bool = False, impl: str = "reference"):
+    """Full-sequence Mamba2. x: (B,S,d). ``impl="pallas"`` routes the
+    chunked SSD scan through the custom-VJP Pallas kernel on the
+    stateless train path (stateful prefill/decode keeps the jnp scan,
+    which threads the carried state)."""
     d_inner, H = mamba2_dims(cfg)
     N, P = cfg.ssm.state_dim, cfg.ssm.head_dim
     z_all = jnp.einsum("bsd,di->bsi", x, params["w_in"].astype(x.dtype))
@@ -144,8 +147,17 @@ def mamba2_apply(params, x, cfg, init_state=None, conv_state=None,
     xh = xc.reshape(*xc.shape[:2], H, P)
     xh = constrain(xh, ("batch", None, "ssm_heads", None))
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
-    y, state = _ssd_chunked(xh, dtv, params["A_log"], Bm.astype(jnp.float32),
-                            Cm.astype(jnp.float32), cfg.ssm.chunk_size, init_state)
+    if impl == "pallas" and init_state is None and not return_state:
+        from repro.kernels import ops as kops
+        y = kops.mamba_scan(xh, dtv, -jnp.exp(params["A_log"]),
+                            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                            chunk=cfg.ssm.chunk_size).astype(jnp.float32)
+        state = None
+    else:
+        y, state = _ssd_chunked(xh, dtv, params["A_log"],
+                                Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32), cfg.ssm.chunk_size,
+                                init_state)
     y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
     y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
     # gated RMSNorm

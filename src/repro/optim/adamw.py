@@ -36,10 +36,17 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
-def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig(),
+                 gnorm: Optional[jnp.ndarray] = None
                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
-    gnorm = global_norm(grads)
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``gnorm`` overrides the gradient-norm computation — the scheduled
+    ZeRO-3 step passes the cross-device norm of its *sharded* grad tree
+    (a local ``global_norm`` would miss the other shards).
+    """
+    if gnorm is None:
+        gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
     count = state["count"] + 1
     b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)

@@ -49,34 +49,40 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.core.sharding import shard_map_compat
 from repro.core.qcomm import quantized_reduce_scatter, quantized_all_gather
 
 mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
-N = 8 * 1024
-# per-device distinct gradients (replicated shape, different values)
-gs = jnp.asarray(rng.normal(size=(8, N)), jnp.float32)
 
-def rs_local(g):
-    return quantized_reduce_scatter(g[0], "data")
+# N = 8*1024 is block-aligned; N = 8*100 exercises the shard-aligned
+# partitioning (per-partition block padding, boundaries at N/8 — the
+# layout the scheduled ZeRO-3 reduce-scatter relies on)
+for N in (8 * 1024, 8 * 100):
+    # per-device distinct gradients (replicated shape, different values)
+    gs = jnp.asarray(rng.normal(size=(8, N)), jnp.float32)
 
-out = jax.jit(jax.shard_map(rs_local, mesh=mesh,
-                            in_specs=P("data", None),
-                            out_specs=P("data"), check_vma=False))(gs)
-got = np.asarray(out)                       # (N,) concatenated partitions
-want = np.asarray(gs.sum(axis=0))           # full reduction
-err = np.abs(got - want)
-tol = np.abs(gs).max() / 127.0 * 8 + 1e-5   # 8 devices' quant errors add
-assert err.max() <= tol, (err.max(), tol)
-print("RS_OK", float(err.max()))
+    def rs_local(g):
+        return quantized_reduce_scatter(g[0], "data")
+
+    out = jax.jit(shard_map_compat(rs_local, mesh=mesh,
+                                   in_specs=P("data", None),
+                                   out_specs=P("data")))(gs)
+    got = np.asarray(out)                       # (N,) concatenated partitions
+    assert got.shape == (N,), got.shape         # shard-aligned: no padding out
+    want = np.asarray(gs.sum(axis=0))           # full reduction
+    err = np.abs(got - want)
+    tol = np.abs(gs).max() / 127.0 * 8 + 1e-5   # 8 devices' quant errors add
+    assert err.max() <= tol, (N, err.max(), tol)
+    print("RS_OK", N, float(err.max()))
 
 # all_gather: every device contributes its partition, result replicated
 parts = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
 def ag_local(p):
     return quantized_all_gather(p[0], "data")
-outg = jax.jit(jax.shard_map(ag_local, mesh=mesh,
-                             in_specs=P("data", None),
-                             out_specs=P(), check_vma=False))(parts)
+outg = jax.jit(shard_map_compat(ag_local, mesh=mesh,
+                                in_specs=P("data", None),
+                                out_specs=P()))(parts)
 wantg = np.asarray(parts).reshape(-1)
 errg = np.abs(np.asarray(outg) - wantg)
 assert errg.max() <= np.abs(parts).max() / 127.0 + 1e-6
