@@ -12,7 +12,11 @@ per step.
 ZeRO-3 overlap rows time the XLA-auto stage-3 step against the scheduled
 shard_map step (core/overlap.py) on an 8-device CPU mesh (subprocess),
 reporting step time, tokens/sec and the analytic exposed-comm bytes of
-each schedule."""
+each schedule.
+
+Session rows pin the facade contract: a `repro.api.Session`-built step
+must cost the same per step as the hand-wired ceremony it replaced
+(build cost reported separately)."""
 from __future__ import annotations
 
 import json
@@ -186,17 +190,12 @@ import os, json, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
+from repro.api import Session
 from repro.configs import get_config
 from repro.core import overlap
-from repro.core.sharding import MeshRules
-from repro.core.zero import make_train_step, model_shardings, register_axes
-from repro.models import model as mm
-from repro.optim.adamw import adamw_init
 
 cfg = get_config("llama-0.5b", reduced=True)
 mesh = jax.make_mesh((8,), ("data",))
-params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
-opt = adamw_init(params)
 rng = np.random.default_rng(0)
 B, S = 16, 64
 toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)), jnp.int32)
@@ -204,29 +203,110 @@ batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
          "loss_mask": jnp.ones((B, S), jnp.float32)}
 out = {}
 for mode in ("xla", "scheduled"):
-    rules = MeshRules(mesh, zero_stage=3, overlap=mode)
-    register_axes(rules, axes)
-    p_specs, o_specs, _ = model_shardings(rules, params, axes)
-    with mesh:
-        pp = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
-        oo = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
-        step = jax.jit(make_train_step(cfg, rules, lr=1e-3))
-        pp, oo, met = step(pp, oo, batch)   # compile + warm up
+    sess = Session.build(cfg, None, gbs=B, seq=S, zero=3, overlap=mode,
+                         impl="reference", lr=1e-3, mesh=mesh)
+    met = sess.step(batch)   # compile + warm up
+    jax.block_until_ready(met["loss"])
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        met = sess.step(batch)
         jax.block_until_ready(met["loss"])
-        times = []
-        for _ in range(5):
-            t0 = time.perf_counter()
-            pp, oo, met = step(pp, oo, batch)
-            jax.block_until_ready(met["loss"])
-            times.append(time.perf_counter() - t0)
-    plan = overlap.plan_comm(rules, params, axes, batch)
-    rep = (overlap.comm_report(plan, params, remat=cfg.remat)
+        times.append(time.perf_counter() - t0)
+    plan = overlap.plan_comm(sess.rules, sess.state.params, sess.state.axes,
+                             batch)
+    rep = (overlap.comm_report(plan, sess.state.params, remat=cfg.remat)
            if not isinstance(plan, str) else {})
     ms = sorted(times)[len(times) // 2] * 1e3
     out[mode] = {"ms": ms, "tokens_per_sec": B * S / (ms / 1e3),
                  "report": rep}
 print("OVERLAP_JSON " + json.dumps(out))
 """
+
+
+def session_overhead_rows(B: int = 8, S: int = 64) -> List[str]:
+    """Session-vs-hand-wired train step on the local device: the facade
+    must add no per-step cost (the jitted computation is identical; the
+    wrapper adds one dict conversion + the step-counter increment).
+    Build cost is reported separately — it includes the one-time planner
+    /init/device_put work the hand-wired path also pays piecemeal."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import Session
+    from repro.configs import get_config
+    from repro.core.sharding import MeshRules
+    from repro.core.zero import make_train_step, model_shardings, register_axes
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import model as mm
+    from repro.optim.adamw import adamw_init
+
+    def min_ms(fn, iters: int = 7):
+        """Best-of-N wall clock: robust to scheduler noise on shared CI
+        runners (a systematic facade overhead would still show in the
+        minimum; a one-off noisy interleaving does not)."""
+        fn()                                     # warm-up
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+    # hand-wired ceremony (the pre-Session path, via the deprecation shims)
+    t0 = time.perf_counter()
+    mesh = make_debug_mesh(jax.device_count())
+    rules = MeshRules(mesh, zero_stage=0)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    register_axes(rules, axes)
+    p_specs, o_specs, _ = model_shardings(rules, params, axes)
+    opt = adamw_init(params)
+    with mesh:
+        params = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
+        opt = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
+        step = jax.jit(make_train_step(cfg, rules, lr=1e-3,
+                                       impl="reference"))
+        p, o, met = step(params, opt, batch)
+        jax.block_until_ready(met["loss"])
+    build_hand = time.perf_counter() - t0
+
+    def hand_step():
+        nonlocal params, opt
+        with mesh:
+            params, opt, met = step(params, opt, batch)
+            jax.block_until_ready(met["loss"])
+
+    ms_hand = min_ms(hand_step)
+
+    # the same configuration through the Session facade
+    t0 = time.perf_counter()
+    sess = Session.build(cfg, None, gbs=B, seq=S, zero=0, impl="reference",
+                         lr=1e-3)
+    met = sess.step(batch)
+    jax.block_until_ready(met["loss"])
+    build_sess = time.perf_counter() - t0
+
+    def sess_step():
+        jax.block_until_ready(sess.step(batch)["loss"])
+
+    ms_sess = min_ms(sess_step)
+
+    ratio = ms_sess / ms_hand
+    return [csv_row(
+        "perf/session_api/step_overhead/8x64_reduced_llama", ms_sess * 1e3,
+        f"ms_session={ms_sess:.3f};ms_handwired={ms_hand:.3f};"
+        f"overhead={ratio:.3f}x;"
+        f"build_s_session={build_sess:.2f};build_s_handwired={build_hand:.2f};"
+        f"overhead_ok={ratio < 1.25}")]
 
 
 def zero3_overlap_rows() -> List[str]:
@@ -315,6 +395,11 @@ def run() -> List[str]:
         rows.extend(zero3_overlap_rows())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/zero3_overlap/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(session_overhead_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/session_api/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

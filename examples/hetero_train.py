@@ -2,33 +2,22 @@
 Poplar's heterogeneous batch allocation actually feeding the train loop.
 
 This is the e2e deliverable: plan -> padded hetero layout -> masked
-gradient-accumulation train steps -> checkpoint. Uses the real ZeRO train
-step (pjit + sharding rules) on the locally available devices.
+gradient-accumulation train steps -> checkpoint -> resume, all through
+the Session API. The planner sees the same config that trains.
 
 Run:  PYTHONPATH=src python examples/hetero_train.py [--steps 300]
 """
 import argparse
 import sys
 import time
+from dataclasses import replace
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.api import Session
 from repro.configs import get_config
 from repro.core.cluster import cluster_B
-from repro.core.hetero import layout_from_plan
-from repro.core.planner import plan as poplar_plan
-from repro.core.sharding import MeshRules
-from repro.core.zero import make_train_step, model_shardings, register_axes
-from repro.data.pipeline import HeteroDataLoader, SyntheticTokens
-from repro.launch.mesh import data_axis_size, make_debug_mesh
-from repro.models import model as mm
-from repro.optim.adamw import adamw_init
 
 
 def main():
@@ -40,51 +29,33 @@ def main():
     args = ap.parse_args()
 
     # ~100M-class config: the reduced llama with a few more layers
-    from dataclasses import replace
     cfg = replace(get_config("llama-0.5b", reduced=True),
                   n_layers=4, d_model=512, n_heads=8, n_kv_heads=8,
                   d_ff=1408, vocab_size=2048)
     print(f"params ~{cfg.total_params/1e6:.0f}M")
 
-    pplan = poplar_plan(cluster_B(), get_config("llama-0.5b"), args.gbs,
-                        seq_len=4096, zero_stage=1)
+    sess = Session.build(cfg, cluster_B(), gbs=args.gbs, seq=args.seq,
+                         zero=1, lr=1e-3)
+    d = sess.describe()
     print("poplar allocation:",
-          {n: a.gmbs for n, a in pplan.allocation.assignments.items()})
+          {n: a["gmbs"] for n, a in d["plan"]["assignments"].items()})
 
-    mesh = make_debug_mesh(jax.device_count())
-    layout = layout_from_plan(pplan.allocation,
-                              group_multiple=data_axis_size(mesh))
-    loader = HeteroDataLoader(SyntheticTokens(cfg.vocab_size, args.seq, 1),
-                              layout, args.seq)
-    rules = MeshRules(mesh, zero_stage=1)
-    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
-    register_axes(rules, axes)
-    p_specs, o_specs, _ = model_shardings(rules, params, axes)
-    opt = adamw_init(params)
-    with mesh:
-        params = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
-        opt = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
-        step_fn = jax.jit(make_train_step(cfg, rules, lr=1e-3,
-                                          accum_steps=layout.gas))
-        t0 = time.time()
-        first = last = None
-        for step in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-            if layout.gas == 1:
-                batch = {k: v[0] for k, v in batch.items()}
-            params, opt, met = step_fn(params, opt, batch)
-            loss = float(met["loss"])
-            if first is None:
-                first = loss
-            last = loss
-            if step % 25 == 0:
-                print(f"step {step:4d} loss {loss:.4f}")
-        print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
-              f"({time.time()-t0:.0f}s)")
-    fn = save_checkpoint(args.ckpt, args.steps, params, opt)
+    t0 = time.time()
+    first = last = None
+    for step in range(args.steps):
+        loss = float(sess.step()["loss"])
+        if first is None:
+            first = loss
+        last = loss
+        if step % 25 == 0:
+            print(f"step {step:4d} loss {loss:.4f}")
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({time.time()-t0:.0f}s)")
+    fn = sess.save(args.ckpt)
     print("checkpoint:", fn)
-    step, p2, o2 = restore_checkpoint(args.ckpt, None, params, opt)
-    print(f"restored step {step} OK")
+    # custom cfg is not in the registry -> pass it explicitly on restore
+    resumed = Session.restore(args.ckpt, cfg=cfg)
+    print(f"restored step {int(resumed.state.step)} OK")
 
 
 if __name__ == "__main__":

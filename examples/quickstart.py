@@ -1,13 +1,9 @@
-"""Quickstart: Poplar's fully-automated heterogeneous training config.
+"""Quickstart: Poplar's fully-automated parallelism in five lines.
 
-Runs the whole paper pipeline in one page:
-  1. describe a heterogeneous cluster (2x V100 + 2x T4 — the paper's
-     cluster B);
-  2. online profiling (Algorithm 1): per-device max batch size + speed
-     curves, zero manual tuning;
-  3. offline analysis (Algorithm 2): spline fit + optimal batch allocation;
-  4. compare against DeepSpeed-uniform and Whale-FLOPs baselines in the
-     BSP simulator.
+One `Session.build` call runs the whole paper pipeline — online
+profiling (Alg. 1), spline fitting + batch allocation (Alg. 2), ZeRO
+stage selection, mesh + sharding rules, hetero data layout — and hands
+back a jitted train step. `describe()` is the plan; `step()` trains.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,47 +12,34 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro.api import Session
 from repro.configs import get_config
-from repro.core.allocation import (allocate_flops_proportional,
-                                   allocate_uniform)
-from repro.core.cluster import CATALOG, cluster_B
-from repro.core.planner import plan
-from repro.core.simulator import simulate_plan
-from repro.core.workload import train_flops_per_token
+from repro.core.cluster import cluster_B
 
 
 def main():
-    cfg = get_config("llama-0.5b")
-    cluster = cluster_B()
-    gbs, seq = 512, 4096
+    # --- the whole pipeline, one call -----------------------------------
+    sess = Session.build(get_config("llama-0.5b", reduced=True), cluster_B(),
+                         gbs=8, seq=32, lr=1e-3)
+    for _ in range(3):
+        metrics = sess.step()
+    # --------------------------------------------------------------------
 
-    print(f"model: {cfg.name} ({cfg.total_params/1e9:.2f}B params)")
-    print(f"cluster: {cluster.counts()}  gbs={gbs} x seq={seq}")
-    print()
-
-    for stage in (0, 3):
-        p = plan(cluster, cfg, gbs, seq, zero_stage=stage)
-        print(f"=== ZeRO-{stage} ===")
-        print(f"profiling probes: {p.profiling_probes} "
-              f"(Alg.1: exponential + binary mbs search per device)")
-        for name, a in p.allocation.assignments.items():
-            curve = p.curves[name]
-            print(f"  {name:12s} mbs={curve.mbs:4d} "
-                  f"peak@b={curve.peak_batch:6.1f} -> "
-                  f"gmbs={a.gmbs:4d} micro={a.micro_batch:3d} "
-                  f"gas={a.gas} lbs={a.lbs}")
-        fps = train_flops_per_token(cfg, seq) * seq
-        base_u = allocate_uniform(p.curves, gbs, stage)
-        rating = {n: CATALOG[n.split("#")[0]].peak_tflops for n in p.curves}
-        base_w = allocate_flops_proportional(p.curves, gbs, stage, rating)
-        for label, alloc in [("poplar", p.allocation),
-                             ("deepspeed-uniform", base_u),
-                             ("whale-flops", base_w)]:
-            alloc.zero_stage = stage
-            r = simulate_plan(alloc, p.curves, cfg, seq, cluster, fps)
-            print(f"  {label:18s} {r.cluster_tflops:7.1f} TFLOPs  "
-                  f"util={r.utilization:.3f}  iter={r.iter_time:.2f}s")
-        print()
+    d = sess.describe()
+    print(f"model: {sess.cfg.name} ({sess.cfg.total_params/1e6:.1f}M params) "
+          f"cluster: B  gbs={d['gbs']} x seq={d['seq']}")
+    print(f"plan: ZeRO-{d['zero_stage']} "
+          f"probes={d['plan']['profiling_probes']} "
+          f"predicted util={d['plan']['predicted']['utilization']:.3f} "
+          f"({d['plan']['plan_seconds']:.2f}s planning, "
+          f"{d['build_seconds']:.2f}s build)")
+    for name, a in d["plan"]["assignments"].items():
+        print(f"  {name:12s} gmbs={a['gmbs']:3d} micro={a['micro_batch']:3d} "
+              f"gas={a['gas']} lbs={a['lbs']}")
+    print(f"after 3 steps: loss={float(metrics['loss']):.4f} "
+          f"step={int(sess.state.step)}")
+    assert int(sess.state.step) == 3
+    print("QUICKSTART_OK")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Batched serving example: prefill a batch of prompts, then decode tokens
 with the KV-cache/recurrent-state serve path — on a dense GQA model and on
-the attention-free xLSTM (same API, constant-size state).
+the attention-free xLSTM (same API, constant-size state), through a
+serve-mode Session (jitted decode step, no hand wiring).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -14,28 +15,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Session
 from repro.configs import get_config
-from repro.models import model as mm
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 24):
     cfg = get_config(arch, reduced=True)
-    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    sess = Session.build(cfg, mode="serve")
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(3, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
 
-    max_len = prompt_len + gen_tokens
-    state = mm.init_decode_state(cfg, batch, max_len)
-    step = jax.jit(lambda p, t, s: mm.decode_step(p, cfg, t, s))
+    state = sess.init_decode_state(batch, prompt_len + gen_tokens)
 
     # prefill by stepping the prompt through the decode path (populates the
     # KV cache / recurrent state token by token)
     t0 = time.time()
     logits = None
     for t in range(prompt_len):
-        logits, state = step(params, prompts[:, t:t + 1], state)
+        logits, state = sess.decode(prompts[:, t:t + 1], state)
     prefill_s = time.time() - t0
 
     # greedy decode
@@ -44,7 +43,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 16,
     t0 = time.time()
     for _ in range(gen_tokens):
         out_tokens.append(np.asarray(tok)[:, 0])
-        logits, state = step(params, tok, state)
+        logits, state = sess.decode(tok, state)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     jax.block_until_ready(logits)
     decode_s = time.time() - t0

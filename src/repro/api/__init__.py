@@ -1,0 +1,17 @@
+"""Public facade: one-call automated parallelism (see README.md here).
+
+    from repro.api import Session
+    sess = Session.build(cfg, cluster, gbs=64, seq=128)
+    metrics = sess.step()
+
+`Session.build` subsumes the historical plan → mesh → layout → rules →
+init → register_axes → shardings → device_put → make_*_step → jit
+ceremony; `build_step` is the unified step constructor underneath it and
+`TrainState` the state pytree that carries the logical axes in-state.
+"""
+from repro.api.session import Session
+from repro.api.state import StaticAxes, TrainState, new_train_state
+from repro.api.steps import build_step, step_io
+
+__all__ = ["Session", "TrainState", "StaticAxes", "new_train_state",
+           "build_step", "step_io"]

@@ -1,0 +1,492 @@
+"""Session — one-call automated parallelism, plan to jitted step.
+
+Poplar's claim is that the user supplies a model and a cluster and the
+system finds the configuration. :class:`Session` is that claim as an
+API: ``Session.build(cfg, cluster, gbs=..., seq=...)`` runs the Poplar
+planner (profiling → spline fit → batch allocation → stage selection),
+constructs the mesh + :class:`MeshRules`, initializes and shards a
+:class:`TrainState` (axes carried in-state — no ``register_axes`` side
+channel), and jits the unified step. Everything the old ten-step
+ceremony hand-wired is one constructor:
+
+    sess = Session.build(get_config("llama-0.5b"), cluster_B(),
+                         gbs=64, seq=128)
+    for _ in range(steps):
+        metrics = sess.step()            # loader-fed hetero batch
+    sess.save("/tmp/ckpt")               # ... later:
+    sess = Session.restore("/tmp/ckpt")  # resumes params/opt/step
+
+``cluster=None`` skips the planner for callers that pin their own mesh
+and stage (tests, benchmarks): a uniform single-group batch layout
+replaces the hetero allocation.
+
+Modes: ``"train"`` (loader/step/save/restore), ``"serve"`` (jitted
+prefill/decode over the shared state), ``"dryrun"`` (abstract
+eval_shape state; ``session.lower()`` for memory/cost analysis without
+allocating a byte).
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import steps as _steps
+from repro.api.state import TrainState, new_train_state
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, get_config
+from repro.core import cluster as CL
+from repro.core.hetero import HeteroBatchLayout, layout_from_plan
+from repro.core.sharding import MeshRules
+from repro.core.zero import model_shardings
+from repro.launch.mesh import data_axis_size, make_debug_mesh
+from repro.models import model as mm
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+MODES = ("train", "serve", "dryrun")
+
+
+def _uniform_layout(gbs: int, accum: int, group_multiple: int
+                    ) -> HeteroBatchLayout:
+    """Single-group layout for unplanned (cluster=None) sessions: ``gbs``
+    real rows per micro-step, padded to the data-axis multiple."""
+    pad = max(int(math.ceil(gbs / max(group_multiple, 1))) * group_multiple,
+              group_multiple, 1)
+    return HeteroBatchLayout(["local"], [gbs], pad, max(accum, 1), [gbs])
+
+
+def _cluster_meta(cluster) -> Optional[Dict]:
+    if cluster is None:
+        return None
+    comp = []
+    for d in cluster.devices:
+        if comp and comp[-1][0] == d.name:
+            comp[-1][1] += 1
+        else:
+            comp.append([d.name, 1])
+    return {"name": cluster.name, "composition": comp,
+            "inter_link_gbps": cluster.inter_link_gbps,
+            "shared_bus": cluster.shared_bus}
+
+
+def _cluster_from_meta(meta: Optional[Dict]):
+    if meta is None:
+        return None
+    return CL.make_cluster(meta["name"],
+                           [tuple(c) for c in meta["composition"]],
+                           meta["inter_link_gbps"],
+                           shared_bus=meta.get("shared_bus", True))
+
+
+class Session:
+    """Facade over planner + mesh + shardings + state + jitted step.
+
+    Construct with :meth:`build` (or :meth:`restore`); the plain
+    constructor is internal.
+    """
+
+    def __init__(self):
+        self.cfg: ModelConfig = None
+        self.cluster = None
+        self.mode = "train"
+        self.mesh = None
+        self.rules: MeshRules = None
+        self.plan = None                  # PoplarPlan | None
+        self.layout: HeteroBatchLayout = None
+        self.state: TrainState = None
+        self.impl = "reference"           # resolved
+        self.accum_steps = 1
+        self.lr = 3e-4
+        self.adamw_cfg = AdamWConfig()
+        self.window = None
+        self.gbs = 0
+        self.seq = 0
+        self.seed = 0
+        self.data = None
+        self.build_seconds = 0.0
+        self.plan_seconds = 0.0
+        self._jit_step = None
+        self._prefill = None
+        self._decode = None
+        self._loader = None
+        self._p_shardings = None
+        self._o_shardings = None
+        self._meta: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ build --
+    @classmethod
+    def build(cls, cfg, cluster=None, *, gbs: int = 32, seq: int = 128,
+              mode: str = "train", zero: Optional[int] = None,
+              impl: str = "auto", overlap: str = "auto",
+              comm_dtype: Optional[str] = None, lr: float = 3e-4,
+              adamw_cfg: Optional[AdamWConfig] = None,
+              window: Optional[int] = None,
+              accum_steps: Optional[int] = None,
+              mesh=None, seed: int = 0, data: Optional[str] = None,
+              overlap_prefetch: bool = True,
+              plan_seq: Optional[int] = None) -> "Session":
+        """One call from (model, cluster) to a jitted, sharded step.
+
+        ``cfg`` — a ModelConfig or a registered arch name. ``cluster`` —
+        a ClusterSpec to plan against, or None to skip the planner (then
+        ``zero`` defaults to 3 and ``accum_steps`` to 1). The planner is
+        fed *this* cfg and sequence length — the configuration that
+        trains is the configuration that plans (``plan_seq`` overrides
+        the planning seq_len only, for CPU demos that train short).
+        """
+        if mode not in MODES:
+            raise ValueError(f"mode={mode!r}; expected one of {MODES}")
+        t0 = time.time()
+        self = cls()
+        if isinstance(cfg, str):
+            cfg = get_config(cfg)
+        self.cluster = cluster
+        self.mode = mode
+        self.lr = lr
+        self.adamw_cfg = AdamWConfig() if adamw_cfg is None else adamw_cfg
+        self.window = window
+        self.gbs, self.seq, self.seed, self.data = gbs, seq, seed, data
+        # recipe fingerprint of the cfg *as handed in* — a data= corpus may
+        # widen the vocab below, and restore() must be able to match the
+        # registry config before re-deriving that widening
+        input_arch, input_params = cfg.name, int(cfg.total_params)
+
+        # data source first: a text corpus can widen the vocab, and the
+        # planner must see the cfg that actually trains
+        self._source = None
+        if mode == "train":
+            from dataclasses import replace
+            from repro.data.pipeline import SyntheticTokens, TextFileTokens
+            if data:
+                src = TextFileTokens(data, seq, seed=seed)
+                cfg = replace(cfg, vocab_size=max(cfg.vocab_size,
+                                                  src.vocab_size))
+            else:
+                src = SyntheticTokens(cfg.vocab_size, seq, seed=seed)
+            self._source = src
+        self.cfg = cfg
+
+        # ---- Poplar: fully automated configuration ----
+        if cluster is not None and mode != "serve":
+            from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR
+            from repro.core.planner import plan as poplar_plan
+            overlap_factor = (SCHEDULED_OVERLAP_FACTOR if overlap != "xla"
+                              else 0.0)
+            tp = time.time()
+            self.plan = poplar_plan(cluster, cfg, gbs,
+                                    seq_len=plan_seq or seq,
+                                    zero_stage=zero,
+                                    overlap_factor=overlap_factor)
+            self.plan_seconds = time.time() - tp
+            stage = self.plan.zero_stage
+        else:
+            stage = (0 if mode == "serve" else 3) if zero is None else zero
+
+        self.mesh = mesh if mesh is not None else make_debug_mesh(
+            jax.device_count())
+        if self.plan is not None:
+            self.layout = layout_from_plan(
+                self.plan.allocation, group_multiple=data_axis_size(self.mesh))
+            self.accum_steps = self.layout.gas
+        else:
+            self.accum_steps = accum_steps or 1
+            self.layout = _uniform_layout(gbs, self.accum_steps,
+                                          data_axis_size(self.mesh))
+        self.rules = MeshRules(self.mesh, zero_stage=stage, overlap=overlap,
+                               comm_dtype=comm_dtype,
+                               overlap_prefetch=overlap_prefetch)
+        self.impl = _steps.resolve_impl(impl)
+
+        # ---- state: init, shard, wrap (axes ride in the pytree) ----
+        if mode == "dryrun":
+            box = {}
+
+            def init_values(key):
+                p, a = mm.init_model(key, cfg)
+                box["axes"] = a
+                return p
+
+            p_tree = jax.eval_shape(init_values, jax.random.PRNGKey(seed))
+            axes = box["axes"]
+            opt = jax.eval_shape(adamw_init, p_tree)
+            self.state = TrainState(p_tree, opt,
+                                    jax.ShapeDtypeStruct((), jnp.int32), axes)
+            self._derive_shardings()
+        else:
+            params, axes = mm.init_model(jax.random.PRNGKey(seed), cfg)
+            opt = adamw_init(params) if mode == "train" else None
+            self.state = new_train_state(params, axes, opt)
+            self._derive_shardings()
+            with self.mesh:
+                self.state = jax.device_put(self.state,
+                                            self._state_shardings())
+            self._build_step_fns()
+
+        from dataclasses import asdict
+        self._meta = {
+            "arch": input_arch, "total_params": input_params,
+            "cluster": _cluster_meta(cluster), "gbs": gbs, "seq": seq,
+            "mode": mode, "zero": stage, "impl": impl, "overlap": overlap,
+            "comm_dtype": comm_dtype, "lr": lr, "window": window,
+            "adamw": asdict(self.adamw_cfg),
+            "accum_steps": accum_steps, "seed": seed, "data": data,
+            "overlap_prefetch": overlap_prefetch, "plan_seq": plan_seq,
+        }
+        self.build_seconds = time.time() - t0
+        return self
+
+    def _derive_shardings(self):
+        p_specs, o_specs, _ = model_shardings(self.rules, self.state.params,
+                                              self.state.axes)
+        self._p_shardings = jax.tree.map(self.rules.sharding, p_specs)
+        self._o_shardings = (jax.tree.map(self.rules.sharding, o_specs)
+                             if self.state.opt is not None else None)
+
+    def _state_shardings(self) -> TrainState:
+        from jax.sharding import PartitionSpec as P
+        return TrainState(self._p_shardings, self._o_shardings,
+                          self.rules.sharding(P()), self.state.axes)
+
+    def _build_step_fns(self):
+        cfg, rules = self.cfg, self.rules
+
+        if self.mode == "train":
+            def state_step(state: TrainState, batch):
+                raw = _steps.build_step(
+                    cfg, rules, state.axes, kind="train",
+                    adamw_cfg=self.adamw_cfg, lr=self.lr,
+                    window=self.window, impl=self.impl,
+                    accum_steps=self.accum_steps)
+                p, o, metrics = raw(state.params, state.opt, batch)
+                return state.replace(params=p, opt=o,
+                                     step=state.step + 1), metrics
+
+            self._jit_step = jax.jit(state_step)
+        else:  # serve
+            self._prefill = jax.jit(_steps.build_step(
+                cfg, rules, kind="prefill", window=self.window,
+                impl=self.impl))
+            self._decode = jax.jit(_steps.build_step(
+                cfg, rules, kind="decode", window=self.window,
+                impl=self.impl))
+
+    # ------------------------------------------------------- execution --
+    def step(self, batch=None, *args):
+        """Advance one step.
+
+        train: ``step(batch=None)`` — None pulls the next hetero batch
+        from :meth:`loader`; returns the metrics dict and updates
+        ``self.state``. serve: ``step(tokens, decode_state)`` aliases
+        :meth:`decode`.
+        """
+        if self.mode == "serve":
+            return self.decode(batch, *args)
+        if self.mode != "train":
+            raise RuntimeError(f"step() not available in mode={self.mode!r}")
+        if batch is None:
+            batch = self.loader().next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if self.accum_steps == 1 and batch["tokens"].ndim == 3:
+            # loader batches carry a (gas, B, S) lead; with gas=1 the step
+            # consumes the plain (B, S) form
+            if batch["tokens"].shape[0] != 1:
+                raise ValueError(
+                    f"batch has a {batch['tokens'].shape[0]}-deep "
+                    "accumulation axis but the session was built with "
+                    "accum_steps=1 — rebuild with accum_steps= or pass "
+                    "unstacked (B, S) arrays")
+            batch = {k: v[0] for k, v in batch.items()}
+        with self.mesh:
+            self.state, metrics = self._jit_step(self.state, batch)
+        return metrics
+
+    def loader(self):
+        """The hetero data loader matching the plan's batch layout,
+        positioned at the current step (restore-safe)."""
+        if self.mode != "train":
+            raise RuntimeError("loader() is train-mode only")
+        if self._loader is None:
+            from repro.data.pipeline import HeteroDataLoader
+            self._loader = HeteroDataLoader(self._source, self.layout,
+                                            self.seq)
+            self._loader.seek(int(self.state.step))
+        return self._loader
+
+    # serve-mode surface
+    def prefill(self, batch):
+        if self._prefill is None:
+            raise RuntimeError("prefill() is serve-mode only")
+        with self.mesh:
+            return self._prefill(self.state.params, batch)
+
+    def decode(self, tokens, decode_state):
+        if self._decode is None:
+            raise RuntimeError("decode() is serve-mode only")
+        with self.mesh:
+            return self._decode(self.state.params, tokens, decode_state)
+
+    def init_decode_state(self, batch: int, max_len: int, enc_out=None):
+        return mm.init_decode_state(self.cfg, batch, max_len,
+                                    enc_out=enc_out)
+
+    # dryrun-mode surface
+    def lower(self):
+        """Lower (not compile) the train step against ShapeDtypeStructs —
+        the dry-run entry: memory_analysis/cost_analysis without
+        allocating."""
+        from repro.launch import specs as SP
+        batch = {}
+        lead = (self.accum_steps,) if self.accum_steps > 1 else ()
+        B, S = self.layout.padded_global_batch, self.seq
+        for k, dt in (("tokens", jnp.int32), ("labels", jnp.int32),
+                      ("loss_mask", jnp.float32)):
+            batch[k] = SP.SDS(lead + (B, S), dt)
+        b_specs = SP.batch_spec_tree(
+            self.rules, batch,
+            accum=self.accum_steps if self.accum_steps > 1 else 0)
+        fn = _steps.build_step(self.cfg, self.rules, self.state.axes,
+                               kind="train", adamw_cfg=self.adamw_cfg,
+                               lr=self.lr, window=self.window,
+                               impl=self.impl,
+                               accum_steps=self.accum_steps)
+        in_sh = (self._p_shardings, self._o_shardings,
+                 jax.tree.map(self.rules.sharding, b_specs))
+        with self.mesh:
+            return jax.jit(fn, in_shardings=in_sh).lower(
+                self.state.params, self.state.opt, batch)
+
+    # -------------------------------------------------------- describe --
+    def describe(self) -> Dict[str, Any]:
+        """Plan, predicted utilization, memory model, and the scheduled-
+        overlap comm report — the whole configuration, one dict."""
+        from repro.core.workload import MemoryModel
+        out: Dict[str, Any] = {
+            "mode": self.mode, "impl": self.impl,
+            "zero_stage": self.rules.zero_stage,
+            "overlap": self.rules.overlap,
+            "comm_dtype": self.rules.comm_dtype,
+            "mesh": {"shape": list(self.mesh.devices.shape),
+                     "axes": list(self.mesh.axis_names)},
+            "gbs": self.gbs, "seq": self.seq,
+            "accum_steps": self.accum_steps,
+            "build_seconds": round(self.build_seconds, 3),
+        }
+        if self.plan is not None:
+            p = self.plan
+            out["plan"] = {
+                "zero_stage": p.zero_stage,
+                "profiling_probes": p.profiling_probes,
+                "plan_seconds": round(self.plan_seconds, 3),
+                "assignments": {
+                    n: {"gmbs": a.gmbs, "micro_batch": a.micro_batch,
+                        "gas": a.gas, "lbs": a.lbs}
+                    for n, a in p.allocation.assignments.items()},
+            }
+            if p.predicted is not None:
+                out["plan"]["predicted"] = {
+                    "cluster_tflops": p.predicted.cluster_tflops,
+                    "utilization": p.predicted.utilization,
+                    "iter_time_s": p.predicted.iter_time,
+                }
+        if self.layout is not None:
+            out["layout"] = {
+                "groups": list(self.layout.group_names),
+                "padded_group_batch": self.layout.padded_group_batch,
+                "gas": self.layout.gas,
+            }
+        n_dev = self.cluster.n if self.cluster is not None else max(
+            int(jax.device_count()), 1)
+        memm = MemoryModel(self.cfg, self.seq, self.rules.zero_stage, n_dev,
+                           self.cfg.remat)
+        out["memory"] = {
+            "model_state_gb": memm.model_state_bytes() / 1e9,
+            "activation_gb_per_sample":
+                memm.activation_bytes_per_sample() / 1e9,
+        }
+        out["overlap_report"] = self._overlap_report()
+        return out
+
+    def _overlap_report(self):
+        """comm_report for the scheduled plan, or the reason it does not
+        apply (a string)."""
+        from repro.core import overlap
+        if self.mode != "train" or self.state is None:
+            return "train-mode only"
+        lead = ((self.accum_steps,) if self.accum_steps > 1 else ())
+        shape = lead + (self.layout.padded_global_batch, self.seq)
+        batch = {"tokens": jax.ShapeDtypeStruct(shape, jnp.int32)}
+        plan = overlap.plan_comm(self.rules, self.state.params,
+                                 self.state.axes, batch, self.accum_steps)
+        if isinstance(plan, str):
+            return plan
+        return overlap.comm_report(plan, self.state.params,
+                                   remat=self.cfg.remat)
+
+    # ---------------------------------------------------- save/restore --
+    def save(self, path: str) -> str:
+        """Checkpoint params/opt/step plus the session recipe; restore
+        with :meth:`Session.restore`."""
+        if self.mode != "train":
+            raise RuntimeError("save() is train-mode only")
+        return save_checkpoint(path, int(self.state.step), self.state.params,
+                               self.state.opt,
+                               metadata={"session": self._meta})
+
+    def load(self, path: str, step: Optional[int] = None) -> "Session":
+        """Load a checkpoint into this (already built) session."""
+        step, params, opt = restore_checkpoint(path, step, self.state.params,
+                                               self.state.opt)
+        with self.mesh:
+            params = jax.device_put(params, self._p_shardings)
+            if opt is not None:
+                opt = jax.device_put(opt, self._o_shardings)
+        self.state = TrainState(params, opt, jnp.asarray(step, jnp.int32),
+                                self.state.axes)
+        if self._loader is not None:
+            self._loader.seek(int(step))
+        return self
+
+    @classmethod
+    def restore(cls, path: str, cfg=None, cluster=None,
+                step: Optional[int] = None, mesh=None,
+                **overrides) -> "Session":
+        """Rebuild the session from the checkpoint's recorded recipe and
+        load params/opt/step. ``cfg``/``cluster``/other kwargs override
+        the recorded values (required when the original cfg was a custom
+        dataclass not in the registry)."""
+        d = Path(path)
+        if step is None:
+            from repro.checkpoint import latest_step
+            step = latest_step(path)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {path}")
+        meta = json.loads((d / f"ckpt_{step:08d}.json").read_text())
+        skw = dict(meta.get("session", {}))
+        arch = skw.pop("arch", None)
+        fingerprint = skw.pop("total_params", None)
+        cluster_meta = skw.pop("cluster", None)
+        adamw = skw.pop("adamw", None)
+        if adamw is not None and "adamw_cfg" not in overrides:
+            skw["adamw_cfg"] = AdamWConfig(**adamw)
+        skw.pop("step", None)
+        skw.update(overrides)
+        if cfg is None:
+            if arch is None:
+                raise ValueError("checkpoint has no session metadata; "
+                                 "pass cfg= explicitly")
+            cfg = get_config(arch)
+            if fingerprint is not None and int(cfg.total_params) != fingerprint:
+                cfg = get_config(arch, reduced=True)
+                if int(cfg.total_params) != fingerprint:
+                    raise ValueError(
+                        f"checkpoint was built from a customized {arch!r} "
+                        "config; pass cfg= explicitly")
+        if cluster is None:
+            cluster = _cluster_from_meta(cluster_meta)
+        sess = cls.build(cfg, cluster, mesh=mesh, **skw)
+        return sess.load(path, step)

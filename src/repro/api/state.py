@@ -1,0 +1,96 @@
+"""First-class training state: one pytree that carries everything a step
+needs — parameters, optimizer state, the step counter, and the model's
+*logical-axis tree* as static pytree metadata.
+
+The axes tree used to travel through a side channel: callers had to
+`zero.register_axes(rules, axes)` before tracing so the step builder
+could look it up at trace time (a mutable attribute smuggled onto the
+MeshRules instance). Carrying the axes as :class:`TrainState` aux data
+kills that ceremony: any function jitted over a TrainState sees the axes
+as ordinary static Python data (`state.axes`) during tracing, and the
+state round-trips through `jax.jit` / `jax.device_put` / checkpointing
+with the axes attached.
+
+`params`/`opt` are regular pytrees; `step` is a () int32 array so the
+counter lives on-device and survives donation. `opt` may be ``None`` for
+inference-only sessions (None is an empty subtree to JAX).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _freeze(tree) -> Any:
+    """Canonical hashable form of an axes tree (dicts ordered by key)."""
+    if isinstance(tree, dict):
+        return ("__dict__",) + tuple(
+            (k, _freeze(v)) for k, v in sorted(tree.items()))
+    if isinstance(tree, (list, tuple)):
+        tag = "__list__" if isinstance(tree, list) else "__tuple__"
+        return (tag,) + tuple(_freeze(v) for v in tree)
+    return tree
+
+
+class StaticAxes:
+    """Hashable wrapper making an axes tree usable as pytree aux data
+    (jit's tracing cache keys aux data by __hash__/__eq__)."""
+
+    __slots__ = ("tree", "_key")
+
+    def __init__(self, tree):
+        self.tree = tree
+        self._key = _freeze(tree)
+
+    def __eq__(self, other):
+        return isinstance(other, StaticAxes) and self._key == other._key
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __repr__(self):
+        return f"StaticAxes({self.tree!r})"
+
+
+@dataclass
+class TrainState:
+    """(params, opt, step) pytree with the logical-axis tree as static
+    aux data. Build fresh states with :func:`new_train_state`; inside jit
+    read ``state.axes`` freely — it is Python data, not a tracer."""
+    params: Any
+    opt: Optional[Any]
+    step: Any
+    axes: Any
+
+    def replace(self, **kw) -> "TrainState":
+        d = {"params": self.params, "opt": self.opt, "step": self.step,
+             "axes": self.axes}
+        d.update(kw)
+        return TrainState(**d)
+
+
+def _ts_flatten_with_keys(ts: TrainState):
+    G = jax.tree_util.GetAttrKey
+    children = ((G("params"), ts.params), (G("opt"), ts.opt),
+                (G("step"), ts.step))
+    return children, StaticAxes(ts.axes)
+
+
+def _ts_flatten(ts: TrainState):
+    return (ts.params, ts.opt, ts.step), StaticAxes(ts.axes)
+
+
+def _ts_unflatten(aux: StaticAxes, children):
+    params, opt, step = children
+    return TrainState(params, opt, step, aux.tree)
+
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState, _ts_flatten_with_keys, _ts_unflatten, _ts_flatten)
+
+
+def new_train_state(params, axes, opt=None) -> TrainState:
+    return TrainState(params, opt, jnp.zeros((), jnp.int32), axes)

@@ -1,0 +1,191 @@
+"""Unified step construction: one builder for every execution kind.
+
+``build_step(cfg, rules, axes, kind=...)`` subsumes the three historical
+builders (``zero.make_train_step`` / ``make_prefill_step`` /
+``make_decode_step``, now thin deprecation shims over this module). The
+logical-axis tree is an explicit argument — there is no registration
+side channel; Session passes ``state.axes`` and the shims pass whatever
+``register_axes`` pinned on the rules instance.
+
+Returned signatures (unjitted; callers jit):
+
+  kind="train"    step(params, opt_state, batch) -> (params, opt, metrics)
+  kind="prefill"  step(params, batch)            -> last-token logits
+  kind="decode"   step(params, tokens, state)    -> (logits, state)
+
+``step_io(cfg, rules, shape, ...)`` pairs a step with ShapeDtypeStruct
+example args and input shardings for lowering-only consumers (the
+multi-pod dry-run) — no device allocation happens there.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sharding import MeshRules, use_rules
+from repro.core.zero import model_shardings
+from repro.models import model as mm
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+STEP_KINDS = ("train", "prefill", "decode")
+
+
+def resolve_impl(impl: str) -> str:
+    """``"auto"`` -> the backend-recommended kernel implementation."""
+    if impl == "auto":
+        from repro.kernels.ops import recommended_impl
+        return recommended_impl()
+    return impl
+
+
+def build_step(cfg: ModelConfig, rules: MeshRules, axes=None, *,
+               kind: str = "train",
+               adamw_cfg: AdamWConfig = AdamWConfig(),
+               lr: float = 3e-4, window: Optional[int] = None,
+               impl: str = "reference", accum_steps: int = 1) -> Callable:
+    """Build the (unjitted) step function for ``kind``.
+
+    ``axes`` — the logical-axis tree from ``init_model`` — is required
+    for ``kind="train"`` (ZeRO>=2 gradient specs and the scheduled-
+    overlap comm plan are derived from it); inference kinds ignore it.
+
+    Training semantics are unchanged from the pre-Session builders:
+    ``accum_steps > 1`` consumes (gas, B, S) stacked micro-batches with
+    per-microbatch loss masks (Poplar's gmbs/lbs schedule as masked
+    rows); ``rules.overlap`` routes stage 3 through the explicit
+    shard_map schedule in core/overlap.py ("scheduled" raises when the
+    mesh/batch combination cannot support it, "auto" falls back).
+    """
+    if kind not in STEP_KINDS:
+        raise ValueError(f"kind={kind!r}; expected one of {STEP_KINDS}")
+    impl = resolve_impl(impl)
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            with use_rules(rules):
+                return mm.prefill(params, cfg, batch, window=window,
+                                  impl=impl)
+        return prefill_step
+    if kind == "decode":
+        def decode_step(params, tokens, state):
+            with use_rules(rules):
+                return mm.decode_step(params, cfg, tokens, state,
+                                      window=window, impl=impl)
+        return decode_step
+    if axes is None:
+        raise ValueError("kind='train' needs the logical-axis tree "
+                         "(pass axes=, e.g. TrainState.axes)")
+    return _train_step(cfg, rules, axes, adamw_cfg, lr, window, impl,
+                       accum_steps)
+
+
+def _train_step(cfg: ModelConfig, rules: MeshRules, axes,
+                adamw_cfg: AdamWConfig, lr: float, window: Optional[int],
+                impl: str, accum_steps: int) -> Callable:
+    stage = rules.zero_stage
+
+    def loss_of(params, batch):
+        return mm.loss_fn(params, cfg, batch, window=window, impl=impl)
+
+    def train_step(params, opt_state, batch):
+        mode = getattr(rules, "overlap", "xla")
+        if mode in ("scheduled", "auto"):
+            from repro.core import overlap
+            plan = overlap.plan_comm(rules, params, axes, batch, accum_steps)
+            if isinstance(plan, str):
+                if mode == "scheduled":
+                    raise ValueError(
+                        f"rules.overlap='scheduled' unsupported: {plan}")
+            elif mode == "scheduled" or plan.n_dp > 1:
+                return overlap.scheduled_train_step(
+                    plan, cfg, adamw_cfg, lr, window, impl, accum_steps,
+                    params, opt_state, batch)
+        with use_rules(rules):
+            if accum_steps == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, batch)
+                tokens = metrics["tokens"]
+            else:
+                def micro(carry, mb):
+                    g_acc, l_acc, t_acc = carry
+                    (l, met), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, mb)
+                    w = met["tokens"]
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) * w, g_acc, g)
+                    return (g_acc, l_acc + l * w, t_acc + w), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, lsum, tokens), _ = jax.lax.scan(
+                    micro, (g0, jnp.zeros(()), jnp.zeros(())), batch)
+                denom = jnp.maximum(tokens, 1.0)
+                grads = jax.tree.map(lambda g: g / denom, grads)
+                loss = lsum / denom
+                metrics = {"loss": loss, "aux": jnp.zeros(()),
+                           "tokens": tokens}
+            if stage >= 2:
+                # reduce-scatter semantics: keep grads partitioned
+                _, _, g_specs = model_shardings(rules, params, axes)
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g, rules.sharding(s)), grads, g_specs)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                                   lr, adamw_cfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# lowering-only step assembly (the multi-pod dry-run path)
+# ---------------------------------------------------------------------------
+
+def step_io(cfg: ModelConfig, rules: MeshRules, shape,
+            impl: str = "reference") -> Tuple[Callable, tuple, tuple]:
+    """(fn, ShapeDtypeStruct example args, in_shardings) for an InputShape.
+
+    Everything comes from ``jax.eval_shape`` — safe to lower/compile on
+    placeholder meshes with no real allocation.
+    """
+    from repro.launch import specs as SP
+
+    window = SP.effective_window(cfg, shape)
+    if shape.mode == "train":
+        p_shapes, axes, p_specs, o_shapes, opt_specs, _ = (
+            SP.params_and_shardings(cfg, rules, with_opt=True))
+        batch = SP.batch_specs(cfg, shape)
+        b_specs = SP.batch_spec_tree(rules, batch)
+        fn = build_step(cfg, rules, axes, kind="train", window=window,
+                        impl=impl)
+        args = (p_shapes, o_shapes, batch)
+        in_sh = (jax.tree.map(rules.sharding, p_specs),
+                 jax.tree.map(rules.sharding, opt_specs),
+                 jax.tree.map(rules.sharding, b_specs))
+        return fn, args, in_sh
+    if shape.mode == "prefill":
+        p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
+            cfg, rules, with_opt=False)
+        batch = SP.batch_specs(cfg, shape)
+        b_specs = SP.batch_spec_tree(rules, batch)
+        fn = build_step(cfg, rules, kind="prefill", window=window, impl=impl)
+        args = (p_shapes, batch)
+        in_sh = (jax.tree.map(rules.sharding, p_specs),
+                 jax.tree.map(rules.sharding, b_specs))
+        return fn, args, in_sh
+    # decode
+    p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
+        cfg, rules, with_opt=False)
+    state_shapes, state_specs = SP.decode_state_specs(cfg, rules, shape)
+    tokens = SP.SDS((shape.global_batch, 1), jnp.int32)
+    tok_spec = rules.activation_spec(("batch", None), tokens.shape)
+    fn = build_step(cfg, rules, kind="decode", window=window, impl=impl)
+    args = (p_shapes, tokens, state_shapes)
+    in_sh = (jax.tree.map(rules.sharding, p_specs),
+             rules.sharding(tok_spec),
+             jax.tree.map(rules.sharding, state_specs))
+    return fn, args, in_sh

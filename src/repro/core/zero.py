@@ -1,4 +1,4 @@
-"""ZeRO stages 0–3 as JAX shardings + train/serve step builders.
+"""ZeRO stages 0–3 as JAX shardings + deprecated step-builder shims.
 
 Mapping (DESIGN.md §3):
   stage 0 — params & optimizer replicated over data axes; grads all-reduced.
@@ -12,26 +12,24 @@ Mapping (DESIGN.md §3):
 All of it composes with tensor parallelism on the `model` axis and the
 hierarchical-ZeRO (`hierarchical_params`) pod-local variant via MeshRules.
 
-Stage 3 additionally supports the *explicitly scheduled* execution path
-(`rules.overlap="scheduled"|"auto"`, core/overlap.py): a shard_map step
-that double-buffers the next layer's parameter all-gather under the
-current layer's compute and reduce-scatters each layer's gradient inside
-the backward sweep. The XLA-auto path here remains the parity oracle.
+The step builders themselves moved to ``repro.api.steps.build_step``
+(one builder for train/prefill/decode, logical axes passed explicitly)
+behind the ``repro.api.Session`` facade. ``make_train_step`` /
+``make_prefill_step`` / ``make_decode_step`` / ``register_axes`` remain
+here as thin deprecation shims with the historical semantics: register
+the axes tree on the rules instance, then build a step that looks them
+up at trace time. New code should not use them — a ``TrainState``
+carries its axes in-state (see repro/api/README.md for the old→new map).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.sharding import MeshRules, use_rules
-from repro.models import model as mm
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
-
+from repro.core.sharding import MeshRules
 
 # ---------------------------------------------------------------------------
 # sharding trees
@@ -65,137 +63,73 @@ def batch_spec(rules: MeshRules, batch_shapes: Dict[str, Tuple[int, ...]]
 
 
 # ---------------------------------------------------------------------------
-# step builders
+# deprecated step-builder shims (use repro.api.Session / api.steps instead)
 # ---------------------------------------------------------------------------
 
-def make_train_step(cfg: ModelConfig, rules: MeshRules,
-                    adamw_cfg: AdamWConfig = AdamWConfig(),
-                    lr: float = 3e-4, window: Optional[int] = None,
-                    impl: str = "reference",
-                    accum_steps: int = 1) -> Callable:
-    """Build the (unjitted) train step; callers jit with the spec trees
-    from `model_shardings`.
-
-    ``accum_steps > 1``: batch arrives as (gas, B, S) stacked micro-batches
-    with per-microbatch loss masks — the SPMD realization of Poplar's
-    gmbs/lbs schedule (uneven per-device accumulation becomes masked rows;
-    see core/hetero.py).
-
-    ``impl="auto"`` resolves to the Pallas kernel path on backends where
-    it compiles natively and to the jnp reference elsewhere (see
-    ``repro.kernels.ops.recommended_impl``); ``"pallas"`` forces the
-    custom-VJP kernels (interpret mode included).
-
-    ``rules.overlap``: "scheduled" routes stage 3 through the explicit
-    shard_map schedule in core/overlap.py (raising if the mesh/batch
-    combination cannot support it); "auto" does so only when supported
-    *and* there is more than one data-parallel device; "xla" (default)
-    keeps the auto-SPMD path below.
-    """
-    stage = rules.zero_stage
-    impl = _resolve_impl(impl)
-
-    def loss_of(params, batch):
-        return mm.loss_fn(params, cfg, batch, window=window, impl=impl)
-
-    def train_step(params, opt_state, batch):
-        mode = getattr(rules, "overlap", "xla")
-        if mode in ("scheduled", "auto"):
-            from repro.core import overlap
-            plan = overlap.plan_comm(rules, params, _axes_of(params, rules),
-                                     batch, accum_steps)
-            if isinstance(plan, str):
-                if mode == "scheduled":
-                    raise ValueError(
-                        f"rules.overlap='scheduled' unsupported: {plan}")
-            elif mode == "scheduled" or plan.n_dp > 1:
-                return overlap.scheduled_train_step(
-                    plan, cfg, adamw_cfg, lr, window, impl, accum_steps,
-                    params, opt_state, batch)
-        with use_rules(rules):
-            if accum_steps == 1:
-                (loss, metrics), grads = jax.value_and_grad(
-                    loss_of, has_aux=True)(params, batch)
-                tokens = metrics["tokens"]
-            else:
-                def micro(carry, mb):
-                    g_acc, l_acc, t_acc = carry
-                    (l, met), g = jax.value_and_grad(
-                        loss_of, has_aux=True)(params, mb)
-                    w = met["tokens"]
-                    g_acc = jax.tree.map(
-                        lambda a, b: a + b.astype(jnp.float32) * w, g_acc, g)
-                    return (g_acc, l_acc + l * w, t_acc + w), None
-
-                g0 = jax.tree.map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
-                (grads, lsum, tokens), _ = jax.lax.scan(
-                    micro, (g0, jnp.zeros(()), jnp.zeros(())), batch)
-                denom = jnp.maximum(tokens, 1.0)
-                grads = jax.tree.map(lambda g: g / denom, grads)
-                loss = lsum / denom
-                metrics = {"loss": loss, "aux": jnp.zeros(()),
-                           "tokens": tokens}
-            if stage >= 2:
-                # reduce-scatter semantics: keep grads partitioned
-                _, _, g_specs = model_shardings(rules, params,
-                                                _axes_of(params, rules))
-                grads = jax.tree.map(
-                    lambda g, s: jax.lax.with_sharding_constraint(
-                        g, rules.sharding(s)), grads, g_specs)
-            new_params, new_opt, om = adamw_update(grads, opt_state, params,
-                                                   lr, adamw_cfg)
-            metrics = dict(metrics)
-            metrics.update(om)
-            return new_params, new_opt, metrics
-
-    return train_step
-
-
-# grads sharding needs the axes tree; registration pins it on the rules
-# instance itself. (A module-level dict keyed on id(rules) is a use-after-
-# free hazard: once a MeshRules is garbage-collected CPython can hand its
-# id to a brand-new instance, silently serving the *old* rules' axes tree.
-# Instance storage has exactly the lifetime of the key.)
+# The historical axes side channel: registration pins the axes tree on the
+# rules instance itself. (A module-level dict keyed on id(rules) is a use-
+# after-free hazard: once a MeshRules is garbage-collected CPython can hand
+# its id to a brand-new instance, silently serving the *old* rules' axes
+# tree. Instance storage has exactly the lifetime of the key.) Kept only
+# for the shims below — Session-built steps read TrainState.axes instead.
 _AXES_ATTR = "_registered_axes_tree"
 
 
 def _axes_of(params, rules):
     axes = getattr(rules, _AXES_ATTR, None)
     if axes is None:
-        raise RuntimeError("call register_axes(rules, axes) before tracing")
+        raise RuntimeError("call register_axes(rules, axes) before tracing "
+                           "(deprecated — prefer repro.api.Session, which "
+                           "carries axes in TrainState)")
     return axes
 
 
 def register_axes(rules: MeshRules, axes) -> None:
+    """Deprecated: pin the logical-axis tree on a MeshRules instance for
+    the step-builder shims below. New code passes axes explicitly
+    (``api.steps.build_step(cfg, rules, axes, ...)``) or lets Session
+    carry them in-state."""
     object.__setattr__(rules, _AXES_ATTR, axes)
 
 
-def _resolve_impl(impl: str) -> str:
-    if impl == "auto":
-        from repro.kernels.ops import recommended_impl
-        return recommended_impl()
-    return impl
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    adamw_cfg=None, lr: float = 3e-4,
+                    window: Optional[int] = None,
+                    impl: str = "reference",
+                    accum_steps: int = 1) -> Callable:
+    """Deprecated shim over ``repro.api.steps.build_step(kind="train")``.
+
+    Axes come from ``register_axes`` at trace time (the historical side
+    channel); semantics — accum stacking, impl="auto" resolution, the
+    rules.overlap routing — are unchanged and live in api/steps.py.
+    """
+    from repro.api import steps as _steps
+    from repro.optim.adamw import AdamWConfig
+    adamw_cfg = AdamWConfig() if adamw_cfg is None else adamw_cfg
+
+    def train_step(params, opt_state, batch):
+        inner = _steps.build_step(
+            cfg, rules, _axes_of(params, rules), kind="train",
+            adamw_cfg=adamw_cfg, lr=lr, window=window, impl=impl,
+            accum_steps=accum_steps)
+        return inner(params, opt_state, batch)
+
+    return train_step
 
 
 def make_prefill_step(cfg: ModelConfig, rules: MeshRules,
                       window: Optional[int] = None, impl: str = "reference"
                       ) -> Callable:
-    impl = _resolve_impl(impl)
-
-    def prefill_step(params, batch):
-        with use_rules(rules):
-            return mm.prefill(params, cfg, batch, window=window, impl=impl)
-    return prefill_step
+    """Deprecated shim over ``api.steps.build_step(kind="prefill")``."""
+    from repro.api import steps as _steps
+    return _steps.build_step(cfg, rules, kind="prefill", window=window,
+                             impl=impl)
 
 
 def make_decode_step(cfg: ModelConfig, rules: MeshRules,
                      window: Optional[int] = None, impl: str = "reference"
                      ) -> Callable:
-    impl = _resolve_impl(impl)
-
-    def serve_step(params, tokens, state):
-        with use_rules(rules):
-            return mm.decode_step(params, cfg, tokens, state, window=window,
-                                  impl=impl)
-    return serve_step
+    """Deprecated shim over ``api.steps.build_step(kind="decode")``."""
+    from repro.api import steps as _steps
+    return _steps.build_step(cfg, rules, kind="decode", window=window,
+                             impl=impl)

@@ -102,6 +102,11 @@ class HeteroDataLoader:
         while True:
             yield self.next_batch()
 
+    def seek(self, epoch: int) -> None:
+        """Position the stream as if ``epoch`` batches were already drawn
+        (checkpoint resume: epoch == the restored step count)."""
+        self._epoch = int(epoch)
+
     def next_batch(self) -> Dict[str, np.ndarray]:
         n = self.layout.total_real()
         rows = self.source.rows(n, self._epoch)

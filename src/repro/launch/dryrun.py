@@ -27,9 +27,9 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro.api import step_io
 from repro.configs import ASSIGNED_ARCHS, applicable, get_config, get_shape, SHAPES
 from repro.core.sharding import MeshRules
-from repro.core.zero import make_train_step, make_prefill_step, make_decode_step, register_axes
 from repro.launch import specs as SP
 from repro.launch.mesh import make_production_mesh
 
@@ -88,42 +88,10 @@ def _cost_dict(ca):
 
 
 def build_step(cfg, rules, shape, impl: str = "reference"):
-    """Returns (fn, example_args, in_shardings)."""
-    window = SP.effective_window(cfg, shape)
-    if shape.mode == "train":
-        p_shapes, axes, p_specs, o_shapes, opt_specs, _ = (
-            SP.params_and_shardings(cfg, rules, with_opt=True))
-        register_axes(rules, axes)
-        batch = SP.batch_specs(cfg, shape)
-        b_specs = SP.batch_spec_tree(rules, batch)
-        fn = make_train_step(cfg, rules, window=window, impl=impl)
-        args = (p_shapes, o_shapes, batch)
-        in_sh = (jax.tree.map(rules.sharding, p_specs),
-                 jax.tree.map(rules.sharding, opt_specs),
-                 jax.tree.map(rules.sharding, b_specs))
-        return fn, args, in_sh
-    if shape.mode == "prefill":
-        p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
-            cfg, rules, with_opt=False)
-        batch = SP.batch_specs(cfg, shape)
-        b_specs = SP.batch_spec_tree(rules, batch)
-        fn = make_prefill_step(cfg, rules, window=window, impl=impl)
-        args = (p_shapes, batch)
-        in_sh = (jax.tree.map(rules.sharding, p_specs),
-                 jax.tree.map(rules.sharding, b_specs))
-        return fn, args, in_sh
-    # decode
-    p_shapes, axes, p_specs, *_ = SP.params_and_shardings(
-        cfg, rules, with_opt=False)
-    state_shapes, state_specs = SP.decode_state_specs(cfg, rules, shape)
-    tokens = SP.SDS((shape.global_batch, 1), jnp.int32)
-    tok_spec = rules.activation_spec(("batch", None), tokens.shape)
-    fn = make_decode_step(cfg, rules, window=window, impl=impl)
-    args = (p_shapes, tokens, state_shapes)
-    in_sh = (jax.tree.map(rules.sharding, p_specs),
-             rules.sharding(tok_spec),
-             jax.tree.map(rules.sharding, state_specs))
-    return fn, args, in_sh
+    """Returns (fn, example_args, in_shardings) — the Session API's
+    lowering-only assembly (`repro.api.step_io`); no axes registration,
+    no device allocation."""
+    return step_io(cfg, rules, shape, impl=impl)
 
 
 _COST_CACHE = {}

@@ -11,7 +11,7 @@ serving groups here:
   3. allocate each wave's requests so all groups finish together
      (allocate_stage01 — decode has no gradient sync, so the stage-0/1
      allocator is the right shape);
-  4. run the wave: stepped prefill -> greedy decode on the local device.
+  4. run the wave through a serve-mode Session (jitted prefill/decode).
 
 Usage:
   python -m repro.launch.serve --arch llama-0.5b --reduced \
@@ -26,11 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Session
 from repro.configs import get_config
 from repro.core import cluster as CL
 from repro.core.allocation import allocate_stage01, fit_curve
 from repro.core.profiler import DeviceProfile
-from repro.models import model as mm
 
 
 def profile_decode_groups(cluster: CL.ClusterSpec, cfg, cache_len: int):
@@ -57,21 +57,20 @@ def profile_decode_groups(cluster: CL.ClusterSpec, cfg, cache_len: int):
     return curves
 
 
-def run_wave(cfg, params, prompts, gen_tokens: int):
+def run_wave(sess: Session, prompts, gen_tokens: int):
     B, prompt_len = prompts.shape
-    state = mm.init_decode_state(cfg, B, prompt_len + gen_tokens)
-    step = jax.jit(lambda p, t, s: mm.decode_step(p, cfg, t, s))
+    state = sess.init_decode_state(B, prompt_len + gen_tokens)
     logits = None
     t0 = time.time()
     for t in range(prompt_len):
-        logits, state = step(params, prompts[:, t:t + 1], state)
+        logits, state = sess.decode(prompts[:, t:t + 1], state)
     prefill_s = time.time() - t0
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = []
     t0 = time.time()
     for _ in range(gen_tokens):
         out.append(np.asarray(tok)[:, 0])
-        logits, state = step(params, tok, state)
+        logits, state = sess.decode(tok, state)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     jax.block_until_ready(logits)
     decode_s = time.time() - t0
@@ -104,12 +103,12 @@ def main(argv=None):
     assert plan.total_batch == args.requests
 
     # ---- execute locally (one wave; per-group waves on a real fleet) ----
-    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+    sess = Session.build(cfg, mode="serve")
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(3, cfg.vocab_size, (args.requests, args.prompt_len)),
         jnp.int32)
-    gen, prefill_s, decode_s = run_wave(cfg, params, prompts, args.gen)
+    gen, prefill_s, decode_s = run_wave(sess, prompts, args.gen)
     tps = args.requests * args.gen / decode_s
     print(f"arch={args.arch} reduced={args.reduced} "
           f"prefill {prefill_s*1e3:.1f}ms  decode "

@@ -1,36 +1,41 @@
 """Training launcher: Poplar auto-configuration + hetero data layout +
-pjit'd ZeRO train loop, end to end.
+pjit'd ZeRO train loop, end to end — one `Session.build` call.
 
   python -m repro.launch.train --arch llama-0.5b --steps 100 \
-      --cluster B --gbs 64 --seq 128 [--zero N] [--measured]
+      --cluster B --gbs 64 --seq 128 [--zero N] [--resume CKPT]
 
 On this CPU container the "cluster" is simulated by the analytical device
 models (the planner's allocation is real; execution runs on the local
 device with the padded hetero layout). On a real heterogeneous TPU fleet
 the same code plans per pod group and the mesh spans the fleet.
+
+The planner sees the *same* config that trains (including ``--reduced``)
+— planning against the full model while training the smoke variant would
+feed the batch allocator the wrong memory model. ``--plan-seq`` keeps
+the option of planning at a production sequence length while the CPU
+demo trains short ones.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
-from dataclasses import replace
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import save_checkpoint
+from repro.api import Session
 from repro.configs import get_config
 from repro.core import cluster as CL
-from repro.core.hetero import layout_from_plan
-from repro.core.planner import plan as poplar_plan
-from repro.core.sharding import MeshRules
-from repro.core.zero import make_train_step, model_shardings, register_axes
-from repro.data.pipeline import HeteroDataLoader, SyntheticTokens, TextFileTokens
-from repro.launch.mesh import data_axis_size, make_debug_mesh
-from repro.models import model as mm
-from repro.optim.adamw import adamw_init
-from repro.optim.schedule import cosine_schedule
+
+
+def _explicit_dests(ap: argparse.ArgumentParser, argv) -> set:
+    """Dests of options the user actually typed (``--lr 3e-4`` counts even
+    when 3e-4 is the default — resume must treat it as an override)."""
+    argv = sys.argv[1:] if argv is None else list(argv)
+    given = set()
+    for action in ap._actions:
+        for opt in action.option_strings:
+            if any(a == opt or a.startswith(opt + "=") for a in argv):
+                given.add(action.dest)
+    return given
 
 
 def main(argv=None):
@@ -41,6 +46,8 @@ def main(argv=None):
     ap.add_argument("--cluster", default="B", choices=list("ABC") + ["tpu"])
     ap.add_argument("--gbs", type=int, default=32)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--plan-seq", type=int, default=None,
+                    help="sequence length for planning only (default: --seq)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--zero", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -62,79 +69,78 @@ def main(argv=None):
     ap.add_argument("--data", default=None, help="text file (byte-LM); "
                                                  "default synthetic")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="resume params/opt/step from a Session checkpoint "
+                         "directory (crash recovery)")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    cluster = (CL.hetero_tpu_fleet() if args.cluster == "tpu"
-               else CL.PAPER_CLUSTERS[args.cluster]())
+    def make_cfg():
+        return get_config(args.arch, reduced=args.reduced)
 
-    from repro.kernels.ops import recommended_impl
-    impl = recommended_impl() if args.impl == "auto" else args.impl
-    print(f"[impl] {impl}" + (" (auto)" if args.impl == "auto" else ""))
+    def make_cluster():
+        return (CL.hetero_tpu_fleet() if args.cluster == "tpu"
+                else CL.PAPER_CLUSTERS[args.cluster]())
 
-    # ---- Poplar: fully automated configuration ----
-    from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR
-    overlap_factor = (SCHEDULED_OVERLAP_FACTOR if args.overlap != "xla"
-                      else 0.0)
-    t0 = time.time()
-    pplan = poplar_plan(cluster, get_config(args.arch), args.gbs,
-                        seq_len=max(args.seq, 512), zero_stage=args.zero,
-                        overlap_factor=overlap_factor)
-    print(f"[poplar] stage={pplan.zero_stage} "
-          f"probes={pplan.profiling_probes} "
-          f"predicted {pplan.predicted.cluster_tflops:.1f} TFLOPs "
-          f"util={pplan.predicted.utilization:.3f} "
-          f"({time.time()-t0:.2f}s planning)")
-    for n, a in pplan.allocation.assignments.items():
-        print(f"  {n:14s} gmbs={a.gmbs:4d} micro={a.micro_batch:3d} "
-              f"gas={a.gas:3d} lbs={a.lbs:3d}")
-
-    # ---- hetero batch layout + loader ----
-    mesh = make_debug_mesh(jax.device_count())
-    layout = layout_from_plan(pplan.allocation,
-                              group_multiple=data_axis_size(mesh))
-    # cap padded batch for the CPU demo
-    print(f"[layout] groups={len(layout.group_names)} "
-          f"padded/group={layout.padded_group_batch} gas={layout.gas}")
-    if args.data:
-        src = TextFileTokens(args.data, args.seq)
-        cfg = replace(cfg, vocab_size=max(cfg.vocab_size, src.vocab_size))
+    # ---- Poplar: fully automated configuration, one call ----
+    build_kw = dict(gbs=args.gbs, seq=args.seq, zero=args.zero,
+                    impl=args.impl, overlap=args.overlap,
+                    comm_dtype=args.comm_dtype, lr=args.lr, data=args.data,
+                    plan_seq=args.plan_seq)
+    if args.resume:
+        # crash recovery must resume the *recorded* recipe: only flags the
+        # user actually typed on this invocation override it — passing
+        # every argparse default would silently clobber the original
+        # lr/gbs/data/arch the checkpoint was trained with
+        given = _explicit_dests(ap, argv)
+        overrides = {k: v for k, v in build_kw.items() if k in given}
+        cfg = make_cfg() if given & {"arch", "reduced"} else None
+        cluster = make_cluster() if "cluster" in given else None
+        sess = Session.restore(args.resume, cfg=cfg, cluster=cluster,
+                               **overrides)
+        print(f"[resume] {args.resume} @ step {int(sess.state.step)}"
+              + (f" (overriding {sorted(overrides)})" if overrides else ""))
     else:
-        src = SyntheticTokens(cfg.vocab_size, args.seq)
-    loader = HeteroDataLoader(src, layout, args.seq)
+        sess = Session.build(make_cfg(), make_cluster(), mode="train",
+                             **build_kw)
+    desc = sess.describe()
+    print(f"[impl] {desc['impl']}"
+          + (" (auto)" if args.impl == "auto" else ""))
+    plan = desc.get("plan")   # absent when resuming an unplanned checkpoint
+    if plan is not None:
+        print(f"[poplar] stage={plan['zero_stage']} "
+              f"probes={plan['profiling_probes']} "
+              f"predicted {plan['predicted']['cluster_tflops']:.1f} TFLOPs "
+              f"util={plan['predicted']['utilization']:.3f} "
+              f"({plan['plan_seconds']:.2f}s planning, "
+              f"{desc['build_seconds']:.2f}s build)")
+        for n, a in plan["assignments"].items():
+            print(f"  {n:14s} gmbs={a['gmbs']:4d} micro={a['micro_batch']:3d} "
+                  f"gas={a['gas']:3d} lbs={a['lbs']:3d}")
+    else:
+        print(f"[unplanned] stage={desc['zero_stage']} "
+              f"({desc['build_seconds']:.2f}s build)")
+    lay = desc["layout"]
+    print(f"[layout] groups={len(lay['groups'])} "
+          f"padded/group={lay['padded_group_batch']} gas={lay['gas']}")
 
-    # ---- model + ZeRO shardings ----
-    rules = MeshRules(mesh, zero_stage=pplan.zero_stage,
-                      overlap=args.overlap, comm_dtype=args.comm_dtype)
-    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
-    register_axes(rules, axes)
-    p_specs, o_specs, _ = model_shardings(rules, params, axes)
-    opt = adamw_init(params)
-    with mesh:
-        params = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
-        opt = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
-        step_fn = jax.jit(make_train_step(
-            cfg, rules, lr=args.lr, impl=impl, accum_steps=layout.gas))
-
-        tokens_seen = 0
-        t_start = time.time()
-        for step in range(args.steps):
-            batch = loader.next_batch()
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            if layout.gas == 1:
-                batch = {k: v[0] for k, v in batch.items()}
-            params, opt, met = step_fn(params, opt, batch)
-            tokens_seen += int(met["tokens"])
-            if step % args.log_every == 0:
-                print(f"step {step:4d} loss={float(met['loss']):.4f} "
-                      f"gnorm={float(met['grad_norm']):.3f} "
-                      f"tokens={tokens_seen}")
-        dt = time.time() - t_start
-        print(f"[done] {args.steps} steps, {tokens_seen} tokens, "
-              f"{tokens_seen/dt:.0f} tok/s (wall, this host)")
+    # ---- train loop: Session feeds its own hetero loader ----
+    tokens_seen = 0
+    start = int(sess.state.step)
+    t_start = time.time()
+    for step in range(start, args.steps):
+        met = sess.step()
+        tokens_seen += int(met["tokens"])
+        if step % args.log_every == 0:
+            print(f"step {step:4d} loss={float(met['loss']):.4f} "
+                  f"gnorm={float(met['grad_norm']):.3f} "
+                  f"tokens={tokens_seen}")
+    dt = time.time() - t_start
+    steps_run = max(args.steps - start, 1)
+    print(f"[done] {steps_run} steps, {tokens_seen} tokens, "
+          f"{tokens_seen/dt:.0f} tok/s (wall, this host)")
     if args.ckpt:
-        fn = save_checkpoint(args.ckpt, args.steps, params, opt)
+        fn = sess.save(args.ckpt)
         print(f"[ckpt] saved {fn}")
 
 

@@ -33,11 +33,12 @@ def test_decode_wave_respects_memory_limits():
 
 
 def test_run_wave_generates_tokens():
+    from repro.api import Session
+
     cfg = get_config("llama-0.5b", reduced=True)
-    params, _ = __import__("repro.models.model", fromlist=["m"]).init_model(
-        jax.random.PRNGKey(0), cfg)
+    sess = Session.build(cfg, mode="serve", impl="reference")
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size, (2, 4)), jnp.int32)
-    gen, prefill_s, decode_s = run_wave(cfg, params, prompts, gen_tokens=3)
+    gen, prefill_s, decode_s = run_wave(sess, prompts, gen_tokens=3)
     assert gen.shape == (2, 3)
     assert (gen >= 0).all() and (gen < cfg.vocab_size).all()

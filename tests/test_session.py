@@ -1,0 +1,317 @@
+"""Session API: the one-call facade must be a *refactor*, not a new code
+path — its jitted step is the same computation the hand-wired ceremony
+built (bit-identical params across ZeRO stages 0–3, accum>1 and the
+scheduled-overlap path on an 8-device mesh), its checkpoints resume the
+exact trajectory, and TrainState carries the logical axes as static
+pytree metadata (no register_axes side channel)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Session, TrainState, build_step, new_train_state
+from repro.configs import get_config
+from repro.core.sharding import MeshRules
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as mm
+
+
+# ------------------------------------------------------------ TrainState --
+
+def test_train_state_roundtrips_axes_through_tree_ops():
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    state = new_train_state(params, axes)
+    doubled = jax.tree.map(lambda x: x * 2, state)
+    assert doubled.axes == axes                     # aux data survives
+    assert int(doubled.step) == 0
+    leaves, treedef = jax.tree.flatten(state)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.axes == axes
+
+
+def test_train_state_axes_are_static_under_jit():
+    cfg = get_config("llama-0.5b", reduced=True)
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    state = new_train_state(params, axes)
+    seen = {}
+
+    @jax.jit
+    def f(st: TrainState):
+        seen["axes"] = st.axes         # trace time: plain Python data
+        assert not isinstance(st.axes, jax.core.Tracer)
+        return st.step + 1
+
+    assert int(f(state)) == 1
+    assert seen["axes"] == axes
+
+
+def test_build_step_rejects_unknown_kind_and_missing_axes():
+    cfg = get_config("llama-0.5b", reduced=True)
+    rules = MeshRules(make_debug_mesh(1), zero_stage=0)
+    with pytest.raises(ValueError, match="kind"):
+        build_step(cfg, rules, kind="evaluate")
+    with pytest.raises(ValueError, match="axes"):
+        build_step(cfg, rules, kind="train")
+
+
+# ------------------------------------------------- facade basics (1 dev) --
+
+def test_session_equals_handwired_shim_single_device():
+    """In-process spot check of the parity the 8-dev subprocess pins."""
+    from repro.core.zero import make_train_step, register_axes
+    from repro.optim.adamw import adamw_init
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (4, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+             "loss_mask": jnp.ones((4, 16), jnp.float32)}
+
+    params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+    rules = MeshRules(make_debug_mesh(1), zero_stage=0)
+    register_axes(rules, axes)
+    step = jax.jit(make_train_step(cfg, rules, lr=1e-3, impl="reference"))
+    opt = adamw_init(params)
+    p_ref, _, met_ref = step(params, opt, batch)
+
+    sess = Session.build(cfg, None, gbs=4, seq=16, zero=0, impl="reference",
+                         lr=1e-3, mesh=make_debug_mesh(1))
+    met = sess.step(batch)
+    assert float(met["loss"]) == float(met_ref["loss"])
+    for a, b in zip(jax.tree.leaves(p_ref),
+                    jax.tree.leaves(sess.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(sess.state.step) == 1
+
+
+def test_describe_reports_plan_memory_and_overlap():
+    from repro.core.cluster import cluster_B
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, cluster_B(), gbs=8, seq=16, zero=1,
+                         impl="reference")
+    d = sess.describe()
+    assert d["zero_stage"] == 1 and d["mode"] == "train"
+    assert d["plan"]["profiling_probes"] > 0
+    assert set(d["plan"]["assignments"]) == {
+        "V100-16G#1", "V100-16G#2", "T4-16G#1", "T4-16G#2"}
+    assert 0 < d["plan"]["predicted"]["utilization"] <= 1.0
+    assert d["memory"]["model_state_gb"] > 0
+    # stage 1 is not schedulable: the report is the reason string
+    assert isinstance(d["overlap_report"], str)
+    assert sum(a["gmbs"] for a in d["plan"]["assignments"].values()) == 8
+
+
+def test_describe_overlap_report_on_stage3():
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=8, seq=16, zero=3,
+                         impl="reference", mesh=make_debug_mesh(1))
+    rep = sess.describe()["overlap_report"]
+    # 1-device mesh: nothing is sharded, so the report is a dict with
+    # zero wire bytes (or an eligibility string on exotic meshes)
+    if not isinstance(rep, str):
+        assert rep["wire_bytes_scheduled"] == 0.0
+
+
+def test_dryrun_mode_lowers_without_allocating():
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=4, seq=16, mode="dryrun", zero=3,
+                         mesh=make_debug_mesh(1))
+    assert isinstance(jax.tree.leaves(sess.state.params)[0],
+                      jax.ShapeDtypeStruct)
+    lowered = sess.lower()
+    assert "all-gather" in lowered.as_text() or lowered is not None
+
+
+def test_serve_mode_decodes():
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, mode="serve", impl="reference")
+    state = sess.init_decode_state(2, 8)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, state = sess.decode(tok, state)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert int(state["index"]) == 3
+
+
+def test_step_rejects_stacked_batch_when_accum_is_one():
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=4, seq=16, zero=0, impl="reference",
+                         mesh=make_debug_mesh(1))
+    stacked = {"tokens": jnp.zeros((2, 4, 16), jnp.int32),
+               "labels": jnp.zeros((2, 4, 16), jnp.int32),
+               "loss_mask": jnp.ones((2, 4, 16), jnp.float32)}
+    with pytest.raises(ValueError, match="accum"):
+        sess.step(stacked)          # would silently drop micro-batches
+
+
+def test_seed_reaches_the_data_source():
+    cfg = get_config("llama-0.5b", reduced=True)
+    kw = dict(gbs=2, seq=8, zero=0, impl="reference",
+              mesh=make_debug_mesh(1))
+    b0 = Session.build(cfg, None, seed=0, **kw).loader().next_batch()
+    b1 = Session.build(cfg, None, seed=1, **kw).loader().next_batch()
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ------------------------------------------------------- save / restore --
+
+def test_save_restore_resumes_identical_trajectory(tmp_path):
+    cfg = get_config("llama-0.5b", reduced=True)
+    kw = dict(gbs=4, seq=16, zero=0, impl="reference", lr=1e-3,
+              mesh=make_debug_mesh(1))
+    sess = Session.build(cfg, None, **kw)
+    for _ in range(3):
+        sess.step()                       # loader-fed deterministic batches
+    sess.save(str(tmp_path))
+    ahead = [float(sess.step()["loss"]) for _ in range(2)]
+
+    resumed = Session.restore(str(tmp_path), cfg=cfg,
+                              mesh=make_debug_mesh(1))
+    assert int(resumed.state.step) == 3
+    replay = [float(resumed.step()["loss"]) for _ in range(2)]
+    assert replay == ahead                # bit-identical resume
+    for a, b in zip(jax.tree.leaves(sess.state.params),
+                    jax.tree.leaves(resumed.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_preserves_adamw_cfg(tmp_path):
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=2, seq=8, zero=0, impl="reference",
+                         mesh=make_debug_mesh(1),
+                         adamw_cfg=AdamWConfig(weight_decay=0.0, b2=0.99))
+    sess.step()
+    sess.save(str(tmp_path))
+    resumed = Session.restore(str(tmp_path), cfg=cfg,
+                              mesh=make_debug_mesh(1))
+    assert resumed.adamw_cfg == AdamWConfig(weight_decay=0.0, b2=0.99)
+
+
+def test_restore_replays_data_recipe_without_explicit_cfg(tmp_path):
+    corpus = tmp_path / "corpus.txt"
+    corpus.write_text("the quick brown fox jumps over the lazy dog " * 40)
+    ckpt = tmp_path / "ckpt"
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=2, seq=8, zero=0, impl="reference",
+                         mesh=make_debug_mesh(1), data=str(corpus))
+    sess.step()
+    sess.save(str(ckpt))
+    # fingerprint is recorded against the *input* cfg, and the data=
+    # recipe re-derives any vocab widening inside build
+    resumed = Session.restore(str(ckpt), mesh=make_debug_mesh(1))
+    assert int(resumed.state.step) == 1
+    assert resumed.data == str(corpus)
+    loss = float(resumed.step()["loss"])
+    assert np.isfinite(loss)
+
+
+def test_restore_recovers_reduced_cfg_from_metadata(tmp_path):
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, None, gbs=2, seq=8, zero=0, impl="reference",
+                         mesh=make_debug_mesh(1))
+    sess.step()
+    sess.save(str(tmp_path))
+    resumed = Session.restore(str(tmp_path))   # no cfg: fingerprint match
+    assert resumed.cfg.total_params == cfg.total_params
+    assert int(resumed.state.step) == 1
+
+
+# ---------------------------------------------- 8-device parity (slow) ----
+
+SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from dataclasses import replace
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.api import Session
+from repro.configs import get_config
+from repro.core.sharding import MeshRules
+from repro.core.zero import make_train_step, model_shardings, register_axes
+from repro.models import model as mm
+from repro.optim.adamw import adamw_init
+
+cfg = get_config("llama-0.5b", reduced=True)
+cfg = replace(cfg, dtype="float32", param_dtype="float32")
+params, axes = mm.init_model(jax.random.PRNGKey(0), cfg)
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (16, 16)), jnp.int32)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+         "loss_mask": jnp.ones((16, 16), jnp.float32)}
+stacked = jax.tree.map(lambda x: x.reshape((2, 8) + x.shape[1:]), batch)
+mesh = jax.make_mesh((8,), ("data",))
+
+
+def handwired(stage, overlap="xla", accum=1):
+    rules = MeshRules(mesh, zero_stage=stage, overlap=overlap)
+    register_axes(rules, axes)
+    p_specs, o_specs, _ = model_shardings(rules, params, axes)
+    b = stacked if accum > 1 else batch
+    with mesh:
+        pp = jax.device_put(params, jax.tree.map(rules.sharding, p_specs))
+        oo = jax.device_put(opt, jax.tree.map(rules.sharding, o_specs))
+        step = jax.jit(make_train_step(cfg, rules, lr=1e-3,
+                                       impl="reference", accum_steps=accum))
+        for _ in range(2):
+            pp, oo, met = step(pp, oo, b)
+    return jax.tree.map(np.asarray, pp), {k: float(v) for k, v in met.items()}
+
+
+def via_session(stage, overlap="xla", accum=1):
+    sess = Session.build(cfg, None, gbs=16, seq=16, zero=stage,
+                         overlap=overlap, impl="reference", lr=1e-3,
+                         mesh=mesh, accum_steps=accum)
+    b = stacked if accum > 1 else batch
+    for _ in range(2):
+        met = sess.step(b)
+    assert int(sess.state.step) == 2
+    return (jax.tree.map(np.asarray, sess.state.params),
+            {k: float(v) for k, v in met.items()})
+
+
+for stage in (0, 1, 2, 3):
+    p_ref, m_ref = handwired(stage)
+    p_s, m_s = via_session(stage)
+    assert m_ref["loss"] == m_s["loss"], (stage, m_ref, m_s)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_s)):
+        np.testing.assert_array_equal(a, b, err_msg=f"stage {stage}")
+    print(f"SESSION_STAGE{stage}_OK")
+
+p_ref, m_ref = handwired(0, accum=2)
+p_s, m_s = via_session(0, accum=2)
+assert m_ref["loss"] == m_s["loss"]
+for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_s)):
+    np.testing.assert_array_equal(a, b, err_msg="accum")
+print("SESSION_ACCUM_OK")
+
+p_ref, m_ref = handwired(3, overlap="scheduled")
+p_s, m_s = via_session(3, overlap="scheduled")
+assert m_ref["loss"] == m_s["loss"]
+for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_s)):
+    np.testing.assert_array_equal(a, b, err_msg="scheduled")
+print("SESSION_SCHEDULED_OK")
+print("SESSION_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_session_matches_handwired_8dev_subprocess():
+    """Session.build(...).step(batch) is bit-identical to the pre-refactor
+    register_axes + model_shardings + device_put + make_train_step path:
+    stages 0-3, accum_steps>1, and the scheduled-overlap shard_map step."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", SUBPROC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "SESSION_PARITY_OK" in out.stdout, out.stdout + out.stderr
