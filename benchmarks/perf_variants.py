@@ -185,6 +185,23 @@ def gqa_decode_row(B: int = 1, Hkv: int = 2, G: int = 8) -> List[str]:
         f"kv_bytes_saved_per_step={kv_expanded - kv_native}")]
 
 
+def _run_subproc_json(script: str, marker: str, timeout: int = 900) -> Dict:
+    """Run an inline benchmark script in a subprocess (needed whenever the
+    bench wants placeholder XLA devices — the parent keeps its real single
+    device) and parse the one ``<marker> <json>`` line it prints."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(Path(__file__).resolve().parents[1] / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith(marker + " ")), None)
+    if line is None:
+        raise RuntimeError(f"{marker} subprocess failed: "
+                           f"{proc.stdout[-500:]}{proc.stderr[-500:]}")
+    return json.loads(line[len(marker) + 1:])
+
+
 _OVERLAP_SUBPROC = r"""
 import os, json, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -313,17 +330,7 @@ def zero3_overlap_rows() -> List[str]:
     """Auto-vs-scheduled ZeRO-3 rows: wall time per train step on an
     8-placeholder-device CPU mesh (subprocess — the bench process keeps
     its single device) plus each schedule's exposed-comm bytes."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (str(Path(__file__).resolve().parents[1] / "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    proc = subprocess.run([sys.executable, "-c", _OVERLAP_SUBPROC], env=env,
-                          capture_output=True, text=True, timeout=900)
-    line = next((l for l in proc.stdout.splitlines()
-                 if l.startswith("OVERLAP_JSON ")), None)
-    if line is None:
-        raise RuntimeError(f"overlap subprocess failed: "
-                           f"{proc.stdout[-500:]}{proc.stderr[-500:]}")
-    data = json.loads(line[len("OVERLAP_JSON "):])
+    data = _run_subproc_json(_OVERLAP_SUBPROC, "OVERLAP_JSON")
     rep = data["scheduled"]["report"]
     exposed_auto = rep["exposed_bytes_auto"]
     exposed_sched = rep["exposed_bytes_scheduled"]
@@ -341,6 +348,56 @@ def zero3_overlap_rows() -> List[str]:
                 f"hidden_comm_bytes={int(rep['hidden_bytes_scheduled'])};"
                 f"exposed_lower_than_auto={exposed_sched < exposed_auto}"),
     ]
+
+
+_ELASTIC_SUBPROC = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from repro.api import Session
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+
+cfg = get_config("llama-0.5b", reduced=True)
+sess = Session.build(cfg, make_cluster("c8", [("V100-16G", 4),
+                                              ("T4-16G", 4)], 12.0),
+                     gbs=16, seq=64, zero=3, impl="reference", lr=1e-3)
+sess.step()                               # compile + warm up
+times = []
+for _ in range(5):
+    t0 = time.perf_counter()
+    sess.step()
+    times.append(time.perf_counter() - t0)
+step_s = sorted(times)[len(times) // 2]
+
+# drop two devices mid-run: re-plan + live cross-mesh reshard
+rep = sess.replan(cluster=make_cluster("c6", [("V100-16G", 4),
+                                              ("T4-16G", 2)], 12.0))
+losses = [float(sess.step()["loss"]) for _ in range(2)]
+out = {"step_ms": step_s * 1e3, "plan_ms": rep.plan_seconds * 1e3,
+       "reshard_ms": rep.reshard_seconds * 1e3,
+       "replan_ms": rep.total_seconds * 1e3,
+       "old_devices": rep.old_devices, "new_devices": rep.new_devices,
+       "loss_finite": bool(np.all(np.isfinite(losses)))}
+print("ELASTIC_JSON " + json.dumps(out))
+"""
+
+
+def elastic_replan_rows() -> List[str]:
+    """Elastic-runtime overhead: a mid-run ``session.replan()`` after two
+    of eight devices drop (subprocess, 8-placeholder-device CPU mesh) —
+    plan + live cross-mesh reshard wall time, compared against one train
+    step so the break-even horizon is explicit."""
+    d = _run_subproc_json(_ELASTIC_SUBPROC, "ELASTIC_JSON")
+    ratio = d["replan_ms"] / max(d["step_ms"], 1e-9)
+    return [csv_row(
+        "perf/elastic/replan_overhead/8to6dev_cpu", d["replan_ms"] * 1e3,
+        f"replan_ms={d['replan_ms']:.2f};plan_ms={d['plan_ms']:.2f};"
+        f"reshard_ms={d['reshard_ms']:.2f};step_ms={d['step_ms']:.2f};"
+        f"steps_equivalent={ratio:.2f};"
+        f"devices={d['old_devices']}to{d['new_devices']};"
+        f"loss_finite={d['loss_finite']}")]
 
 
 def run() -> List[str]:
@@ -400,6 +457,11 @@ def run() -> List[str]:
         rows.extend(session_overhead_rows())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/session_api/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(elastic_replan_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/elastic/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

@@ -23,8 +23,11 @@ def _parse_derived(derived: str) -> dict:
     k=v;k=v blob (best effort — rows are free-form)."""
     out = {}
     for key in ("ms", "tokens_per_sec", "exposed_comm_bytes",
-                "hidden_comm_bytes", "kv_bytes_saved_per_step", "speedup"):
-        m = re.search(rf"{key}=([-0-9.eE]+)x?(?:;|$)", derived)
+                "hidden_comm_bytes", "kv_bytes_saved_per_step", "speedup",
+                "replan_ms", "step_ms", "steps_equivalent"):
+        # anchor on a field boundary: the bare "ms" key must not match
+        # inside "replan_ms=…" / "step_ms=…"
+        m = re.search(rf"(?:^|;){key}=([-0-9.eE]+)x?(?:;|$)", derived)
         if m:
             try:
                 out[key] = float(m.group(1))

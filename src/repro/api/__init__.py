@@ -10,8 +10,12 @@ ceremony; `build_step` is the unified step constructor underneath it and
 `TrainState` the state pytree that carries the logical axes in-state.
 """
 from repro.api.session import Session
-from repro.api.state import StaticAxes, TrainState, new_train_state
-from repro.api.steps import build_step, step_io
+from repro.api.state import (StaticAxes, TrainState, host_train_state,
+                             new_train_state)
+from repro.api.steps import ProbeHarness, build_step, step_io
+from repro.core.telemetry import (DriftConfig, DriftReport, EMAWindow,
+                                  ReplanReport)
 
 __all__ = ["Session", "TrainState", "StaticAxes", "new_train_state",
-           "build_step", "step_io"]
+           "host_train_state", "build_step", "step_io", "ProbeHarness",
+           "DriftConfig", "DriftReport", "EMAWindow", "ReplanReport"]

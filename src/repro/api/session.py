@@ -24,6 +24,22 @@ Modes: ``"train"`` (loader/step/save/restore), ``"serve"`` (jitted
 prefill/decode over the shared state), ``"dryrun"`` (abstract
 eval_shape state; ``session.lower()`` for memory/cost analysis without
 allocating a byte).
+
+The lifecycle is *elastic* — plan → execute → observe → re-plan:
+
+- ``profile="measured"`` feeds the allocation search real jitted-step
+  wall times (Algorithm 1 over :class:`ProbeHarness` +
+  ``MeasuredRunner``) instead of analytical ``DeviceSpec`` curves;
+- every ``step()`` records wall time into a telemetry EMA;
+  ``session.drift()`` compares it against ``plan.predicted`` and
+  ``session.maybe_replan()`` re-plans when reality left the band;
+- ``session.replan(cluster=...)`` handles membership changes (device
+  added/removed): it re-runs the planner, rebuilds mesh + rules +
+  layout, and *reshards the live TrainState onto the new mesh* without
+  restarting the process (the loader re-splits in place);
+- ``Session.restore(path, cluster=...)`` reshards a checkpoint across
+  meshes — an 8-device stage-3 checkpoint restores onto a 4-device
+  layout bit-identically (checkpoints store gathered full arrays).
 """
 from __future__ import annotations
 
@@ -37,18 +53,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import steps as _steps
-from repro.api.state import TrainState, new_train_state
+from repro.api.state import TrainState, host_train_state, new_train_state
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig, get_config
 from repro.core import cluster as CL
 from repro.core.hetero import HeteroBatchLayout, layout_from_plan
 from repro.core.sharding import MeshRules
+from repro.core.telemetry import (DriftConfig, DriftReport, EMAWindow,
+                                  ReplanReport, detect_drift)
 from repro.core.zero import model_shardings
 from repro.launch.mesh import data_axis_size, make_debug_mesh
 from repro.models import model as mm
 from repro.optim.adamw import AdamWConfig, adamw_init
 
 MODES = ("train", "serve", "dryrun")
+PROFILES = ("analytical", "measured")
+
+# exponential-probe ceiling for measured profiling: every probed batch
+# size costs a real jit compile, so the default search is bounded (the
+# analytical runners keep the uncapped search)
+MEASURED_PROBE_CAP = 16
 
 
 def _uniform_layout(gbs: int, accum: int, group_multiple: int
@@ -108,8 +132,21 @@ class Session:
         self.seq = 0
         self.seed = 0
         self.data = None
+        self.profile = "analytical"
+        self.probe_cap = None
         self.build_seconds = 0.0
         self.plan_seconds = 0.0
+        self.telemetry = EMAWindow()
+        self.drift_config = DriftConfig()
+        self.replans = 0
+        self.last_replan: Optional[ReplanReport] = None
+        # substrate calibration for drift detection: observed/predicted
+        # ratio recorded as nominal once enough steps are in (None until
+        # then; reset by replan — a new plan gets a new baseline)
+        self._drift_baseline: Optional[float] = None
+        self._observe_tick = 0
+        self._zero_request: Optional[int] = None
+        self._plan_seq: Optional[int] = None
         self._jit_step = None
         self._prefill = None
         self._decode = None
@@ -129,7 +166,10 @@ class Session:
               accum_steps: Optional[int] = None,
               mesh=None, seed: int = 0, data: Optional[str] = None,
               overlap_prefetch: bool = True,
-              plan_seq: Optional[int] = None) -> "Session":
+              plan_seq: Optional[int] = None,
+              profile: str = "analytical",
+              probe_cap: Optional[int] = None,
+              drift: Optional[DriftConfig] = None) -> "Session":
         """One call from (model, cluster) to a jitted, sharded step.
 
         ``cfg`` — a ModelConfig or a registered arch name. ``cluster`` —
@@ -138,9 +178,21 @@ class Session:
         fed *this* cfg and sequence length — the configuration that
         trains is the configuration that plans (``plan_seq`` overrides
         the planning seq_len only, for CPU demos that train short).
+
+        ``profile`` — where Algorithm 1's timings come from:
+        ``"analytical"`` simulates the cluster's published DeviceSpec
+        curves; ``"measured"`` times the *real* jitted step per device
+        kind (exponential+binary probing over a ProbeHarness with the
+        compile-time memory_analysis OOM oracle) so the allocation search
+        runs on observed TimeConsumedDuringStep. ``probe_cap`` bounds the
+        measured probe's batch sweep (default MEASURED_PROBE_CAP; each
+        probed batch size costs one jit compile).
         """
         if mode not in MODES:
             raise ValueError(f"mode={mode!r}; expected one of {MODES}")
+        if profile not in PROFILES:
+            raise ValueError(
+                f"profile={profile!r}; expected one of {PROFILES}")
         t0 = time.time()
         self = cls()
         if isinstance(cfg, str):
@@ -151,6 +203,10 @@ class Session:
         self.adamw_cfg = AdamWConfig() if adamw_cfg is None else adamw_cfg
         self.window = window
         self.gbs, self.seq, self.seed, self.data = gbs, seq, seed, data
+        self.profile, self.probe_cap = profile, probe_cap
+        self._zero_request, self._plan_seq = zero, plan_seq
+        if drift is not None:
+            self.drift_config = drift
         # recipe fingerprint of the cfg *as handed in* — a data= corpus may
         # widen the vocab below, and restore() must be able to match the
         # registry config before re-deriving that widening
@@ -171,24 +227,18 @@ class Session:
             self._source = src
         self.cfg = cfg
 
+        self.impl = _steps.resolve_impl(impl)
+
         # ---- Poplar: fully automated configuration ----
         if cluster is not None and mode != "serve":
-            from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR
-            from repro.core.planner import plan as poplar_plan
-            overlap_factor = (SCHEDULED_OVERLAP_FACTOR if overlap != "xla"
-                              else 0.0)
             tp = time.time()
-            self.plan = poplar_plan(cluster, cfg, gbs,
-                                    seq_len=plan_seq or seq,
-                                    zero_stage=zero,
-                                    overlap_factor=overlap_factor)
+            self.plan = self._run_planner(cluster, overlap)
             self.plan_seconds = time.time() - tp
             stage = self.plan.zero_stage
         else:
             stage = (0 if mode == "serve" else 3) if zero is None else zero
 
-        self.mesh = mesh if mesh is not None else make_debug_mesh(
-            jax.device_count())
+        self.mesh = mesh if mesh is not None else self._default_mesh(cluster)
         if self.plan is not None:
             self.layout = layout_from_plan(
                 self.plan.allocation, group_multiple=data_axis_size(self.mesh))
@@ -200,7 +250,6 @@ class Session:
         self.rules = MeshRules(self.mesh, zero_stage=stage, overlap=overlap,
                                comm_dtype=comm_dtype,
                                overlap_prefetch=overlap_prefetch)
-        self.impl = _steps.resolve_impl(impl)
 
         # ---- state: init, shard, wrap (axes ride in the pytree) ----
         if mode == "dryrun":
@@ -236,9 +285,72 @@ class Session:
             "adamw": asdict(self.adamw_cfg),
             "accum_steps": accum_steps, "seed": seed, "data": data,
             "overlap_prefetch": overlap_prefetch, "plan_seq": plan_seq,
+            "profile": profile, "probe_cap": probe_cap,
         }
         self.build_seconds = time.time() - t0
         return self
+
+    # ------------------------------------------------ planner substrate --
+    def _default_mesh(self, cluster):
+        """The local simulation mesh: one mesh slot per planned device,
+        bounded by what the host actually has (on a real fleet the mesh
+        spans the cluster; on this container XLA host devices stand in)."""
+        n = jax.device_count()
+        if cluster is not None:
+            n = min(cluster.n, n)
+        return make_debug_mesh(n)
+
+    def _run_planner(self, cluster, overlap: str, *,
+                     gbs: Optional[int] = None,
+                     profile: Optional[str] = None):
+        """One planner invocation honouring the session's profile mode —
+        shared by :meth:`build` and :meth:`replan` (which passes its
+        tentative overrides explicitly so nothing is committed to the
+        session until the plan exists)."""
+        from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR
+        from repro.core.planner import plan as poplar_plan
+        gbs = self.gbs if gbs is None else gbs
+        profile = self.profile if profile is None else profile
+        overlap_factor = (SCHEDULED_OVERLAP_FACTOR if overlap != "xla"
+                          else 0.0)
+        factory = None
+        probe_cap = self.probe_cap
+        if profile == "measured":
+            factory = self._measured_runner_factory(cluster)
+            probe_cap = probe_cap or MEASURED_PROBE_CAP
+        return poplar_plan(cluster, self.cfg, gbs,
+                           seq_len=self._plan_seq or self.seq,
+                           zero_stage=self._zero_request,
+                           overlap_factor=overlap_factor,
+                           runner_factory=factory,
+                           probe_cap=probe_cap)
+
+    def _measured_runner_factory(self, cluster):
+        """Per-stage MeasuredRunner constructor for ``planner.plan``'s
+        ``runner_factory`` hook: all devices of a stage share one
+        :class:`ProbeHarness` (this host is the measurement substrate —
+        the real jitted step is what gets timed), each device kind keeps
+        its own memory capacity, and ``dedupe_key`` collapses Algorithm 1
+        to one run per (spec, stage)."""
+        from repro.core.profiler import MeasuredRunner
+
+        def factory(stage: int):
+            harness = _steps.ProbeHarness(
+                self.cfg, seq_len=self._plan_seq or self.seq,
+                zero_stage=stage, n_workers=cluster.n, impl=self.impl,
+                window=self.window, lr=self.lr, adamw_cfg=self.adamw_cfg,
+                seed=self.seed)
+            runners, counts = {}, {}
+            for spec in cluster.devices:
+                counts[spec.name] = counts.get(spec.name, 0) + 1
+                name = f"{spec.name}#{counts[spec.name]}"
+                runners[name] = MeasuredRunner(
+                    step_fn=harness.step,
+                    memory_bytes_fn=harness.memory_bytes,
+                    capacity_bytes=spec.mem_gb * 1e9,
+                    dedupe_key=(spec.name, stage))
+            return runners
+        return factory
 
     def _derive_shardings(self):
         p_specs, o_specs, _ = model_shardings(self.rules, self.state.params,
@@ -301,8 +413,32 @@ class Session:
                     "accum_steps=1 — rebuild with accum_steps= or pass "
                     "unstacked (B, S) arrays")
             batch = {k: v[0] for k, v in batch.items()}
+        # observe only when there is a prediction to compare against and
+        # this step is a telemetry sample: the block makes step()
+        # synchronous (per-step latency is what the plan predicted, not
+        # dispatch time), so unplanned sessions — whose EMA could never
+        # be judged — and the steps between sparse samples
+        # (DriftConfig.sample_every) keep JAX's async dispatch
+        tick = self._observe_tick
+        self._observe_tick += 1
+        observe = (self.plan is not None and self.plan.predicted is not None
+                   and self.plan.predicted.iter_time > 0
+                   and tick % max(self.drift_config.sample_every, 1) == 0)
+        t0 = time.perf_counter() if observe else 0.0
         with self.mesh:
             self.state, metrics = self._jit_step(self.state, batch)
+        if observe:
+            jax.block_until_ready(metrics)
+            self.telemetry.record(time.perf_counter() - t0)
+            if (self._drift_baseline is None
+                    and self.telemetry.count
+                    >= self.drift_config.min_samples):
+                # calibrate as soon as the window is judgeable: these
+                # early steps ran under the plan's own conditions, so
+                # their ratio to the prediction is the substrate
+                # constant, not drift
+                self._drift_baseline = (self.telemetry.value
+                                        / self.plan.predicted.iter_time)
         return metrics
 
     def loader(self):
@@ -316,6 +452,180 @@ class Session:
                                             self.seq)
             self._loader.seek(int(self.state.step))
         return self._loader
+
+    # --------------------------------------------- observe / re-plan ----
+    def drift(self, config: Optional[DriftConfig] = None
+              ) -> Optional[DriftReport]:
+        """Compare the observed step-time EMA against the plan's
+        prediction. None while unjudgeable (unplanned session, or fewer
+        than ``min_samples`` post-warmup steps recorded).
+
+        The first judgeable observation *calibrates*: its
+        observed/predicted ratio becomes the nominal baseline (the
+        simulator's clock is not this host's clock — on the CPU
+        container they differ by orders of magnitude), so drift reports
+        how reality moved since the plan was made."""
+        predicted = busy = None
+        if self.plan is not None and self.plan.predicted is not None:
+            predicted = self.plan.predicted.iter_time
+            busy = self.plan.predicted.device_busy
+        # calibration persists on the session, so it is gated by the
+        # session's own min_samples — an ad-hoc probe config with
+        # min_samples=1 may judge however it likes but must not pin a
+        # one-noisy-step baseline for every later call
+        if (self._drift_baseline is None and predicted is not None
+                and predicted > 0 and self.telemetry.value is not None
+                and self.telemetry.count >= self.drift_config.min_samples):
+            self._drift_baseline = self.telemetry.value / predicted
+        return detect_drift(self.telemetry, predicted,
+                            config or self.drift_config, busy,
+                            baseline=self._drift_baseline or 1.0)
+
+    def maybe_replan(self, config: Optional[DriftConfig] = None,
+                     profile: str = "measured") -> Optional[ReplanReport]:
+        """Re-plan iff the drift detector says observed step time left
+        the band around the plan's prediction. The periodic check behind
+        ``launch/train.py --replan-every``.
+
+        A drift-triggered re-plan consumes *live measurements* by default
+        (``profile="measured"``) regardless of how the session was built:
+        drift is proof the timings the current plan was computed from no
+        longer describe reality, so re-running the same analytical curves
+        would reproduce the same plan and merely recalibrate the drift
+        baseline to the degraded state — adapting requires re-measuring.
+        The session's profile switches accordingly (pass
+        ``profile="analytical"`` to opt out)."""
+        report = self.drift(config)
+        if report is None or not report.drifted:
+            return None
+        return self.replan(trigger="drift", drift_report=report,
+                           profile=profile)
+
+    def replan(self, cluster=None, *, gbs: Optional[int] = None,
+               profile: Optional[str] = None, mesh=None,
+               trigger: str = "explicit",
+               drift_report: Optional[DriftReport] = None) -> ReplanReport:
+        """Re-run the planner and migrate the *live* session onto the new
+        configuration — no process restart, no parameter loss.
+
+        ``cluster=`` declares a membership change (device added/removed/
+        replaced); omitted, the current cluster is re-planned from fresh
+        measurements (``profile="measured"`` re-times the real step — the
+        paper's 'react to observed throughput' loop). The sequence is:
+
+        1. plan: profiling → spline fit → batch allocation on the (new)
+           cluster, same cfg/seq/zero request as the original build;
+        2. rebuild mesh + MeshRules + hetero batch layout from the plan;
+        3. reshard: gather the TrainState to host (full arrays are
+           mesh-independent), re-derive shardings from the logical-axis
+           tree it carries, device_put onto the new mesh, re-jit;
+        4. re-split the data stream onto the new layout at the current
+           step. Under a *deterministic* profile ("analytical") an
+           unchanged cluster reproduces the same plan, layout and
+           batches — the training trajectory is bit-identical to an
+           unperturbed run. ``profile="measured"`` re-times the real
+           step, so noisy wall clocks may legitimately re-balance the
+           allocation (that adaptivity is the point); the state itself
+           is always carried over exactly.
+
+        Returns a :class:`ReplanReport` (plan + reshard wall seconds —
+        the elastic overhead the benchmarks compare to one train step).
+        """
+        if self.mode != "train":
+            raise RuntimeError("replan() is train-mode only")
+        if profile is not None and profile not in PROFILES:
+            raise ValueError(
+                f"profile={profile!r}; expected one of {PROFILES}")
+        new_profile = profile if profile is not None else self.profile
+        new_gbs = gbs if gbs is not None else self.gbs
+        new_cluster = cluster if cluster is not None else self.cluster
+        old_devices = self.cluster.n if self.cluster is not None else (
+            int(self.mesh.devices.size))
+
+        # plan first, commit after: a planner failure (e.g. SimOOM on a
+        # shrunken cluster) must leave the live session untouched
+        tp = time.time()
+        new_plan = None
+        stage = self.rules.zero_stage
+        if new_cluster is not None:
+            new_plan = self._run_planner(new_cluster, self.rules.overlap,
+                                         gbs=new_gbs, profile=new_profile)
+            stage = new_plan.zero_stage
+        plan_seconds = time.time() - tp
+
+        tr = time.time()
+        # gather the live state to host BEFORE touching any configuration:
+        # full arrays are mesh-independent, so from here the migration can
+        # always be rolled back onto the old shardings
+        host = host_train_state(self.state)
+        rollback = (self.mesh, self.cluster, self.plan, self.layout,
+                    self.rules, self.accum_steps, self.profile, self.gbs,
+                    self._p_shardings, self._o_shardings, self._jit_step,
+                    self.state)
+        try:
+            self.profile, self.gbs = new_profile, new_gbs
+            if new_cluster is not None:
+                self.plan = new_plan
+            if mesh is not None:
+                self.mesh = mesh
+            elif cluster is not None:
+                self.mesh = self._default_mesh(new_cluster)
+            self.cluster = new_cluster
+            if self.plan is not None:
+                self.layout = layout_from_plan(
+                    self.plan.allocation,
+                    group_multiple=data_axis_size(self.mesh))
+                self.accum_steps = self.layout.gas
+            else:
+                self.layout = _uniform_layout(self.gbs, self.accum_steps,
+                                              data_axis_size(self.mesh))
+            self.rules = MeshRules(
+                self.mesh, zero_stage=stage, overlap=self.rules.overlap,
+                comm_dtype=self.rules.comm_dtype,
+                overlap_prefetch=self.rules.overlap_prefetch)
+
+            # reshard the live state: host gather -> new-mesh placement
+            self.state = host
+            self._derive_shardings()
+            with self.mesh:
+                self.state = jax.device_put(host, self._state_shardings())
+            self._jit_step = None
+            self._build_step_fns()
+            if self._loader is not None:
+                self._loader.relayout(self.layout,
+                                      seek=int(self.state.step))
+        except BaseException:
+            # half-migrated is worse than failed: restore the old
+            # configuration and re-place the gathered state on it
+            (self.mesh, self.cluster, self.plan, self.layout, self.rules,
+             self.accum_steps, self.profile, self.gbs, self._p_shardings,
+             self._o_shardings, self._jit_step, self.state) = rollback
+            with self.mesh:
+                self.state = jax.device_put(host, self._state_shardings())
+            if self._loader is not None:
+                self._loader.relayout(self.layout,
+                                      seek=int(self.state.step))
+            raise
+        reshard_seconds = time.time() - tr
+
+        self.plan_seconds = plan_seconds
+        self.telemetry.reset()
+        self._drift_baseline = None          # new plan, new calibration
+        self.replans += 1
+        self._meta.update({
+            "cluster": _cluster_meta(new_cluster), "gbs": self.gbs,
+            "zero": stage, "profile": self.profile})
+        self.last_replan = ReplanReport(
+            trigger="cluster" if cluster is not None else trigger,
+            plan_seconds=plan_seconds, reshard_seconds=reshard_seconds,
+            old_devices=old_devices,
+            new_devices=(new_cluster.n if new_cluster is not None
+                         else int(self.mesh.devices.size)),
+            zero_stage=stage,
+            profile_source=(self.plan.profile_source
+                            if self.plan is not None else "none"),
+            step=int(self.state.step), drift=drift_report)
+        return self.last_replan
 
     # serve-mode surface
     def prefill(self, batch):
@@ -375,12 +685,24 @@ class Session:
             "gbs": self.gbs, "seq": self.seq,
             "accum_steps": self.accum_steps,
             "build_seconds": round(self.build_seconds, 3),
+            "profile": self.profile,
+            "replans": self.replans,
         }
+        if self.mode == "train":
+            out["telemetry"] = {"ema_step_s": self.telemetry.value,
+                                "samples": self.telemetry.count}
+            rep = self.drift()
+            if rep is not None:
+                out["drift"] = {"ratio": round(rep.ratio, 3),
+                                "drifted": rep.drifted,
+                                "reason": rep.reason}
         if self.plan is not None:
             p = self.plan
             out["plan"] = {
                 "zero_stage": p.zero_stage,
                 "profiling_probes": p.profiling_probes,
+                "profiling_probes_saved": p.profiling_probes_saved,
+                "profile_source": p.profile_source,
                 "plan_seconds": round(self.plan_seconds, 3),
                 "assignments": {
                     n: {"gmbs": a.gmbs, "micro_batch": a.micro_batch,
@@ -438,15 +760,19 @@ class Session:
                                metadata={"session": self._meta})
 
     def load(self, path: str, step: Optional[int] = None) -> "Session":
-        """Load a checkpoint into this (already built) session."""
-        step, params, opt = restore_checkpoint(path, step, self.state.params,
-                                               self.state.opt)
+        """Load a checkpoint into this (already built) session.
+
+        The checkpoint's mesh does not have to match this session's:
+        stored arrays are full (gathered at save time), so placement onto
+        this session's shardings re-slices them for whatever mesh the
+        session was built with (cross-mesh restore)."""
         with self.mesh:
-            params = jax.device_put(params, self._p_shardings)
-            if opt is not None:
-                opt = jax.device_put(opt, self._o_shardings)
-        self.state = TrainState(params, opt, jnp.asarray(step, jnp.int32),
-                                self.state.axes)
+            step, params, opt = restore_checkpoint(
+                path, step, self.state.params, self.state.opt,
+                shardings=(self._p_shardings, self._o_shardings))
+            self.state = TrainState(params, opt,
+                                    jnp.asarray(step, jnp.int32),
+                                    self.state.axes)
         if self._loader is not None:
             self._loader.seek(int(step))
         return self
@@ -458,7 +784,14 @@ class Session:
         """Rebuild the session from the checkpoint's recorded recipe and
         load params/opt/step. ``cfg``/``cluster``/other kwargs override
         the recorded values (required when the original cfg was a custom
-        dataclass not in the registry)."""
+        dataclass not in the registry).
+
+        ``cluster=`` may name a *different* cluster than the one the
+        checkpoint recorded — cross-mesh restore: the session re-plans
+        against the new cluster (new mesh, layout and shardings; the
+        recorded ZeRO stage is kept) and the stored full arrays are
+        re-sliced onto it. An 8-device stage-3 checkpoint resumes on a
+        4-device layout with bit-identical params/opt after gather."""
         d = Path(path)
         if step is None:
             from repro.checkpoint import latest_step

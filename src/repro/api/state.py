@@ -94,3 +94,21 @@ jax.tree_util.register_pytree_with_keys(
 
 def new_train_state(params, axes, opt=None) -> TrainState:
     return TrainState(params, opt, jnp.zeros((), jnp.int32), axes)
+
+
+def host_train_state(state: TrainState) -> TrainState:
+    """Gather every leaf to host memory (numpy) — the mesh-independent
+    form used for cross-mesh resharding: a state gathered here can be
+    ``device_put`` onto any mesh's shardings, because full arrays carry no
+    trace of the layout they were sharded with. The logical-axis tree
+    rides along as aux data, so the new mesh's specs can be re-derived
+    from the result alone."""
+    import numpy as np
+
+    def gather(x):
+        return np.asarray(x)
+
+    return TrainState(jax.tree.map(gather, state.params),
+                      (jax.tree.map(gather, state.opt)
+                       if state.opt is not None else None),
+                      np.asarray(state.step), state.axes)

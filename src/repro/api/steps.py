@@ -142,6 +142,102 @@ def _train_step(cfg: ModelConfig, rules: MeshRules, axes,
 
 
 # ---------------------------------------------------------------------------
+# measured profiling substrate (Session.build(profile="measured"))
+# ---------------------------------------------------------------------------
+
+class ProbeHarness:
+    """A real jitted train step, parameterized by batch size, for
+    :class:`repro.core.profiler.MeasuredRunner`.
+
+    Algorithm 1 probes ``step(b)`` at exponentially growing ``b``; each
+    batch size is AOT-lowered once (``jax.jit(...).lower(...).compile()``)
+    on a single local device and the compiled executable is cached, so a
+    probe costs one compile + the requested executions. ``memory_bytes(b)``
+    is the OOM oracle, linear in batch (Algorithm 1's own assumption):
+    the *slope* (activation bytes per sample — a per-device quantity
+    regardless of sharding) comes from the compile-time
+    ``memory_analysis`` difference between b=1 and b=2, falling back to
+    the analytical estimate on backends that report none; the *base*
+    (model-state bytes) always comes from the stage-aware analytical
+    :class:`MemoryModel`, because the probe compiles an **unsharded**
+    single-device step — its resident params/opt would overcount a
+    ZeRO-sharded deployment by ~``n_workers``x and reject configurations
+    that actually fit.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, seq_len: int, zero_stage: int,
+                 n_workers: int = 1, impl: str = "reference",
+                 window: Optional[int] = None, lr: float = 1e-3,
+                 adamw_cfg: AdamWConfig = AdamWConfig(), seed: int = 0):
+        import numpy as np
+
+        from repro.core.workload import MemoryModel
+        from repro.launch.mesh import make_debug_mesh
+        from repro.optim.adamw import adamw_init
+
+        self.cfg, self.seq_len = cfg, seq_len
+        self._rules = MeshRules(make_debug_mesh(1), zero_stage=zero_stage)
+        self._params, self._axes = mm.init_model(jax.random.PRNGKey(seed),
+                                                 cfg)
+        self._opt = adamw_init(self._params)
+        self._fn = build_step(cfg, self._rules, self._axes, kind="train",
+                              adamw_cfg=adamw_cfg, lr=lr, window=window,
+                              impl=resolve_impl(impl))
+        self._np_rng = np.random.default_rng(seed)
+        self._compiled: Dict[int, Tuple[Callable, Dict]] = {}
+        self._analytic = MemoryModel(cfg, seq_len, zero_stage, n_workers,
+                                     cfg.remat)
+        self._mem_linear: Optional[Tuple[float, float]] = None
+        self.compiles = 0
+
+    def _batch(self, b: int) -> Dict:
+        toks = self._np_rng.integers(3, self.cfg.vocab_size,
+                                     (b, self.seq_len))
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(toks, jnp.int32),
+                "loss_mask": jnp.ones((b, self.seq_len), jnp.float32)}
+
+    def _get(self, b: int) -> Tuple[Callable, Dict]:
+        if b not in self._compiled:
+            batch = self._batch(b)
+            lowered = jax.jit(self._fn).lower(self._params, self._opt, batch)
+            self._compiled[b] = (lowered.compile(), batch)
+            self.compiles += 1
+        return self._compiled[b]
+
+    def _compiled_bytes(self, b: int) -> Optional[float]:
+        compiled, _ = self._get(b)
+        try:
+            ma = compiled.memory_analysis()
+        except Exception:  # noqa: BLE001 — backend-dependent surface
+            return None
+        if ma is None:
+            return None
+        total = 0.0
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            total += float(getattr(ma, attr, 0) or 0)
+        return total if total > 0 else None
+
+    def step(self, b: int) -> None:
+        """One full training step at batch ``b``, blocking on completion."""
+        compiled, batch = self._get(b)
+        jax.block_until_ready(compiled(self._params, self._opt, batch))
+
+    def memory_bytes(self, b: int) -> float:
+        if self._mem_linear is None:
+            base = self._analytic.bytes_at_batch(0)   # stage-sharded state
+            m1, m2 = self._compiled_bytes(1), self._compiled_bytes(2)
+            if m1 is not None and m2 is not None and m2 > m1:
+                per = m2 - m1                         # measured activations
+            else:
+                per = self._analytic.activation_bytes_per_sample()
+            self._mem_linear = (base, per)
+        base, per = self._mem_linear
+        return base + per * max(b, 0)
+
+
+# ---------------------------------------------------------------------------
 # lowering-only step assembly (the multi-pod dry-run path)
 # ---------------------------------------------------------------------------
 

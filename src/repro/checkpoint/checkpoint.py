@@ -63,6 +63,16 @@ def latest_step(path: str) -> Optional[int]:
 def restore_checkpoint(path: str, step: Optional[int], params_template,
                        opt_template=None, shardings=None
                        ) -> Tuple[int, Any, Any]:
+    """Load params/opt for ``step`` (latest when ``None``).
+
+    ``shardings`` — an optional ``(param_shardings, opt_shardings)`` pair
+    of sharding trees matching the templates — places each restored array
+    directly onto its target sharding. Checkpoints store *full* arrays
+    (``np.asarray`` gathers sharded leaves at save time), so the target
+    mesh does not have to be the mesh the checkpoint was written from:
+    restoring an 8-device stage-3 checkpoint onto a 4-device layout just
+    re-slices the gathered arrays (cross-mesh resharding on restore).
+    """
     d = Path(path)
     if step is None:
         step = latest_step(path)
@@ -72,22 +82,27 @@ def restore_checkpoint(path: str, step: Optional[int], params_template,
     meta = json.loads((d / f"ckpt_{step:08d}.json").read_text())
     dtypes = meta.get("dtypes", {})
 
-    def rebuild(template, prefix, spec_tree=None):
-        flat = _flatten_with_paths(template)
-        keys = list(flat)
-        restored = {}
-        for k in keys:
+    def rebuild(template, prefix, sharding_tree=None):
+        # leaves come back in tree_flatten order, which is also the order
+        # tree_flatten_with_path (and the sharding tree's leaves) iterate
+        with_path = jax.tree_util.tree_flatten_with_path(template)[0]
+        sh_leaves = (jax.tree_util.tree_leaves(
+            sharding_tree, is_leaf=lambda x: x is None)
+            if sharding_tree is not None else [None] * len(with_path))
+        new_leaves = []
+        for (pth, _), sh in zip(with_path, sh_leaves):
+            k = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in pth)
             arr = data[f"{prefix}/{k}"]
             if dtypes.get(f"{prefix}/{k}") == "bfloat16":
                 arr = arr.view(jnp.bfloat16.dtype)
-            restored[k] = jax.device_put(arr)
-        leaves, treedef = jax.tree_util.tree_flatten(template)
-        paths = [
-            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
-            for pth, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
-        new_leaves = [restored[p] for p in paths]
+            new_leaves.append(jax.device_put(arr, sh) if sh is not None
+                              else jax.device_put(arr))
+        _, treedef = jax.tree_util.tree_flatten(template)
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
-    new_params = rebuild(params_template, "params")
-    new_opt = rebuild(opt_template, "opt") if opt_template is not None else None
+    p_sh, o_sh = shardings if shardings is not None else (None, None)
+    new_params = rebuild(params_template, "params", p_sh)
+    new_opt = (rebuild(opt_template, "opt", o_sh)
+               if opt_template is not None else None)
     return step, new_params, new_opt

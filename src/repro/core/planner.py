@@ -12,7 +12,7 @@ from repro.core.allocation import (AllocationPlan, PerfCurve, allocate_stage01,
                                    allocate_stage23, fit_curve)
 from repro.core.cluster import ClusterSpec, DeviceSpec
 from repro.core.profiler import (AnalyticalRunner, DeviceProfile, DeviceRunner,
-                                 SimOOM, profile_cluster)
+                                 SimOOM, probes_saved, profile_cluster)
 from repro.core.simulator import SimResult, simulate_plan
 from repro.core.workload import (MemoryModel, comm_time_per_microstep,
                                  train_flops_per_token)
@@ -26,6 +26,13 @@ class PoplarPlan:
     profiles: Dict[str, DeviceProfile]
     predicted: Optional[SimResult] = None
     profiling_probes: int = 0
+    # model executions avoided by sharing one profile across identical
+    # devices (profiler.profile_cluster dedupe)
+    profiling_probes_saved: int = 0
+    # provenance of the timings the allocation search consumed:
+    # "analytical" (DeviceSpec curves), "measured" (real jitted-step wall
+    # time), or "mixed"
+    profile_source: str = "analytical"
 
 
 def make_runners(cluster: ClusterSpec, cfg: ModelConfig, seq_len: int,
@@ -48,11 +55,16 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
          zero_stage: Optional[int] = None, remat: bool = True,
          runner_factory: Optional[Callable[[int], Dict[str, DeviceRunner]]] = None,
          overlap_factor: float = 0.0,
+         probe_cap: Optional[int] = None,
          ) -> PoplarPlan:
     """Run the full Poplar pipeline.
 
     ``zero_stage=None`` enables automatic stage escalation (paper: start at
     ZeRO-0; if any device cannot fit one sample, escalate).
+
+    ``probe_cap`` bounds Algorithm 1's exponential probing (measured
+    runners pay a real jit compile per probed batch size; analytical
+    runners are free and default to the uncapped search).
 
     ``overlap_factor`` feeds the scheduled-ZeRO overlap term into the
     batch-allocation sweep and the simulator replay (0 = the serial
@@ -69,7 +81,8 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
         stage_overlap = overlap_factor if stage == 3 else 0.0
         runners = (runner_factory(stage) if runner_factory
                    else make_runners(cluster, cfg, seq_len, stage, remat))
-        profiles = profile_cluster(runners, stage)
+        profiles = profile_cluster(runners, stage,
+                                   max_probe_cap=probe_cap or (1 << 16))
         if any(p.mbs < 1 for p in profiles.values()):
             last_err = SimOOM(f"stage {stage}: some device cannot fit batch 1")
             continue
@@ -85,6 +98,10 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
         fps = train_flops_per_token(cfg, seq_len) * seq_len
         predicted = simulate_plan(alloc, curves, cfg, seq_len, cluster, fps,
                                   overlap_factor=stage_overlap)
+        sources = {p.source for p in profiles.values()}
         return PoplarPlan(stage, alloc, curves, profiles, predicted,
-                          profiling_probes=sum(p.probes for p in profiles.values()))
+                          profiling_probes=sum(p.probes for p in profiles.values()),
+                          profiling_probes_saved=probes_saved(profiles),
+                          profile_source=(sources.pop() if len(sources) == 1
+                                          else "mixed"))
     raise last_err or SimOOM("no feasible stage")

@@ -22,7 +22,8 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
@@ -66,6 +67,14 @@ class DeviceRunner(Protocol):
     def memory_capacity_bytes(self) -> float: ...
     def run_step(self, batch: int) -> StepSegments: ...
 
+    # provenance tag recorded on the resulting DeviceProfile ("analytical"
+    # or "measured") — how the planner proves where its timings came from
+    source: str
+    # hashable identity of the (device kind, workload) this runner measures;
+    # `profile_cluster` profiles one representative per key and shares the
+    # result across identical devices. None = never share.
+    dedupe_key: Optional[Tuple]
+
 
 @dataclass
 class AnalyticalRunner:
@@ -76,10 +85,21 @@ class AnalyticalRunner:
     zero_stage: int = 0
     seed: int = 0
     noise: float = 0.0               # relative timing jitter
+    source: str = field(default="analytical", init=False, repr=False)
     _rng: np.random.Generator = field(init=False, repr=False)
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed + hash(self.spec.name) % 1000)
+        # stable per-spec seed: crc32 is process-independent, unlike
+        # hash(str) which varies with PYTHONHASHSEED — noisy profiles must
+        # reproduce across processes
+        self._rng = np.random.default_rng(
+            self.seed + zlib.crc32(self.spec.name.encode()) % 1000)
+
+    @property
+    def dedupe_key(self) -> Tuple:
+        # identical (spec, stage, seed, noise) devices draw identical noise
+        # (the rng is seeded from the spec name), so one profile serves all
+        return (self.spec.name, self.zero_stage, self.seed, self.noise)
 
     def memory_capacity_bytes(self) -> float:
         return self.spec.mem_gb * 1e9
@@ -119,6 +139,10 @@ class MeasuredRunner:
     capacity_bytes: float
     warmup: int = 1
     repeats: int = 2
+    # measured runners over a shared step harness are identical per device
+    # kind: give them the same dedupe_key so profiling runs once per kind
+    dedupe_key: Optional[Tuple] = None
+    source: str = field(default="measured", init=False, repr=False)
 
     def memory_capacity_bytes(self) -> float:
         return self.capacity_bytes
@@ -150,6 +174,8 @@ class DeviceProfile:
     mbs: int                          # exact max OOM-free batch size
     points: Dict[int, float]          # batch -> TimeConsumedDuringStep (s)
     probes: int = 0                   # number of model executions (overhead)
+    source: str = "analytical"        # provenance: which runner timed this
+    shared_from: Optional[str] = None  # representative device, if deduped
 
     def speed_points(self) -> Tuple[np.ndarray, np.ndarray]:
         bs = np.array(sorted(self.points), dtype=np.float64)
@@ -162,6 +188,7 @@ def profile_device(runner: DeviceRunner, name: str, zero_stage: int,
     """Algorithm 1, both loops: linear estimate -> exponential -> binary."""
     points: Dict[int, float] = {}
     probes = 0
+    source = getattr(runner, "source", "analytical")
 
     def try_step(b: int) -> Optional[float]:
         nonlocal probes
@@ -177,7 +204,7 @@ def profile_device(runner: DeviceRunner, name: str, zero_stage: int,
     # ---- phase 1: linear estimate from a single batch ----
     if try_step(1) is None:
         # cannot even run one sample at this stage (caller escalates stage)
-        return DeviceProfile(name, 0, {}, probes)
+        return DeviceProfile(name, 0, {}, probes, source)
     base = runner.memory_bytes_at(0)
     one = runner.memory_bytes_at(1)
     cap = runner.memory_capacity_bytes()
@@ -206,15 +233,41 @@ def profile_device(runner: DeviceRunner, name: str, zero_stage: int,
         else:
             low = mid
     mbs = low
-    return DeviceProfile(name, mbs, points, probes)
+    return DeviceProfile(name, mbs, points, probes, source)
 
 
-def profile_cluster(runners: Dict[str, DeviceRunner], zero_stage: int
+def profile_cluster(runners: Dict[str, DeviceRunner], zero_stage: int,
+                    max_probe_cap: int = 1 << 16, dedupe: bool = True
                     ) -> Dict[str, DeviceProfile]:
     """Profile every device (the paper runs them in parallel; order is
-    irrelevant to the result)."""
-    return {name: profile_device(r, name, zero_stage)
-            for name, r in runners.items()}
+    irrelevant to the result).
+
+    ``dedupe`` profiles one *representative* per ``runner.dedupe_key`` and
+    shares its curve with the other devices of the same kind — N identical
+    devices cost one Algorithm-1 run, not N. Shared copies carry
+    ``probes=0`` and ``shared_from=<representative>``, so summing
+    ``probes`` over the profiles still counts real model executions and
+    :func:`probes_saved` reports what deduplication avoided.
+    """
+    profiles: Dict[str, DeviceProfile] = {}
+    reps: Dict[Tuple, str] = {}
+    for name, r in runners.items():
+        key = getattr(r, "dedupe_key", None) if dedupe else None
+        if key is not None and key in reps:
+            rep = profiles[reps[key]]
+            profiles[name] = replace(rep, name=name, probes=0,
+                                     shared_from=rep.name)
+            continue
+        profiles[name] = profile_device(r, name, zero_stage, max_probe_cap)
+        if key is not None:
+            reps[key] = name
+    return profiles
+
+
+def probes_saved(profiles: Dict[str, DeviceProfile]) -> int:
+    """Model executions deduplication avoided (vs profiling every device)."""
+    return sum(profiles[p.shared_from].probes
+               for p in profiles.values() if p.shared_from)
 
 
 def auto_stage(runners: Dict[str, DeviceRunner], start_stage: int = 0,

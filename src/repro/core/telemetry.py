@@ -1,0 +1,155 @@
+"""Step-time telemetry and drift detection — the *observe* leg of the
+elastic Session lifecycle (plan → execute → observe → re-plan).
+
+A plan is a prediction: the batch allocation came from profiled (or
+analytical) per-device curves, and ``PoplarPlan.predicted.iter_time`` is
+what the simulator expects one iteration to cost. The runtime records
+what iterations *actually* cost into an :class:`EMAWindow`;
+:func:`detect_drift` compares the smoothed observation against the
+prediction and flags when the cluster has drifted far enough from the
+plan that re-running the allocation search is worth its overhead (Zorse
+/ Nie et al.: adapting allocation to observed throughput is where
+heterogeneous clusters recover 20-40%).
+
+The detector is deliberately mechanism-only: *when* to act on a
+``DriftReport`` belongs to the caller (``Session.maybe_replan`` /
+``launch/train.py --replan-every``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass
+class EMAWindow:
+    """Exponential moving average of per-step wall time.
+
+    The first ``warmup`` samples are discarded — they time jit
+    compilation, not the steady-state step the plan predicted.
+    """
+    alpha: float = 0.3
+    warmup: int = 1
+    value: Optional[float] = None
+    count: int = 0                    # samples folded into the EMA
+    skipped: int = 0                  # warmup samples discarded
+    last: Optional[float] = None
+
+    def record(self, dt: float) -> None:
+        if self.skipped < self.warmup:
+            self.skipped += 1
+            return
+        self.last = float(dt)
+        self.value = (self.last if self.value is None
+                      else self.alpha * self.last
+                      + (1.0 - self.alpha) * self.value)
+        self.count += 1
+
+    def reset(self) -> None:
+        self.value, self.last = None, None
+        self.count, self.skipped = 0, 0
+
+
+@dataclass
+class DriftConfig:
+    """When does observed reality contradict the plan?
+
+    ``threshold``: relative deviation of the observed EMA step time from
+    the predicted iteration time beyond which drift is declared (0.5 =
+    steps running >1.5x slower or <1/1.5x faster than planned).
+    ``min_samples``: EMA samples required before judging — one noisy step
+    must not trigger a re-plan.
+    ``sample_every``: observe every k-th step only. Timing a step forces
+    a host-device sync (``block_until_ready``), which forfeits JAX async
+    dispatch for that step — on real accelerators, sample sparsely
+    (e.g. 10) so the hot path keeps overlapping host work with device
+    compute; drift moves slowly enough that sparse samples suffice.
+    """
+    threshold: float = 0.5
+    min_samples: int = 3
+    sample_every: int = 1
+
+
+@dataclass
+class DriftReport:
+    observed_s: float                 # EMA of measured step wall time
+    predicted_s: float                # plan.predicted.iter_time
+    ratio: float                      # (observed / predicted) / baseline
+    drifted: bool
+    reason: str
+    # substrate calibration in effect: the observed/predicted ratio taken
+    # as nominal right after planning (see detect_drift)
+    baseline: float = 1.0
+    # predicted per-device compute imbalance of the *current* plan
+    # (max busy / min busy over active devices) — context for deciding
+    # whether a re-plan can plausibly rebalance anything
+    predicted_imbalance: float = 1.0
+
+
+def predicted_imbalance(device_busy: Dict[str, float]) -> float:
+    """max/min predicted busy seconds over active devices (1.0 = balanced)."""
+    busy = [t for t in device_busy.values() if t > 0]
+    if len(busy) < 2:
+        return 1.0
+    return max(busy) / max(min(busy), 1e-12)
+
+
+def detect_drift(window: EMAWindow, predicted_s: Optional[float],
+                 config: DriftConfig = DriftConfig(),
+                 device_busy: Optional[Dict[str, float]] = None,
+                 baseline: float = 1.0) -> Optional[DriftReport]:
+    """Compare the observed step-time EMA against the plan's prediction.
+
+    Returns ``None`` while there is nothing to judge (no prediction — the
+    session was built unplanned — or fewer than ``min_samples`` post-
+    warmup observations); otherwise a :class:`DriftReport` whose
+    ``drifted`` flag says whether observed wall time left the
+    ``[1/(1+threshold), 1+threshold]`` band around the prediction.
+
+    ``baseline`` is the substrate calibration: the simulator predicts
+    *cluster* iteration time while the EMA measures *this host's* wall
+    clock, and the two differ by a structural constant (on the CPU
+    container, by orders of magnitude). The caller records the
+    observed/predicted ratio right after planning as nominal and passes
+    it here, so drift means "reality changed since the plan was made",
+    not "the simulator's clock is not this host's clock". 1.0 = trust
+    the prediction absolutely.
+    """
+    if predicted_s is None or predicted_s <= 0:
+        return None
+    if window.value is None or window.count < config.min_samples:
+        return None
+    ratio = window.value / predicted_s / max(baseline, 1e-12)
+    hi = 1.0 + config.threshold
+    lo = 1.0 / hi
+    drifted = ratio > hi or ratio < lo
+    if ratio > hi:
+        reason = (f"steps {ratio:.2f}x slower than planned "
+                  f"(>{hi:.2f}x band)")
+    elif ratio < lo:
+        reason = (f"steps {ratio:.2f}x of planned time "
+                  f"(<{lo:.2f}x band) — plan underuses the cluster")
+    else:
+        reason = f"within band ({ratio:.2f}x of prediction)"
+    return DriftReport(
+        observed_s=window.value, predicted_s=predicted_s, ratio=ratio,
+        drifted=drifted, reason=reason, baseline=baseline,
+        predicted_imbalance=predicted_imbalance(device_busy or {}))
+
+
+@dataclass
+class ReplanReport:
+    """What one ``Session.replan()`` did, and what it cost."""
+    trigger: str                      # "explicit" | "drift" | "cluster"
+    plan_seconds: float               # planner (re-profile + search) time
+    reshard_seconds: float            # state gather + re-place + re-jit
+    old_devices: int
+    new_devices: int
+    zero_stage: int
+    profile_source: str
+    step: int                         # training step at which replan ran
+    drift: Optional[DriftReport] = None
+
+    @property
+    def total_seconds(self) -> float:
+        return self.plan_seconds + self.reshard_seconds

@@ -107,6 +107,17 @@ class HeteroDataLoader:
         (checkpoint resume: epoch == the restored step count)."""
         self._epoch = int(epoch)
 
+    def relayout(self, layout: HeteroBatchLayout,
+                 seek: Optional[int] = None) -> None:
+        """Re-split the stream onto a new batch layout (elastic re-plan:
+        the allocation changed, the data source and stream position did
+        not). Subsequent batches pack rows into the new layout; ``seek``
+        optionally repositions at the same time (pass the current training
+        step so an unchanged layout replays the exact same batches)."""
+        self.layout = layout
+        if seek is not None:
+            self.seek(seek)
+
     def next_batch(self) -> Dict[str, np.ndarray]:
         n = self.layout.total_real()
         rows = self.source.rows(n, self._epoch)

@@ -49,6 +49,18 @@ def main(argv=None):
     ap.add_argument("--plan-seq", type=int, default=None,
                     help="sequence length for planning only (default: --seq)")
     ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--profile", default="analytical",
+                    choices=["analytical", "measured"],
+                    help="planner timing source: 'analytical' simulates "
+                         "the cluster's DeviceSpec curves, 'measured' "
+                         "times the real jitted step per device kind "
+                         "(Algorithm 1 over a ProbeHarness) so the batch "
+                         "allocation runs on observed wall time")
+    ap.add_argument("--replan-every", type=int, default=0, metavar="N",
+                    help="every N steps, compare observed step time "
+                         "against the plan's prediction and re-plan + "
+                         "reshard in place when drift is detected "
+                         "(0 = never; see Session.maybe_replan)")
     ap.add_argument("--zero", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--impl", default="auto",
@@ -86,7 +98,7 @@ def main(argv=None):
     build_kw = dict(gbs=args.gbs, seq=args.seq, zero=args.zero,
                     impl=args.impl, overlap=args.overlap,
                     comm_dtype=args.comm_dtype, lr=args.lr, data=args.data,
-                    plan_seq=args.plan_seq)
+                    plan_seq=args.plan_seq, profile=args.profile)
     if args.resume:
         # crash recovery must resume the *recorded* recipe: only flags the
         # user actually typed on this invocation override it — passing
@@ -110,6 +122,8 @@ def main(argv=None):
     if plan is not None:
         print(f"[poplar] stage={plan['zero_stage']} "
               f"probes={plan['profiling_probes']} "
+              f"(+{plan['profiling_probes_saved']} deduped) "
+              f"source={plan['profile_source']} "
               f"predicted {plan['predicted']['cluster_tflops']:.1f} TFLOPs "
               f"util={plan['predicted']['utilization']:.3f} "
               f"({plan['plan_seconds']:.2f}s planning, "
@@ -135,6 +149,18 @@ def main(argv=None):
             print(f"step {step:4d} loss={float(met['loss']):.4f} "
                   f"gnorm={float(met['grad_norm']):.3f} "
                   f"tokens={tokens_seen}")
+        if args.replan_every and step and step % args.replan_every == 0:
+            rep = sess.maybe_replan()
+            if rep is not None:
+                print(f"[replan] step {step}: {rep.drift.reason} -> "
+                      f"re-planned ({rep.plan_seconds:.2f}s plan + "
+                      f"{rep.reshard_seconds:.2f}s reshard, "
+                      f"stage={rep.zero_stage}, "
+                      f"source={rep.profile_source})")
+            else:
+                d = sess.drift()
+                if d is not None:
+                    print(f"[drift] step {step}: {d.reason}")
     dt = time.time() - t_start
     steps_run = max(args.steps - start, 1)
     print(f"[done] {steps_run} steps, {tokens_seen} tokens, "

@@ -1,0 +1,491 @@
+"""Elastic Session runtime: measured profiling feeding the planner,
+step-time telemetry + drift detection, live re-planning with cross-mesh
+state resharding, and checkpoint restore onto a different cluster than
+the one that wrote it.
+
+The 8-device acceptance paths (measured-profile provenance on the 8-dev
+CPU mesh, drop-two-devices replan, 8-dev stage-3 checkpoint -> 4-dev
+restore with bit-identical params/opt) run in a subprocess with
+placeholder XLA host devices; everything else runs in-process on the
+real single device.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import DriftConfig, EMAWindow, ProbeHarness, Session
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+from repro.core.telemetry import detect_drift
+from repro.launch.mesh import make_debug_mesh
+
+
+# ----------------------------------------------------------- telemetry --
+
+def test_ema_window_discards_warmup_then_smooths():
+    w = EMAWindow(alpha=0.5, warmup=2)
+    w.record(100.0)                       # compile step: discarded
+    w.record(90.0)                        # discarded
+    assert w.value is None and w.skipped == 2
+    w.record(1.0)
+    assert w.value == 1.0 and w.count == 1
+    w.record(3.0)
+    assert w.value == pytest.approx(2.0)  # 0.5*3 + 0.5*1
+    w.reset()
+    assert w.value is None and w.count == 0 and w.skipped == 0
+
+
+def test_drift_detector_bands():
+    w = EMAWindow(warmup=0)
+    for _ in range(3):
+        w.record(1.0)
+    cfg = DriftConfig(threshold=0.5, min_samples=3)
+    # in band
+    rep = detect_drift(w, 0.8, cfg)
+    assert rep is not None and not rep.drifted
+    # too slow
+    rep = detect_drift(w, 0.5, cfg)
+    assert rep.drifted and rep.ratio == pytest.approx(2.0)
+    assert "slower" in rep.reason
+    # too fast (plan underuses the cluster)
+    rep = detect_drift(w, 4.0, cfg)
+    assert rep.drifted and rep.ratio == pytest.approx(0.25)
+    # imbalance context from the plan's predicted busy times
+    rep = detect_drift(w, 1.0, cfg, {"a": 1.0, "b": 2.0})
+    assert rep.predicted_imbalance == pytest.approx(2.0)
+    # substrate calibration: a 100x structural observed/predicted constant
+    # is nominal, not drift; a further 2x slowdown on top of it is
+    rep = detect_drift(w, 0.01, cfg, baseline=100.0)
+    assert not rep.drifted and rep.ratio == pytest.approx(1.0)
+    rep = detect_drift(w, 0.01, cfg, baseline=50.0)
+    assert rep.drifted and rep.ratio == pytest.approx(2.0)
+
+
+def test_drift_detector_withholds_judgement():
+    w = EMAWindow(warmup=0)
+    cfg = DriftConfig(min_samples=3)
+    assert detect_drift(w, 1.0, cfg) is None          # no samples
+    w.record(5.0)
+    assert detect_drift(w, 1.0, cfg) is None          # too few samples
+    w.record(5.0)
+    w.record(5.0)
+    assert detect_drift(w, None, cfg) is None         # unplanned session
+    assert detect_drift(w, 1.0, cfg).drifted
+
+
+# ---------------------------------------- profiler satellites (no jax) --
+
+def _analytical_runner(dev="V100-16G", stage=0, n=4, noise=0.0):
+    from repro.core.cluster import CATALOG
+    from repro.core.profiler import AnalyticalRunner
+    from repro.core.workload import MemoryModel, train_flops_per_token
+
+    cfg = get_config("llama-0.5b")
+    fps = train_flops_per_token(cfg, 4096) * 4096
+    return AnalyticalRunner(CATALOG[dev], MemoryModel(cfg, 4096, stage, n),
+                            fps, stage, noise=noise)
+
+
+def test_noisy_profiles_reproduce_across_processes():
+    """Satellite: the noise rng must be seeded from a *stable* hash of the
+    spec name (zlib.crc32), not hash(str) which varies with
+    PYTHONHASHSEED — a re-plan in a fresh process must reproduce the same
+    noisy profile."""
+    r = _analytical_runner(noise=0.05)
+    times = [r.compute_time(b) for b in (1, 2, 4)]
+    # fresh runner instance: same draw sequence (rng reseeds per instance)
+    r2 = _analytical_runner(noise=0.05)
+    assert [r2.compute_time(b) for b in (1, 2, 4)] == times
+
+    script = (
+        "from repro.configs import get_config\n"
+        "from repro.core.cluster import CATALOG\n"
+        "from repro.core.profiler import AnalyticalRunner\n"
+        "from repro.core.workload import MemoryModel, train_flops_per_token\n"
+        "cfg = get_config('llama-0.5b')\n"
+        "r = AnalyticalRunner(CATALOG['V100-16G'], "
+        "MemoryModel(cfg, 4096, 0, 4), "
+        "train_flops_per_token(cfg, 4096) * 4096, 0, noise=0.05)\n"
+        "print(repr([r.compute_time(b) for b in (1, 2, 4)]))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONHASHSEED"] = "12345"     # a different str-hash universe
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert eval(out.stdout.strip()) == times
+
+
+def test_profile_cluster_dedupes_identical_devices():
+    """Satellite: N identical devices run Algorithm 1 once, share the
+    profile, and the saved probes are reported."""
+    from repro.core.profiler import probes_saved, profile_cluster
+
+    runners = {f"V100-16G#{i}": _analytical_runner() for i in range(1, 5)}
+    profs = profile_cluster(runners, 0)
+    reps = [p for p in profs.values() if p.shared_from is None]
+    shared = [p for p in profs.values() if p.shared_from is not None]
+    assert len(reps) == 1 and len(shared) == 3
+    rep = reps[0]
+    for p in shared:
+        assert p.shared_from == rep.name
+        assert p.probes == 0                      # no re-execution
+        assert p.points == rep.points and p.mbs == rep.mbs
+    assert probes_saved(profs) == 3 * rep.probes
+    # opting out reproduces the undeduped cost
+    full = profile_cluster(runners, 0, dedupe=False)
+    assert sum(p.probes for p in full.values()) == 4 * rep.probes
+    assert probes_saved(full) == 0
+
+
+def test_plan_reports_dedupe_savings():
+    from repro.core.planner import plan
+
+    c = make_cluster("t", [("V100-16G", 2), ("T4-16G", 2)], 12.0)
+    p = plan(c, get_config("llama-0.5b"), gbs=64, seq_len=4096,
+             zero_stage=0)
+    # 2 kinds profiled, 2 duplicates shared
+    assert p.profiling_probes_saved > 0
+    assert p.profiling_probes_saved == sum(
+        prof.probes for prof in p.profiles.values()
+        if prof.shared_from is None)
+    assert p.profile_source == "analytical"
+    assert all(pr.source == "analytical" for pr in p.profiles.values())
+
+
+# -------------------------------------------------- measured profiling --
+
+def test_probe_harness_times_real_steps_and_models_memory():
+    cfg = get_config("llama-0.5b", reduced=True)
+    h = ProbeHarness(cfg, seq_len=8, zero_stage=0)
+    h.step(1)                                  # must execute, not raise
+    h.step(2)
+    assert h.compiles == 2
+    h.step(2)                                  # cached: no new compile
+    assert h.compiles == 2
+    m0, m1, m4 = h.memory_bytes(0), h.memory_bytes(1), h.memory_bytes(4)
+    assert m0 < m1 < m4                        # linear in batch
+    assert m4 - m1 == pytest.approx(3 * (m1 - m0), rel=1e-6)
+
+
+def test_measured_profile_feeds_allocation():
+    """Session.build(profile='measured'): the plan's timings must come
+    from MeasuredRunner wall time (provenance), dedupe must collapse
+    Algorithm 1 to one run per device kind, and the allocation must
+    still account for every sample."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    cluster = make_cluster("m", [("T4-16G", 2)], 12.0)
+    sess = Session.build(cfg, cluster, gbs=4, seq=8, zero=0,
+                         impl="reference", profile="measured", probe_cap=2)
+    assert sess.plan.profile_source == "measured"
+    assert all(p.source == "measured" for p in sess.plan.profiles.values())
+    assert sess.plan.profiling_probes_saved > 0        # 2nd T4 shared
+    assert sess.plan.allocation.total_batch == 4
+    assert sess.describe()["plan"]["profile_source"] == "measured"
+    m = sess.step()
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_probe_harness_memory_base_is_stage_sharded():
+    """The OOM oracle's model-state base must honour the ZeRO stage: the
+    probe compiles an unsharded 1-device step, so taking its resident
+    bytes verbatim would overcount a stage>=1 deployment ~n_workers-fold
+    and reject configurations that actually fit. Only the per-sample
+    slope is measured; the base comes from the stage-aware MemoryModel."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    h0 = ProbeHarness(cfg, seq_len=8, zero_stage=0, n_workers=8)
+    h3 = ProbeHarness(cfg, seq_len=8, zero_stage=3, n_workers=8)
+    base0, base3 = h0.memory_bytes(0), h3.memory_bytes(0)
+    assert base3 < base0                       # 16P replicated vs ~16P/8
+    from repro.core.workload import MemoryModel
+    assert base3 == pytest.approx(
+        MemoryModel(cfg, 8, 3, 8, cfg.remat).bytes_at_batch(0))
+
+
+def test_build_rejects_unknown_profile():
+    cfg = get_config("llama-0.5b", reduced=True)
+    with pytest.raises(ValueError, match="profile"):
+        Session.build(cfg, None, profile="psychic", mesh=make_debug_mesh(1))
+
+
+# ------------------------------------------------------------- replan --
+
+def test_replan_unchanged_cluster_preserves_trajectory():
+    """replan() on an unchanged cluster must be a no-op for training
+    semantics: same plan, same layout, same batches, bit-identical loss
+    sequence vs an unperturbed control run."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    kw = dict(gbs=8, seq=16, zero=1, impl="reference", lr=1e-3)
+
+    control = Session.build(cfg, make_cluster("t", [("V100-16G", 2),
+                                                    ("T4-16G", 2)], 12.0),
+                            **kw)
+    losses_control = [float(control.step()["loss"]) for _ in range(6)]
+
+    elastic = Session.build(cfg, make_cluster("t", [("V100-16G", 2),
+                                                    ("T4-16G", 2)], 12.0),
+                            **kw)
+    losses = [float(elastic.step()["loss"]) for _ in range(3)]
+    rep = elastic.replan()
+    assert rep.trigger == "explicit" and rep.new_devices == 4
+    assert rep.plan_seconds >= 0 and rep.reshard_seconds > 0
+    assert elastic.replans == 1
+    losses += [float(elastic.step()["loss"]) for _ in range(3)]
+    assert losses == losses_control
+
+
+def test_replan_cluster_membership_change():
+    """Dropping devices re-plans the allocation over the survivors and
+    reshards the live state — training continues finite, same params."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("V100-16G", 2),
+                                                 ("T4-16G", 2)], 12.0),
+                         gbs=8, seq=16, zero=1, impl="reference")
+    for _ in range(2):
+        sess.step()
+    before = jax.tree.map(np.asarray, sess.state.params)
+    rep = sess.replan(cluster=make_cluster("t2", [("V100-16G", 2)], 12.0))
+    assert rep.trigger == "cluster"
+    assert rep.old_devices == 4 and rep.new_devices == 2
+    assert sess.cluster.n == 2
+    assert len(sess.layout.group_names) == 2
+    assert sum(a.gmbs for a in sess.plan.allocation.assignments.values()) == 8
+    # the reshard moved, not mutated, the state
+    for a, b in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(sess.state.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    assert int(sess.state.step) == 2
+    assert np.isfinite(float(sess.step()["loss"]))
+
+
+def test_maybe_replan_fires_only_on_drift():
+    cfg = get_config("llama-0.5b", reduced=True)
+    # probe_cap bounds the measured re-profiling a drift-triggered
+    # replan performs (each probed batch size is one jit compile)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, zero=0, impl="reference",
+                         probe_cap=2)
+    for _ in range(5):
+        sess.step()
+    # step() calibrated the substrate constant (simulated V100 clock vs
+    # this host's wall clock) as soon as the window was judgeable
+    assert sess._drift_baseline is not None
+    # deterministic re-calibration: constant synthetic step times make
+    # the EMA (and hence the baseline ratio) exact, so steady state is
+    # NOT drift under the default band regardless of host noise...
+    sess.telemetry.reset()
+    sess._drift_baseline = None
+    for _ in range(4):                         # 1 warmup + min_samples
+        sess.telemetry.record(0.123)
+    rep = sess.drift()                         # calibrates, then judges
+    assert rep is not None and not rep.drifted
+    assert rep.ratio == pytest.approx(1.0)
+    assert sess.maybe_replan() is None
+    assert sess.replans == 0
+    # ...but a genuine slowdown relative to that baseline is: simulate
+    # steps suddenly taking 10x the calibrated time
+    for _ in range(4):
+        sess.telemetry.record(1.23)
+    rep = sess.maybe_replan()
+    assert rep is not None and rep.trigger == "drift"
+    assert rep.drift is not None and rep.drift.drifted
+    assert "slower" in rep.drift.reason
+    assert sess.replans == 1
+    assert sess.telemetry.count == 0           # window reset after replan
+    assert sess._drift_baseline is None        # new plan recalibrates
+    # drift means the old timings mispredicted: the re-plan consumed live
+    # measurements, not the analytical curves that just failed
+    assert rep.profile_source == "measured"
+    assert sess.profile == "measured"
+
+
+def test_replan_failure_leaves_session_untouched(monkeypatch):
+    """A planner failure mid-replan (e.g. SimOOM on a shrunken cluster)
+    must not half-update the session: gbs/profile/plan/layout keep their
+    pre-call values and training continues on the old configuration."""
+    from repro.core.profiler import SimOOM
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, zero=0, impl="reference")
+    sess.step()
+    old_plan, old_layout = sess.plan, sess.layout
+
+    def boom(*a, **k):
+        raise SimOOM("no feasible stage")
+
+    monkeypatch.setattr(sess, "_run_planner", boom)
+    with pytest.raises(SimOOM):
+        sess.replan(cluster=make_cluster("t1", [("T4-16G", 1)], 12.0),
+                    gbs=32, profile="measured")
+    assert sess.gbs == 4 and sess.profile == "analytical"
+    assert sess.plan is old_plan and sess.layout is old_layout
+    assert sess.cluster.n == 2 and sess.replans == 0
+    assert np.isfinite(float(sess.step()["loss"]))   # still trains
+
+
+def test_telemetry_sample_every_keeps_async_steps():
+    """DriftConfig(sample_every=k): only every k-th step pays the
+    telemetry sync; the rest keep JAX async dispatch."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, zero=0, impl="reference",
+                         drift=DriftConfig(sample_every=3))
+    for _ in range(6):
+        sess.step()
+    # steps 0 and 3 observed: one warmup-discarded, one in the EMA
+    assert sess.telemetry.skipped + sess.telemetry.count == 2
+
+
+def test_replan_commit_failure_rolls_back(monkeypatch):
+    """A failure *after* planning (re-jit, device_put, ...) must roll the
+    session back onto the old mesh/rules/layout with the state re-placed
+    on the old shardings — half-migrated is worse than failed."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, zero=0, impl="reference")
+    sess.step()
+    old_mesh, old_rules, old_layout = sess.mesh, sess.rules, sess.layout
+    before = jax.tree.map(np.asarray, sess.state.params)
+
+    def boom():
+        raise RuntimeError("jit exploded")
+
+    monkeypatch.setattr(sess, "_build_step_fns", boom)
+    with pytest.raises(RuntimeError, match="jit exploded"):
+        sess.replan(cluster=make_cluster("t1", [("T4-16G", 1)], 12.0))
+    assert sess.mesh is old_mesh and sess.rules is old_rules
+    assert sess.layout is old_layout and sess.cluster.n == 2
+    assert sess.replans == 0
+    for a, b in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(sess.state.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    # the old jitted step still drives the old configuration
+    assert np.isfinite(float(sess.step()["loss"]))
+
+
+def test_adhoc_drift_probe_does_not_poison_calibration():
+    """drift(config=) with a permissive ad-hoc config may judge however
+    it likes, but the *persistent* baseline only calibrates once the
+    session's own min_samples is met — one noisy probe must not pin the
+    substrate constant for every later maybe_replan()."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, zero=0, impl="reference")
+    sess.telemetry.reset()
+    sess._drift_baseline = None
+    for _ in range(2):                         # 1 warmup + 1 sample
+        sess.telemetry.record(0.5)
+    rep = sess.drift(DriftConfig(min_samples=1))
+    assert rep is not None                     # the probe judged...
+    assert sess._drift_baseline is None        # ...but did not calibrate
+    for _ in range(2):                         # reach the session's gate
+        sess.telemetry.record(0.5)
+    sess.drift()
+    assert sess._drift_baseline is not None
+
+
+def test_replan_is_train_mode_only():
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, mode="serve", impl="reference")
+    with pytest.raises(RuntimeError, match="train"):
+        sess.replan()
+
+
+# ------------------------------------------- 8-device elastic (slow) ----
+
+SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from dataclasses import replace
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.api import Session
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+
+cfg = get_config("llama-0.5b", reduced=True)
+cfg = replace(cfg, dtype="float32", param_dtype="float32")
+C8 = lambda: make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+C6 = lambda: make_cluster("c6", [("V100-16G", 4), ("T4-16G", 2)], 12.0)
+C4 = lambda: make_cluster("c4", [("V100-16G", 2), ("T4-16G", 2)], 12.0)
+
+# ---- acceptance: measured-profile plan on the 8-dev mesh ----
+sess = Session.build(cfg, C8(), gbs=16, seq=16, zero=3, impl="reference",
+                     profile="measured", probe_cap=2, lr=1e-3)
+assert sess.mesh.devices.size == 8, sess.mesh
+assert sess.plan.profile_source == "measured"
+assert all(p.source == "measured" for p in sess.plan.profiles.values())
+assert sess.plan.profiling_probes_saved > 0
+assert sess.plan.allocation.total_batch == 16
+m = sess.step()
+assert np.isfinite(float(m["loss"]))
+print("ELASTIC_MEASURED_OK")
+
+# ---- acceptance: unchanged-cluster replan preserves the trajectory ----
+kw = dict(gbs=16, seq=16, zero=3, impl="reference", lr=1e-3)
+control = Session.build(cfg, C8(), **kw)
+ctl = [float(control.step()["loss"]) for _ in range(6)]
+elastic = Session.build(cfg, C8(), **kw)
+obs = [float(elastic.step()["loss"]) for _ in range(3)]
+rep = elastic.replan()
+obs += [float(elastic.step()["loss"]) for _ in range(3)]
+assert obs == ctl, (obs, ctl)
+print("ELASTIC_TRAJECTORY_OK")
+
+# ---- drop two devices mid-run: replan succeeds, loss stays finite ----
+rep = elastic.replan(cluster=C6())
+assert rep.old_devices == 8 and rep.new_devices == 6
+assert elastic.mesh.devices.size == 6, elastic.mesh
+assert sum(a.gmbs for a in
+           elastic.plan.allocation.assignments.values()) == 16
+tail = [float(elastic.step()["loss"]) for _ in range(3)]
+assert all(np.isfinite(l) for l in tail), tail
+assert int(elastic.state.step) == 9
+print("ELASTIC_DROP2_OK")
+
+# ---- acceptance: 8-dev stage-3 checkpoint -> 4-dev cross-mesh restore --
+import tempfile
+ckpt = tempfile.mkdtemp()
+donor = Session.build(cfg, C8(), **kw)
+for _ in range(2):
+    donor.step()
+donor.save(ckpt)
+want_p = jax.tree.map(np.asarray, donor.state.params)
+want_o = jax.tree.map(np.asarray, donor.state.opt)
+
+resumed = Session.restore(ckpt, cfg=cfg, cluster=C4())
+assert resumed.mesh.devices.size == 4, resumed.mesh
+assert resumed.rules.zero_stage == 3
+assert int(resumed.state.step) == 2
+for a, b in zip(jax.tree.leaves(want_p),
+                jax.tree.leaves(resumed.state.params)):
+    np.testing.assert_array_equal(a, np.asarray(b))
+for a, b in zip(jax.tree.leaves(want_o),
+                jax.tree.leaves(resumed.state.opt)):
+    np.testing.assert_array_equal(a, np.asarray(b))
+# the restored params are really sharded over the 4-device mesh
+leaf = jax.tree.leaves(resumed.state.params)[0]
+assert len(leaf.sharding.mesh.devices.flatten()) == 4
+assert np.isfinite(float(resumed.step()["loss"]))
+print("ELASTIC_RESHARD_RESTORE_OK")
+print("ELASTIC_ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_8dev_subprocess():
+    """The acceptance paths on the 8-device CPU mesh: measured-profile
+    provenance, trajectory-preserving replan, drop-two-devices elastic
+    continuation, and 8-dev stage-3 -> 4-dev cross-mesh restore with
+    bit-identical params/opt."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", SUBPROC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "ELASTIC_ALL_OK" in out.stdout, out.stdout + out.stderr

@@ -12,7 +12,8 @@ from repro.core.allocation import (allocate_flops_proportional,
                                    allocate_uniform, fit_curve)
 from repro.core.cluster import CATALOG, ClusterSpec, make_cluster
 from repro.core.planner import make_runners, plan
-from repro.core.profiler import (AnalyticalRunner, SimOOM, profile_device,
+from repro.core.profiler import (AnalyticalRunner, SimOOM, probes_saved,
+                                 profile_cluster, profile_device,
                                  time_consumed_during_step, StepSegments)
 from repro.core.workload import MemoryModel, train_flops_per_token
 

@@ -119,6 +119,27 @@ def test_describe_overlap_report_on_stage3():
         assert rep["wire_bytes_scheduled"] == 0.0
 
 
+def test_build_auto_stage_escalation_zero_none():
+    """zero=None through Session.build: the paper's automatic ZeRO-stage
+    escalation must run inside the facade (previously only exercised at
+    the profiler.auto_stage unit level). The 1.1B model cannot fit
+    ZeRO-0 on a 16 GB V100 (16P ≈ 17.6 GB), so the planner must settle
+    on stage >= 1 and the session must adopt exactly that stage."""
+    from repro.core.cluster import make_cluster
+
+    mid = get_config("llama-1.1b")
+    cluster = make_cluster("t", [("V100-16G", 4)])
+    sess = Session.build(mid, cluster, gbs=16, seq=512, mode="dryrun",
+                         zero=None)
+    assert sess.plan is not None
+    assert 1 <= sess.plan.zero_stage <= 3
+    assert sess.rules.zero_stage == sess.plan.zero_stage
+    # the escalation probed the infeasible stage(s) too: some profile of
+    # a rejected stage had mbs=0, and the final one fits at least batch 1
+    assert all(p.mbs >= 1 for p in sess.plan.profiles.values())
+    assert sess.describe()["plan"]["zero_stage"] == sess.plan.zero_stage
+
+
 def test_dryrun_mode_lowers_without_allocating():
     cfg = get_config("llama-0.5b", reduced=True)
     sess = Session.build(cfg, None, gbs=4, seq=16, mode="dryrun", zero=3,
