@@ -134,6 +134,16 @@ class Session:
         self.data = None
         self.profile = "analytical"
         self.probe_cap = None
+        self.packing = False
+        # effective-token statistics of the packed stream (a
+        # workload.PackedWorkload), priced by the planner; None = padded
+        self._packed = None
+        # measured DeviceProfiles keyed by runner.cache_key — persists
+        # across replans so an unchanged workload skips Algorithm 1
+        self._profile_cache: Dict[Any, Any] = {}
+        # calibrated scheduled-overlap factor (one-shot measured probe;
+        # None = not yet probed, falls back to the analytical default)
+        self._overlap_factor: Optional[float] = None
         self.build_seconds = 0.0
         self.plan_seconds = 0.0
         self.telemetry = EMAWindow()
@@ -169,6 +179,7 @@ class Session:
               plan_seq: Optional[int] = None,
               profile: str = "analytical",
               probe_cap: Optional[int] = None,
+              packing: bool = False,
               drift: Optional[DriftConfig] = None) -> "Session":
         """One call from (model, cluster) to a jitted, sharded step.
 
@@ -187,6 +198,16 @@ class Session:
         runs on observed TimeConsumedDuringStep. ``probe_cap`` bounds the
         measured probe's batch sweep (default MEASURED_PROBE_CAP; each
         probed batch size costs one jit compile).
+
+        ``packing=True`` makes the whole hot path padding-free: the
+        loader packs mixed-length documents first-fit-decreasing into
+        the batch rows (``segment_ids``/``positions``/token-level loss
+        masks ride through the hetero layout), the segment-aware
+        attention kernels skip cross-segment blocks, the loss normalizer
+        counts real tokens only, and the planner prices the *effective*
+        (non-pad) workload — one flag, end to end. Requires a document
+        source; without ``data=`` a synthetic
+        :class:`~repro.data.pipeline.MixedLengthDocs` stream is used.
         """
         if mode not in MODES:
             raise ValueError(f"mode={mode!r}; expected one of {MODES}")
@@ -204,6 +225,7 @@ class Session:
         self.window = window
         self.gbs, self.seq, self.seed, self.data = gbs, seq, seed, data
         self.profile, self.probe_cap = profile, probe_cap
+        self.packing = bool(packing)
         self._zero_request, self._plan_seq = zero, plan_seq
         if drift is not None:
             self.drift_config = drift
@@ -217,8 +239,28 @@ class Session:
         self._source = None
         if mode == "train":
             from dataclasses import replace
-            from repro.data.pipeline import SyntheticTokens, TextFileTokens
-            if data:
+            from repro.data.pipeline import (HeteroDataLoader,
+                                             MixedLengthDocs,
+                                             SyntheticTokens, TextFileTokens,
+                                             pack_documents)
+            if self.packing:
+                if data:
+                    raise ValueError(
+                        "packing=True needs a document source; data= "
+                        "corpora are contiguous byte streams with no "
+                        "document boundaries")
+                src = MixedLengthDocs(cfg.vocab_size, seq, seed=seed)
+                # pre-pack one probe batch: its PackingStats describe the
+                # stream (pad fraction, mean segment length) for the
+                # planner's effective-token pricing
+                from repro.core.workload import PackedWorkload
+                rows = max(gbs, 1)
+                budget = max(1, int(round(
+                    rows * seq * HeteroDataLoader.PACK_OVERDRAW
+                    / src.mean_doc_len)))
+                _, stats = pack_documents(src.documents(budget, 0), rows, seq)
+                self._packed = PackedWorkload.from_stats(stats)
+            elif data:
                 src = TextFileTokens(data, seq, seed=seed)
                 cfg = replace(cfg, vocab_size=max(cfg.vocab_size,
                                                   src.vocab_size))
@@ -286,6 +328,7 @@ class Session:
             "accum_steps": accum_steps, "seed": seed, "data": data,
             "overlap_prefetch": overlap_prefetch, "plan_seq": plan_seq,
             "profile": profile, "probe_cap": probe_cap,
+            "packing": self.packing,
         }
         self.build_seconds = time.time() - t0
         return self
@@ -311,19 +354,27 @@ class Session:
         from repro.core.planner import plan as poplar_plan
         gbs = self.gbs if gbs is None else gbs
         profile = self.profile if profile is None else profile
-        overlap_factor = (SCHEDULED_OVERLAP_FACTOR if overlap != "xla"
-                          else 0.0)
         factory = None
         probe_cap = self.probe_cap
         if profile == "measured":
             factory = self._measured_runner_factory(cluster)
             probe_cap = probe_cap or MEASURED_PROBE_CAP
+        overlap_factor = 0.0
+        if overlap != "xla":
+            # measured sessions calibrate the hidden-comm fraction from a
+            # one-shot auto-vs-scheduled probe; otherwise the analytical
+            # default (core/overlap.py) applies
+            overlap_factor = (self._calibrated_overlap(cluster)
+                              if profile == "measured"
+                              else SCHEDULED_OVERLAP_FACTOR)
         return poplar_plan(cluster, self.cfg, gbs,
                            seq_len=self._plan_seq or self.seq,
                            zero_stage=self._zero_request,
                            overlap_factor=overlap_factor,
                            runner_factory=factory,
-                           probe_cap=probe_cap)
+                           probe_cap=probe_cap,
+                           packed=self._packed,
+                           profile_cache=self._profile_cache)
 
     def _measured_runner_factory(self, cluster):
         """Per-stage MeasuredRunner constructor for ``planner.plan``'s
@@ -334,12 +385,19 @@ class Session:
         to one run per (spec, stage)."""
         from repro.core.profiler import MeasuredRunner
 
+        # persistent workload identity for the cross-replan profile
+        # cache: same (cfg, seq, impl, packing) on the same device kind
+        # and stage times out identically, so the cached curve is valid
+        wl = (self.cfg.name, int(self.cfg.total_params),
+              self._plan_seq or self.seq, self.impl,
+              self.window, bool(self._packed))
+
         def factory(stage: int):
             harness = _steps.ProbeHarness(
                 self.cfg, seq_len=self._plan_seq or self.seq,
                 zero_stage=stage, n_workers=cluster.n, impl=self.impl,
                 window=self.window, lr=self.lr, adamw_cfg=self.adamw_cfg,
-                seed=self.seed)
+                seed=self.seed, packed=self._packed)
             runners, counts = {}, {}
             for spec in cluster.devices:
                 counts[spec.name] = counts.get(spec.name, 0) + 1
@@ -348,9 +406,65 @@ class Session:
                     step_fn=harness.step,
                     memory_bytes_fn=harness.memory_bytes,
                     capacity_bytes=spec.mem_gb * 1e9,
-                    dedupe_key=(spec.name, stage))
+                    dedupe_key=(spec.name, stage),
+                    cache_key=wl + (stage, spec.name))
             return runners
         return factory
+
+    def _calibrated_overlap(self, cluster) -> float:
+        """Hidden-comm fraction for the allocation sweep, measured once
+        per session: time one XLA-auto step and one scheduled step (same
+        stage-3 workload, one row per device) plus a single-device step
+        as the comm-free compute reference, then solve
+        ``f = (t_auto - t_sched) / (t_auto - t_compute)``. Falls back to
+        the analytical default on single-device meshes or when the probe
+        is degenerate (core/overlap.calibrate_overlap_factor)."""
+        from repro.core.overlap import (SCHEDULED_OVERLAP_FACTOR,
+                                        calibrate_overlap_factor)
+        if self._overlap_factor is not None:
+            return self._overlap_factor
+        factor = SCHEDULED_OVERLAP_FACTOR
+        try:
+            mesh = self._default_mesh(cluster)
+            n = int(mesh.devices.size)
+            if n > 1:
+                t_auto = self._overlap_probe_time(mesh, "xla", n)
+                t_sched = self._overlap_probe_time(mesh, "scheduled", n)
+                t_comp = self._overlap_probe_time(make_debug_mesh(1),
+                                                  "xla", 1)
+                factor = calibrate_overlap_factor(t_auto, t_sched,
+                                                  t_auto - t_comp)
+        except Exception:  # noqa: BLE001 — probe failure must not block planning
+            factor = SCHEDULED_OVERLAP_FACTOR
+        self._overlap_factor = factor
+        return factor
+
+    def _overlap_probe_time(self, mesh, overlap_mode: str,
+                            rows: int) -> float:
+        """Median wall time of one jitted stage-3 train step (``rows``
+        one per mesh device) under the given overlap mode."""
+        import numpy as np
+        rules = MeshRules(mesh, zero_stage=3, overlap=overlap_mode)
+        params, axes = mm.init_model(jax.random.PRNGKey(self.seed), self.cfg)
+        opt = adamw_init(params)
+        fn = _steps.build_step(self.cfg, rules, axes, kind="train",
+                               adamw_cfg=self.adamw_cfg, lr=self.lr,
+                               window=self.window, impl=self.impl)
+        S = self._plan_seq or self.seq
+        rng = np.random.default_rng(self.seed)
+        toks = jnp.asarray(rng.integers(3, self.cfg.vocab_size, (rows, S)),
+                           jnp.int32)
+        batch = {"tokens": toks, "labels": toks,
+                 "loss_mask": jnp.ones((rows, S), jnp.float32)}
+        with mesh:
+            step = jax.jit(fn)
+            jax.block_until_ready(step(params, opt, batch))  # compile
+            ts = []
+            for _ in range(2):
+                t0 = time.perf_counter()
+                jax.block_until_ready(step(params, opt, batch))
+                ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
 
     def _derive_shardings(self):
         p_specs, o_specs, _ = model_shardings(self.rules, self.state.params,
@@ -429,7 +543,11 @@ class Session:
             self.state, metrics = self._jit_step(self.state, batch)
         if observe:
             jax.block_until_ready(metrics)
-            self.telemetry.record(time.perf_counter() - t0)
+            # tokens is the loss-mask sum — *non-pad* tokens, so the
+            # tokens/sec EMA measures useful throughput (packed and
+            # padded runs are comparable on it; wall time alone is not)
+            self.telemetry.record(time.perf_counter() - t0,
+                                  tokens=float(metrics["tokens"]))
             if (self._drift_baseline is None
                     and self.telemetry.count
                     >= self.drift_config.min_samples):
@@ -449,7 +567,7 @@ class Session:
         if self._loader is None:
             from repro.data.pipeline import HeteroDataLoader
             self._loader = HeteroDataLoader(self._source, self.layout,
-                                            self.seq)
+                                            self.seq, packing=self.packing)
             self._loader.seek(int(self.state.step))
         return self._loader
 
@@ -653,8 +771,11 @@ class Session:
         batch = {}
         lead = (self.accum_steps,) if self.accum_steps > 1 else ()
         B, S = self.layout.padded_global_batch, self.seq
-        for k, dt in (("tokens", jnp.int32), ("labels", jnp.int32),
-                      ("loss_mask", jnp.float32)):
+        fields = [("tokens", jnp.int32), ("labels", jnp.int32),
+                  ("loss_mask", jnp.float32)]
+        if self.packing:
+            fields += [("segment_ids", jnp.int32), ("positions", jnp.int32)]
+        for k, dt in fields:
             batch[k] = SP.SDS(lead + (B, S), dt)
         b_specs = SP.batch_spec_tree(
             self.rules, batch,
@@ -690,6 +811,7 @@ class Session:
         }
         if self.mode == "train":
             out["telemetry"] = {"ema_step_s": self.telemetry.value,
+                                "tokens_per_sec": self.telemetry.tokens_per_sec,
                                 "samples": self.telemetry.count}
             rep = self.drift()
             if rep is not None:

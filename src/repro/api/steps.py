@@ -163,12 +163,20 @@ class ProbeHarness:
     single-device step — its resident params/opt would overcount a
     ZeRO-sharded deployment by ~``n_workers``x and reject configurations
     that actually fit.
+
+    ``packed`` (a ``core.workload.PackedWorkload``) switches the probe
+    batches to the packed layout: rows carry synthetic ``segment_ids`` /
+    ``positions`` with contiguous segments of the stream's mean segment
+    length and its pad fraction, so the measured timings include the
+    segment-aware kernels' block skipping — the profile prices what
+    packed steps actually cost, not the full-attention workload.
     """
 
     def __init__(self, cfg: ModelConfig, *, seq_len: int, zero_stage: int,
                  n_workers: int = 1, impl: str = "reference",
                  window: Optional[int] = None, lr: float = 1e-3,
-                 adamw_cfg: AdamWConfig = AdamWConfig(), seed: int = 0):
+                 adamw_cfg: AdamWConfig = AdamWConfig(), seed: int = 0,
+                 packed=None):
         import numpy as np
 
         from repro.core.workload import MemoryModel
@@ -184,6 +192,7 @@ class ProbeHarness:
                               adamw_cfg=adamw_cfg, lr=lr, window=window,
                               impl=resolve_impl(impl))
         self._np_rng = np.random.default_rng(seed)
+        self._packed = packed
         self._compiled: Dict[int, Tuple[Callable, Dict]] = {}
         self._analytic = MemoryModel(cfg, seq_len, zero_stage, n_workers,
                                      cfg.remat)
@@ -191,11 +200,35 @@ class ProbeHarness:
         self.compiles = 0
 
     def _batch(self, b: int) -> Dict:
-        toks = self._np_rng.integers(3, self.cfg.vocab_size,
-                                     (b, self.seq_len))
-        return {"tokens": jnp.asarray(toks, jnp.int32),
-                "labels": jnp.asarray(toks, jnp.int32),
-                "loss_mask": jnp.ones((b, self.seq_len), jnp.float32)}
+        import numpy as np
+
+        S = self.seq_len
+        toks = self._np_rng.integers(3, self.cfg.vocab_size, (b, S))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32),
+                 "loss_mask": jnp.ones((b, S), jnp.float32)}
+        if self._packed is None:
+            return batch
+        # synthetic packed row mirroring the stream's statistics:
+        # contiguous segments of ~mean length filling (1 - pad_fraction)
+        # of the slots, then pad (segment 0, loss 0)
+        span = int(round(self._packed.mean_segment_len or S))
+        span = max(1, min(span, S))
+        real = int(round(S * max(0.0, min(1.0, self._packed.token_fraction))))
+        seg_row = np.zeros(S, np.int32)
+        pos_row = np.zeros(S, np.int32)
+        off, sid = 0, 0
+        while off < real:
+            L = min(span, real - off)
+            sid += 1
+            seg_row[off:off + L] = sid
+            pos_row[off:off + L] = np.arange(L)
+            off += L
+        batch["segment_ids"] = jnp.asarray(np.tile(seg_row, (b, 1)))
+        batch["positions"] = jnp.asarray(np.tile(pos_row, (b, 1)))
+        batch["loss_mask"] = jnp.asarray(
+            np.tile((seg_row > 0).astype(np.float32), (b, 1)))
+        return batch
 
     def _get(self, b: int) -> Tuple[Callable, Dict]:
         if b not in self._compiled:

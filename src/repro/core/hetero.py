@@ -96,17 +96,52 @@ def _dev_steps(layout: HeteroBatchLayout, gi: int) -> int:
     return layout.gas
 
 
-def pack_batch(tokens: np.ndarray, layout: HeteroBatchLayout,
-               seq_len: int) -> Dict[str, np.ndarray]:
-    """Scatter a stream of (N, seq+1) token rows into the padded layout.
+def pack_batch(tokens: Optional[np.ndarray], layout: HeteroBatchLayout,
+               seq_len: int, *,
+               packed_fields: Optional[Dict[str, np.ndarray]] = None
+               ) -> Dict[str, np.ndarray]:
+    """Scatter a stream of row data into the padded layout.
 
-    Returns arrays shaped (gas, padded_global_batch, seq) + masks. Rows are
-    consumed group-major per micro-step; unfilled rows are zero + masked.
+    Two modes:
+
+    * ``tokens`` — a (N, seq+1) array of token rows; tokens/labels are the
+      usual shift. Per-token loss validity additionally zeroes positions
+      whose input or label is PAD (id 0), so zero-padded variable-length
+      rows train on exactly their real tokens (full-length rows are
+      unaffected: no real token id is 0).
+    * ``packed_fields`` — pre-packed per-row arrays from the sequence
+      packer (``data.pipeline.pack_documents``): ``tokens``/``labels``/
+      ``segment_ids``/``positions`` (N, seq) plus a token-level
+      ``loss_mask`` (N, seq). Each field is scattered alongside the row
+      mask so packed metadata rides through the hetero layout untouched.
+
+    Returns arrays shaped (gas, padded_global_batch, seq) + the combined
+    loss mask. Rows are consumed group-major per micro-step; unfilled
+    rows are zero + masked.
     """
     masks = build_masks(layout)                   # (gas, B_pad)
     gas, B_pad = masks.shape
+    if packed_fields is not None:
+        n_rows = len(packed_fields["tokens"])
+        out = {k: np.zeros((gas, B_pad) + v.shape[1:], v.dtype)
+               for k, v in packed_fields.items() if k != "loss_mask"}
+        tok_mask = np.zeros((gas, B_pad, seq_len), np.float32)
+        cursor = 0
+        for s in range(gas):
+            for b in range(B_pad):
+                if masks[s, b] > 0:
+                    if cursor >= n_rows:
+                        masks[s, b] = 0.0
+                        continue
+                    for name in out:
+                        out[name][s, b] = packed_fields[name][cursor]
+                    tok_mask[s, b] = packed_fields["loss_mask"][cursor]
+                    cursor += 1
+        out["loss_mask"] = masks[:, :, None] * tok_mask
+        return out
     toks = np.zeros((gas, B_pad, seq_len), tokens.dtype)
     labs = np.zeros((gas, B_pad, seq_len), tokens.dtype)
+    tok_mask = np.zeros((gas, B_pad, seq_len), np.float32)
     cursor = 0
     for s in range(gas):
         for b in range(B_pad):
@@ -118,5 +153,7 @@ def pack_batch(tokens: np.ndarray, layout: HeteroBatchLayout,
                 cursor += 1
                 toks[s, b] = row[:seq_len]
                 labs[s, b] = row[1:seq_len + 1]
-    loss_mask = masks[:, :, None] * np.ones((1, 1, seq_len), np.float32)
+                tok_mask[s, b] = ((row[:seq_len] != 0)
+                                  & (row[1:seq_len + 1] != 0))
+    loss_mask = masks[:, :, None] * tok_mask
     return {"tokens": toks, "labels": labs, "loss_mask": loss_mask}

@@ -51,12 +51,35 @@ from repro.core import qcomm
 from repro.core.sharding import MeshRules, shard_map_compat, use_rules
 
 # layer-scan comm hidden under compute: the fraction of per-microstep
-# collective time the prefetch pipeline can hide. 0.7 is the calibration
-# default for the planner/simulator overlap term (first-layer fill +
-# last-layer drain + the non-stacked leaves stay exposed); replace with a
-# measured value from `benchmarks/perf_variants.py` overlap rows on real
-# hardware.
+# collective time the prefetch pipeline can hide. 0.7 is the analytical
+# fallback for the planner/simulator overlap term (first-layer fill +
+# last-layer drain + the non-stacked leaves stay exposed); sessions built
+# with profile="measured" replace it via `calibrate_overlap_factor` from
+# a one-shot auto-vs-scheduled probe.
 SCHEDULED_OVERLAP_FACTOR = 0.7
+
+
+def calibrate_overlap_factor(t_auto_s: float, t_scheduled_s: float,
+                             comm_s: float,
+                             fallback: float = SCHEDULED_OVERLAP_FACTOR
+                             ) -> float:
+    """Infer the hidden-comm fraction from one measured probe pair.
+
+    The serial (XLA-auto) model costs ``t_auto ≈ compute + comm``; the
+    scheduled step hides ``f·comm`` of that under compute, so
+    ``t_auto − t_scheduled ≈ f·comm`` and ``f`` falls straight out given
+    the planner's per-microstep collective estimate ``comm_s``. Clamped
+    to [0, 0.95] (the fill/drain floor can never hide everything);
+    degenerate probes — non-positive timings, comm indistinguishable
+    from timer noise, or a scheduled step *slower* than auto — return
+    ``fallback`` instead of a garbage factor.
+    """
+    if not (t_auto_s > 0.0 and t_scheduled_s > 0.0 and comm_s > 1e-12):
+        return fallback
+    hidden = t_auto_s - t_scheduled_s
+    if hidden <= 0.0:
+        return fallback
+    return min(hidden / comm_s, 0.95)
 
 # subtrees of the param dict that are stacked over the layer scan and
 # therefore streamed layer-by-layer instead of gathered up front

@@ -14,8 +14,9 @@ from repro.core.cluster import ClusterSpec, DeviceSpec
 from repro.core.profiler import (AnalyticalRunner, DeviceProfile, DeviceRunner,
                                  SimOOM, probes_saved, profile_cluster)
 from repro.core.simulator import SimResult, simulate_plan
-from repro.core.workload import (MemoryModel, comm_time_per_microstep,
-                                 train_flops_per_token)
+from repro.core.workload import (MemoryModel, PackedWorkload,
+                                 comm_time_per_microstep,
+                                 train_flops_per_row)
 
 
 @dataclass
@@ -37,9 +38,15 @@ class PoplarPlan:
 
 def make_runners(cluster: ClusterSpec, cfg: ModelConfig, seq_len: int,
                  zero_stage: int, remat: bool = True, noise: float = 0.0,
+                 packed: Optional[PackedWorkload] = None,
                  ) -> Dict[str, DeviceRunner]:
-    """Analytical runners — one per device — for the given workload/stage."""
-    fps = train_flops_per_token(cfg, seq_len) * seq_len
+    """Analytical runners — one per device — for the given workload/stage.
+
+    ``packed`` prices the effective (non-pad) workload of a packed batch
+    stream: the attention term shrinks to the mean segment length and pad
+    slots are discounted (see workload.train_flops_per_row).
+    """
+    fps = train_flops_per_row(cfg, seq_len, packed)
     runners: Dict[str, DeviceRunner] = {}
     counts: Dict[str, int] = {}
     for spec in cluster.devices:
@@ -56,6 +63,8 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
          runner_factory: Optional[Callable[[int], Dict[str, DeviceRunner]]] = None,
          overlap_factor: float = 0.0,
          probe_cap: Optional[int] = None,
+         packed: Optional[PackedWorkload] = None,
+         profile_cache: Optional[Dict] = None,
          ) -> PoplarPlan:
     """Run the full Poplar pipeline.
 
@@ -74,15 +83,29 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
     only exists at stage 3, so the factor is zeroed for any other stage
     the escalation settles on (crediting hiding the runtime can't
     deliver would inflate predictions and skew the sweep).
+
+    ``packed`` (a workload.PackedWorkload, e.g. derived from the
+    loader's PackingStats) prices analytical profiles and the simulator
+    replay at the *effective* packed workload — attention spans the mean
+    segment length, pad slots are discounted — so the compute/comm
+    balance the allocation sweep optimizes matches what packed rows
+    actually cost. Measured runners (runner_factory) see the effect for
+    free by probing real packed batches.
+
+    ``profile_cache`` (a caller-owned dict) lets repeated plans over an
+    unchanged workload reuse measured profiles instead of re-running
+    Algorithm 1 — see profiler.profile_cluster.
     """
     stages = [zero_stage] if zero_stage is not None else [0, 1, 2, 3]
     last_err: Optional[Exception] = None
     for stage in stages:
         stage_overlap = overlap_factor if stage == 3 else 0.0
         runners = (runner_factory(stage) if runner_factory
-                   else make_runners(cluster, cfg, seq_len, stage, remat))
+                   else make_runners(cluster, cfg, seq_len, stage, remat,
+                                     packed=packed))
         profiles = profile_cluster(runners, stage,
-                                   max_probe_cap=probe_cap or (1 << 16))
+                                   max_probe_cap=probe_cap or (1 << 16),
+                                   cache=profile_cache)
         if any(p.mbs < 1 for p in profiles.values()):
             last_err = SimOOM(f"stage {stage}: some device cannot fit batch 1")
             continue
@@ -95,7 +118,7 @@ def plan(cluster: ClusterSpec, cfg: ModelConfig, gbs: int, seq_len: int,
             alloc = allocate_stage23(curves, gbs, comm, stage,
                                      overlap_factor=stage_overlap)
         alloc.zero_stage = stage
-        fps = train_flops_per_token(cfg, seq_len) * seq_len
+        fps = train_flops_per_row(cfg, seq_len, packed)
         predicted = simulate_plan(alloc, curves, cfg, seq_len, cluster, fps,
                                   overlap_factor=stage_overlap)
         sources = {p.source for p in profiles.values()}

@@ -27,6 +27,11 @@ class EMAWindow:
 
     The first ``warmup`` samples are discarded — they time jit
     compilation, not the steady-state step the plan predicted.
+
+    Passing ``tokens`` (the step's *non-pad* token count, e.g. the loss
+    mask sum) additionally maintains a ``tokens_per_sec`` EMA — the
+    throughput metric that makes packed and padded runs comparable:
+    wall-clock alone rewards computing pad garbage faster.
     """
     alpha: float = 0.3
     warmup: int = 1
@@ -34,8 +39,9 @@ class EMAWindow:
     count: int = 0                    # samples folded into the EMA
     skipped: int = 0                  # warmup samples discarded
     last: Optional[float] = None
+    tokens_per_sec: Optional[float] = None  # EMA of non-pad tokens / s
 
-    def record(self, dt: float) -> None:
+    def record(self, dt: float, tokens: Optional[float] = None) -> None:
         if self.skipped < self.warmup:
             self.skipped += 1
             return
@@ -44,10 +50,16 @@ class EMAWindow:
                       else self.alpha * self.last
                       + (1.0 - self.alpha) * self.value)
         self.count += 1
+        if tokens is not None and self.last > 0:
+            tps = float(tokens) / self.last
+            self.tokens_per_sec = (tps if self.tokens_per_sec is None
+                                   else self.alpha * tps
+                                   + (1.0 - self.alpha) * self.tokens_per_sec)
 
     def reset(self) -> None:
         self.value, self.last = None, None
         self.count, self.skipped = 0, 0
+        self.tokens_per_sec = None
 
 
 @dataclass

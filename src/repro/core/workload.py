@@ -7,6 +7,7 @@ MODEL_FLOPS = 6·N·D sanity term of the roofline analysis.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 
@@ -27,6 +28,44 @@ def train_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
 
 def fwd_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
     return train_flops_per_token(cfg, seq_len) / 3.0
+
+
+@dataclass(frozen=True)
+class PackedWorkload:
+    """Effective (non-pad) token statistics of a packed batch stream.
+
+    ``token_fraction``: real tokens per (row, seq_len) slot — one minus
+    the pad fraction. ``mean_segment_len``: average packed document
+    length — the span each token's attention actually covers once the
+    segment-aware kernels skip cross-segment blocks.
+    """
+    token_fraction: float = 1.0
+    mean_segment_len: Optional[float] = None
+
+    @staticmethod
+    def from_stats(stats) -> "PackedWorkload":
+        """From a ``data.pipeline.PackingStats`` (duck-typed)."""
+        return PackedWorkload(
+            token_fraction=max(0.0, min(1.0, 1.0 - stats.pad_fraction)),
+            mean_segment_len=float(stats.mean_segment_len) or None)
+
+
+def train_flops_per_row(cfg: ModelConfig, seq_len: int,
+                        packed: Optional[PackedWorkload] = None) -> float:
+    """FLOPs one (row, seq_len) training sample actually costs the device.
+
+    Unpacked: ``train_flops_per_token * seq_len``. Packed rows keep the
+    dense cost on (1 - pad_fraction) of the slots while the segment-aware
+    attention kernels skip cross-segment blocks, so the quadratic term
+    sees the mean *segment* length rather than the full sequence — this
+    is the number measured/analytical profiles and the allocation sweep
+    must price, or Algorithm 1 optimizes a partly-garbage workload.
+    """
+    if packed is None:
+        return train_flops_per_token(cfg, seq_len) * seq_len
+    span = packed.mean_segment_len or seq_len
+    return (train_flops_per_token(cfg, int(round(span)))
+            * seq_len * packed.token_fraction)
 
 
 @dataclass

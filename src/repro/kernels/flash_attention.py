@@ -21,6 +21,16 @@ to ``(B, Hq, S, D)``. Each Q-head grid row reads the KV head of its
 group directly through the BlockSpec ``index_map`` (``h // group_size``),
 so HBM holds exactly one copy of the cache-sized tensors. The expansion
 survives only in the jnp parity oracle (``ref.py``).
+
+Ragged (packed) sequences: an optional ``segment_ids`` input of shape
+``(B, S)`` — 0 marks padding, packed documents carry ids 1..n in
+contiguous runs — adds a per-element ``q_seg == k_seg != 0`` mask AND a
+block-level skip: because ids are contiguous per row, a (q-block,
+k-block) pair whose nonzero id ranges do not intersect cannot contain a
+matching pair, so the same ``pl.when`` machinery that skips
+above-diagonal causal blocks skips cross-segment blocks entirely. For a
+row packed with ``n`` equal documents that removes ~``(n-1)/n`` of the
+off-diagonal work on top of the causal skip.
 """
 from __future__ import annotations
 
@@ -73,6 +83,21 @@ def _kv_head_map(Hq: int, Hkv: int):
     return lambda bh: (bh // Hq) * Hkv + (bh % Hq) // group
 
 
+_SEG_BIG = 1 << 30  # sentinel above any real segment id
+
+
+def _segments_may_overlap(qseg, kseg):
+    """True iff some (q, k) pair in the block pair can share a nonzero
+    segment id. Segment ids are contiguous runs per row (0 = padding), so
+    the nonzero [min, max] ranges intersect iff any pair matches — an
+    exact skip test, not just a conservative one."""
+    q_lo = jnp.min(jnp.where(qseg > 0, qseg, _SEG_BIG))
+    q_hi = jnp.max(qseg)
+    k_lo = jnp.min(jnp.where(kseg > 0, kseg, _SEG_BIG))
+    k_hi = jnp.max(kseg)
+    return jnp.logical_and(k_lo <= q_hi, k_hi >= q_lo)
+
+
 def _scratch_shapes(block_q: int, d: int):
     if _VMEM is not None:
         return [_VMEM((block_q,), jnp.float32),
@@ -83,9 +108,14 @@ def _scratch_shapes(block_q: int, d: int):
             jax.ShapeDtypeStruct((block_q, d), jnp.float32)]
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
-                  *, block_q: int, block_k: int, seq_len: int, causal: bool,
-                  window: Optional[int], scale: float, num_kv: int):
+def _flash_kernel(q_ref, k_ref, v_ref, *refs, block_q: int, block_k: int,
+                  seq_len: int, causal: bool, window: Optional[int],
+                  scale: float, num_kv: int, segmented: bool = False):
+    if segmented:
+        qseg_ref, kseg_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        qseg_ref = kseg_ref = None
+        o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -104,6 +134,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
     if window is not None:  # block fully left of the window -> skip
         needed = jnp.logical_and(
             needed, k_start + block_k - 1 >= q_start - window + 1)
+    if segmented:  # disjoint segment-id ranges -> skip (packed sequences)
+        qseg = qseg_ref[0]                              # (block_q,) int32
+        kseg = kseg_ref[0]                              # (block_k,) int32
+        needed = jnp.logical_and(needed, _segments_may_overlap(qseg, kseg))
 
     @pl.when(needed)
     def _compute():
@@ -119,6 +153,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
             mask = jnp.logical_and(mask, qpos >= kpos)
         if window is not None:
             mask = jnp.logical_and(mask, qpos - kpos < window)
+        if segmented:  # attend within the same nonzero segment only
+            mask = jnp.logical_and(mask, qseg[:, None] == kseg[None, :])
+            mask = jnp.logical_and(mask, kseg[None, :] > 0)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -140,7 +177,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
         lse_ref[0] = jnp.where(l > 0, m_ref[...] + jnp.log(denom), 0.0)
 
 
-def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
+def flash_attention_fwd_pallas(q, k, v, segment_ids=None, *,
+                               causal: bool = True,
                                window: Optional[int] = None,
                                block_q: int = 128, block_k: int = 128,
                                interpret: bool = False):
@@ -149,6 +187,9 @@ def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
     q: (B, Hq, S, D); k,v: (B, Hkv, S, D) un-expanded — Hq == Hkv is
     plain MHA, otherwise each group of Hq/Hkv query heads reads its KV
     head through the grid index_map (no replication in HBM).
+    ``segment_ids``: optional (B, S) int32 packed-document ids (0 = pad);
+    attention is confined within equal nonzero ids and cross-segment
+    block pairs are skipped.
     Returns (out (B,Hq,S,D), lse (B,Hq,S) float32).
     """
     B, _, S, D = q.shape
@@ -168,19 +209,32 @@ def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
     kf = k.reshape(B * Hkv, Sp, D)
     vf = v.reshape(B * Hkv, Sp, D)
     kvmap = _kv_head_map(Hq, Hkv)
+    segmented = segment_ids is not None
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
-        causal=causal, window=window, scale=1.0 / (D ** 0.5), num_kv=nkv)
+        causal=causal, window=window, scale=1.0 / (D ** 0.5), num_kv=nkv,
+        segmented=segmented)
+    in_specs = [
+        pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        pl.BlockSpec((1, block_k, D),
+                     lambda bh, qi, ki: (kvmap(bh), ki, 0)),
+        pl.BlockSpec((1, block_k, D),
+                     lambda bh, qi, ki: (kvmap(bh), ki, 0)),
+    ]
+    args = [qf, kf, vf]
+    if segmented:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        if pad:
+            seg = jnp.pad(seg, ((0, 0), (0, pad)))      # pads get id 0
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh // Hq, qi)),
+            pl.BlockSpec((1, block_k), lambda bh, qi, ki: (bh // Hq, ki)),
+        ]
+        args += [seg, seg]
     out, lse = pl.pallas_call(
         kernel,
         grid=(B * Hq, nq, nkv),
-        in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_k, D),
-                         lambda bh, qi, ki: (kvmap(bh), ki, 0)),
-            pl.BlockSpec((1, block_k, D),
-                         lambda bh, qi, ki: (kvmap(bh), ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
             pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
@@ -191,19 +245,19 @@ def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
         ],
         scratch_shapes=_scratch_shapes(block_q, D),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(*args)
     return (out.reshape(B, Hq, Sp, D)[:, :, :S],
             lse.reshape(B, Hq, Sp)[:, :, :S])
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool = True,
+def flash_attention_pallas(q, k, v, segment_ids=None, *, causal: bool = True,
                            window: Optional[int] = None,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = False):
     """Inference-path forward. q: (B,Hq,S,D); k,v: (B,Hkv,S,D).
     Returns (B,Hq,S,D)."""
     out, _ = flash_attention_fwd_pallas(
-        q, k, v, causal=causal, window=window, block_q=block_q,
+        q, k, v, segment_ids, causal=causal, window=window, block_q=block_q,
         block_k=block_k, interpret=interpret)
     return out
 
@@ -222,32 +276,37 @@ class AttnConfig(NamedTuple):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _flash_attention(cfg: AttnConfig, q, k, v):
+def _flash_attention(cfg: AttnConfig, q, k, v, segment_ids):
     out, _ = flash_attention_fwd_pallas(
-        q, k, v, causal=cfg.causal, window=cfg.window,
+        q, k, v, segment_ids, causal=cfg.causal, window=cfg.window,
         block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
     return out
 
 
-def _flash_attention_fwd(cfg: AttnConfig, q, k, v):
+def _flash_attention_fwd(cfg: AttnConfig, q, k, v, segment_ids):
     out, lse = flash_attention_fwd_pallas(
-        q, k, v, causal=cfg.causal, window=cfg.window,
+        q, k, v, segment_ids, causal=cfg.causal, window=cfg.window,
         block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
-    return out, (q, k, v, out, lse)
+    return out, (q, k, v, segment_ids, out, lse)
 
 
 def _flash_attention_bwd(cfg: AttnConfig, residuals, do):
     from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
-    q, k, v, out, lse = residuals
-    return flash_attention_bwd_pallas(
-        q, k, v, out, lse, do, causal=cfg.causal, window=cfg.window,
-        block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
+    q, k, v, segment_ids, out, lse = residuals
+    dq, dk, dv = flash_attention_bwd_pallas(
+        q, k, v, out, lse, do, segment_ids, causal=cfg.causal,
+        window=cfg.window, block_q=cfg.block_q, block_k=cfg.block_k,
+        interpret=cfg.interpret)
+    # integer segment ids take a symbolic-zero (float0) cotangent
+    dseg = (None if segment_ids is None
+            else jnp.zeros(segment_ids.shape, jax.dtypes.float0))
+    return dq, dk, dv, dseg
 
 
 _flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
 
 
-def flash_attention_vjp(q, k, v, *, causal: bool = True,
+def flash_attention_vjp(q, k, v, segment_ids=None, *, causal: bool = True,
                         window: Optional[int] = None,
                         block_q: int = 128, block_k: int = 128,
                         interpret: bool = False):
@@ -256,4 +315,4 @@ def flash_attention_vjp(q, k, v, *, causal: bool = True,
                      block_q=min(block_q, q.shape[2]),
                      block_k=min(block_k, q.shape[2]),
                      interpret=interpret)
-    return _flash_attention(cfg, q, k, v)
+    return _flash_attention(cfg, q, k, v, segment_ids)

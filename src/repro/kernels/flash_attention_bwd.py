@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.flash_attention import (NEG_INF, _VMEM, _group_sizes,
-                                           _kv_head_map, _pad_len)
+                                           _kv_head_map, _pad_len,
+                                           _segments_may_overlap)
 
 __all__ = ["flash_attention_bwd_pallas"]
 
@@ -55,7 +56,7 @@ def _block_needed(q_start, k_start, block_q, block_k, causal, window):
 
 
 def _recompute_p(q, k, lse, q_start, k_start, *, seq_len, causal, window,
-                 scale):
+                 scale, qseg=None, kseg=None):
     """Rebuild the probability block p = exp(s - L) and its mask."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -66,15 +67,23 @@ def _recompute_p(q, k, lse, q_start, k_start, *, seq_len, causal, window,
         mask = jnp.logical_and(mask, qpos >= kpos)
     if window is not None:
         mask = jnp.logical_and(mask, qpos - kpos < window)
+    if qseg is not None:  # packed rows: within the same nonzero segment
+        mask = jnp.logical_and(mask, qseg[:, None] == kseg[None, :])
+        mask = jnp.logical_and(mask, kseg[None, :] > 0)
     s = jnp.where(mask, s, NEG_INF)
     p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
     return p
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               dq_acc, *, block_q: int, block_k: int, seq_len: int,
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, *refs,
+               block_q: int, block_k: int, seq_len: int,
                causal: bool, window: Optional[int], scale: float,
-               num_kv: int):
+               num_kv: int, segmented: bool = False):
+    if segmented:
+        qseg_ref, kseg_ref, dq_ref, dq_acc = refs
+    else:
+        qseg_ref = kseg_ref = None
+        dq_ref, dq_acc = refs
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -84,7 +93,14 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
     q_start = pl.program_id(1) * block_q
     k_start = ki * block_k
 
-    @pl.when(_block_needed(q_start, k_start, block_q, block_k, causal, window))
+    needed = _block_needed(q_start, k_start, block_q, block_k, causal, window)
+    qseg = kseg = None
+    if segmented:
+        qseg = qseg_ref[0]
+        kseg = kseg_ref[0]
+        needed = jnp.logical_and(needed, _segments_may_overlap(qseg, kseg))
+
+    @pl.when(needed)
     def _compute():
         q = q_ref[0].astype(jnp.float32)                 # (block_q, D)
         k = k_ref[0].astype(jnp.float32)                 # (block_k, D)
@@ -92,7 +108,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         do = do_ref[0].astype(jnp.float32)               # (block_q, D)
         p = _recompute_p(q, k, lse_ref[0], q_start, k_start,
                          seq_len=seq_len, causal=causal, window=window,
-                         scale=scale)
+                         scale=scale, qseg=qseg, kseg=kseg)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta_ref[0][:, None]) * scale    # (block_q, block_k)
@@ -105,11 +121,15 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
-                dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
-                block_k: int, seq_len: int, causal: bool,
+def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref, *refs,
+                block_q: int, block_k: int, seq_len: int, causal: bool,
                 window: Optional[int], scale: float, num_q: int,
-                num_inner: int):
+                num_inner: int, segmented: bool = False):
+    if segmented:
+        qseg_ref, kseg_ref, dk_ref, dv_ref, dk_acc, dv_acc = refs
+    else:
+        qseg_ref = kseg_ref = None
+        dk_ref, dv_ref, dk_acc, dv_acc = refs
     # innermost dim fuses (group member, q block): t = g * num_q + qi.
     # dK/dV scratch therefore accumulates across ALL Q heads sharing
     # this KV head before the single writeback.
@@ -124,7 +144,14 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
     k_start = pl.program_id(1) * block_k
     q_start = qi * block_q
 
-    @pl.when(_block_needed(q_start, k_start, block_q, block_k, causal, window))
+    needed = _block_needed(q_start, k_start, block_q, block_k, causal, window)
+    qseg = kseg = None
+    if segmented:
+        qseg = qseg_ref[0]
+        kseg = kseg_ref[0]
+        needed = jnp.logical_and(needed, _segments_may_overlap(qseg, kseg))
+
+    @pl.when(needed)
     def _compute():
         k = k_ref[0].astype(jnp.float32)                 # (block_k, D)
         v = v_ref[0].astype(jnp.float32)
@@ -132,7 +159,7 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
         do = do_ref[0].astype(jnp.float32)
         p = _recompute_p(q, k, lse_ref[0], q_start, k_start,
                          seq_len=seq_len, causal=causal, window=window,
-                         scale=scale)
+                         scale=scale, qseg=qseg, kseg=kseg)
         dv_acc[...] += jax.lax.dot_general(
             p, do, (((0,), (0,)), ((), ())),             # p^T @ dO
             preferred_element_type=jnp.float32)
@@ -149,7 +176,8 @@ def _dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
+def flash_attention_bwd_pallas(q, k, v, out, lse, do, segment_ids=None, *,
+                               causal: bool = True,
                                window: Optional[int] = None,
                                block_q: int = 128, block_k: int = 128,
                                interpret: bool = False
@@ -157,7 +185,10 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
                                           jnp.ndarray]:
     """dQ/dK/dV for ``flash_attention_fwd_pallas``.
 
-    q,out,do: (B,Hq,S,D); k,v: (B,Hkv,S,D); lse: (B,Hq,S) float32.
+    q,out,do: (B,Hq,S,D); k,v: (B,Hkv,S,D); lse: (B,Hq,S) float32;
+    ``segment_ids``: optional (B, S) int32 packed-document ids (0 = pad) —
+    both kernels then apply the segment mask and skip cross-segment
+    block pairs, mirroring the forward.
     Returns grads with the *primal* shapes/dtypes — dK/dV come back with
     ``Hkv`` heads, already summed over each KV head's query group
     (accumulated in float32 inside the kernels).
@@ -169,6 +200,10 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
     pad = _pad_len(S, block_q, block_k) - S
     # delta = rowsum(dO * O) — the softmax-jacobian correction term
     delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    segmented = segment_ids is not None
+    seg = None
+    if segmented:
+        seg = jnp.asarray(segment_ids, jnp.int32)
     if pad:
         padcfg = ((0, 0), (0, 0), (0, pad), (0, 0))
         q = jnp.pad(q, padcfg)
@@ -177,6 +212,8 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
         do = jnp.pad(do, padcfg)
         lse = jnp.pad(lse, ((0, 0), (0, 0), (0, pad)))
         delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pad)))
+        if segmented:
+            seg = jnp.pad(seg, ((0, 0), (0, pad)))       # pads get id 0
     Sp = q.shape[2]
     nq, nkv = Sp // block_q, Sp // block_k
     qf = q.reshape(B * Hq, Sp, D)
@@ -193,17 +230,25 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
                          lambda bh, qi, ki: (kvmap(bh), ki, 0))
     rowspec = pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi))
 
+    dq_in_specs = [qspec, kspec, kspec, qspec, rowspec, rowspec]
+    dq_args = [qf, kf, vf, dof, lsef, deltaf]
+    if segmented:
+        dq_in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh // Hq, qi)),
+            pl.BlockSpec((1, block_k), lambda bh, qi, ki: (bh // Hq, ki)),
+        ]
+        dq_args += [seg, seg]
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
                           seq_len=S, causal=causal, window=window,
-                          scale=scale, num_kv=nkv),
+                          scale=scale, num_kv=nkv, segmented=segmented),
         grid=(B * Hq, nq, nkv),
-        in_specs=[qspec, kspec, kspec, qspec, rowspec, rowspec],
+        in_specs=dq_in_specs,
         out_specs=qspec,
         out_shape=jax.ShapeDtypeStruct((B * Hq, Sp, D), q.dtype),
         scratch_shapes=[_scratch((block_q, D))],
         interpret=interpret,
-    )(qf, kf, vf, dof, lsef, deltaf)
+    )(*dq_args)
 
     # dKV grid: one program row per KV head; kv blocks in the middle;
     # innermost (sequential on TPU) fuses group x q-blocks (t = g*nq + qi)
@@ -218,18 +263,27 @@ def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool = True,
                           lambda bh, ki, t: (qmap(bh, t), t % nq, 0))
     rowspec2 = pl.BlockSpec((1, block_q),
                             lambda bh, ki, t: (qmap(bh, t), t % nq))
+    dkv_in_specs = [kspec2, kspec2, qspec2, qspec2, rowspec2, rowspec2]
+    dkv_args = [kf, vf, qf, dof, lsef, deltaf]
+    if segmented:
+        dkv_in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, ki, t: (bh // Hkv, t % nq)),
+            pl.BlockSpec((1, block_k), lambda bh, ki, t: (bh // Hkv, ki)),
+        ]
+        dkv_args += [seg, seg]
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, block_q=block_q, block_k=block_k,
                           seq_len=S, causal=causal, window=window,
-                          scale=scale, num_q=nq, num_inner=group * nq),
+                          scale=scale, num_q=nq, num_inner=group * nq,
+                          segmented=segmented),
         grid=(B * Hkv, nkv, group * nq),
-        in_specs=[kspec2, kspec2, qspec2, qspec2, rowspec2, rowspec2],
+        in_specs=dkv_in_specs,
         out_specs=[kspec2, kspec2],
         out_shape=[jax.ShapeDtypeStruct((B * Hkv, Sp, D), k.dtype),
                    jax.ShapeDtypeStruct((B * Hkv, Sp, D), v.dtype)],
         scratch_shapes=[_scratch((block_k, D)), _scratch((block_k, D))],
         interpret=interpret,
-    )(kf, vf, qf, dof, lsef, deltaf)
+    )(*dkv_args)
 
     def unpad(a, H):
         return a.reshape(B, H, Sp, D)[:, :, :S]

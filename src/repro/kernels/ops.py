@@ -56,7 +56,7 @@ def recommended_impl() -> str:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True,
+def flash_attention(q, k, v, segment_ids=None, *, causal: bool = True,
                     window: Optional[int] = None,
                     block_q: Optional[int] = None,
                     block_k: Optional[int] = None):
@@ -66,6 +66,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
     un-expanded); the kernels map each query head onto its KV group in
     the grid. The autotune key includes the group size so tuned tiles
     don't alias between MHA and GQA shapes.
+
+    ``segment_ids``: optional (B, S) int32 packed-document ids (0 = pad).
+    Attention stays within equal nonzero ids; block pairs whose id
+    ranges cannot intersect are skipped in forward and backward.
     """
     interpret = _interpret_default()
     if block_q is None or block_k is None:
@@ -75,9 +79,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
             interpret=interpret)
         block_q = block_q or bq
         block_k = block_k or bk
-    return flash_attention_vjp(q, k, v, causal=causal, window=window,
-                               block_q=block_q, block_k=block_k,
-                               interpret=interpret)
+    return flash_attention_vjp(q, k, v, segment_ids, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))

@@ -78,6 +78,11 @@ def main(argv=None):
     ap.add_argument("--comm-dtype", default=None, choices=[None, "int8"],
                     help="wire format for the scheduled path's sharded "
                          "collectives (int8 = qcomm quantized AG/RS)")
+    ap.add_argument("--packing", action="store_true",
+                    help="pack mixed-length documents into the batch rows "
+                         "(segment-aware attention, non-pad loss "
+                         "normalizer, effective-token planning) — the "
+                         "padding-free hot path")
     ap.add_argument("--data", default=None, help="text file (byte-LM); "
                                                  "default synthetic")
     ap.add_argument("--ckpt", default=None)
@@ -98,7 +103,8 @@ def main(argv=None):
     build_kw = dict(gbs=args.gbs, seq=args.seq, zero=args.zero,
                     impl=args.impl, overlap=args.overlap,
                     comm_dtype=args.comm_dtype, lr=args.lr, data=args.data,
-                    plan_seq=args.plan_seq, profile=args.profile)
+                    plan_seq=args.plan_seq, profile=args.profile,
+                    packing=args.packing)
     if args.resume:
         # crash recovery must resume the *recorded* recipe: only flags the
         # user actually typed on this invocation override it — passing
@@ -120,13 +126,17 @@ def main(argv=None):
           + (" (auto)" if args.impl == "auto" else ""))
     plan = desc.get("plan")   # absent when resuming an unplanned checkpoint
     if plan is not None:
+        packed = sess._packed
         print(f"[poplar] stage={plan['zero_stage']} "
               f"probes={plan['profiling_probes']} "
               f"(+{plan['profiling_probes_saved']} deduped) "
               f"source={plan['profile_source']} "
               f"predicted {plan['predicted']['cluster_tflops']:.1f} TFLOPs "
               f"util={plan['predicted']['utilization']:.3f} "
-              f"({plan['plan_seconds']:.2f}s planning, "
+              + (f"packed(fill={packed.token_fraction:.3f} "
+                 f"seg~{packed.mean_segment_len:.0f}) "
+                 if packed is not None else "")
+              + f"({plan['plan_seconds']:.2f}s planning, "
               f"{desc['build_seconds']:.2f}s build)")
         for n, a in plan["assignments"].items():
             print(f"  {n:14s} gmbs={a['gmbs']:4d} micro={a['micro_batch']:3d} "
@@ -146,9 +156,11 @@ def main(argv=None):
         met = sess.step()
         tokens_seen += int(met["tokens"])
         if step % args.log_every == 0:
+            tps = sess.telemetry.tokens_per_sec
             print(f"step {step:4d} loss={float(met['loss']):.4f} "
                   f"gnorm={float(met['grad_norm']):.3f} "
-                  f"tokens={tokens_seen}")
+                  f"tokens={tokens_seen}"
+                  + (f" tok/s={tps:.0f}" if tps else ""))
         if args.replan_every and step and step % args.replan_every == 0:
             rep = sess.maybe_replan()
             if rep is not None:

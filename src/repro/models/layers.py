@@ -51,9 +51,14 @@ def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
 
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: (..., S, D); positions: (S,) or broadcastable to x[..., :, 0]."""
+    """x: (..., S, D); positions: (S,), or (B, S) per-row positions
+    (packed sequences restart each document at 0), or broadcastable to
+    x[..., :, 0]."""
     freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
-    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 2 and x.ndim == 4:  # (B, S) against (B, H, S, D)
+        pos = pos[:, None, :]
+    angles = pos[..., :, None] * freqs                     # (..., S, D/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -76,14 +81,17 @@ def attention_init(key, cfg, dtype=jnp.bfloat16) -> Dict:
 
 
 def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
-                      q_offset: int = 0, q_chunk: int = 1024, kv_chunk: int = 1024):
+                      q_offset: int = 0, q_chunk: int = 1024,
+                      kv_chunk: int = 1024, segment_ids=None):
     """Two-level online-softmax attention, GQA-native.
     q: (B,Hq,Sq,D); k/v: (B,Hkv,Skv,D) with Hq % Hkv == 0 — each group of
     Hq//Hkv query heads reads its KV head through a grouped einsum, so
-    K/V are never replicated to Hq heads.
+    K/V are never replicated to Hq heads. ``segment_ids``: optional
+    (B, S) int32 packed-document ids (0 = pad) masking attention to
+    within equal nonzero ids.
 
     Linear memory in sequence length; computes the full rectangle of blocks
-    (masked) — block skipping is a hillclimb item for the Pallas kernel.
+    (masked) — block skipping is the Pallas kernel's win.
     """
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
@@ -104,17 +112,32 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
     #                                          (nq, B, Hkv, G, qc, D)
     kb = kp.reshape(B, Hkv, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
     vb = vp.reshape(B, Hkv, nkv, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    qsegb = ksegb = None
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        qseg_p = jnp.pad(seg, ((0, 0), (0, pad_q))) if pad_q else seg
+        kseg_p = jnp.pad(seg, ((0, 0), (0, pad_kv))) if pad_kv else seg
+        qsegb = qseg_p.reshape(B, nq, q_chunk).transpose(1, 0, 2)   # (nq,B,qc)
+        ksegb = kseg_p.reshape(B, nkv, kv_chunk).transpose(1, 0, 2)  # (nkv,B,kc)
 
     q_pos_base = jnp.arange(q_chunk)
     kv_pos_base = jnp.arange(kv_chunk)
 
     def q_step(_, qi_q):
-        qi, qblk = qi_q
+        if segment_ids is not None:
+            qi, qblk, qsegblk = qi_q
+        else:
+            qi, qblk = qi_q
+            qsegblk = None
         qpos = q_offset + qi * q_chunk + q_pos_base          # (qc,)
 
         def kv_step(carry, ki_kv):
             m, l, acc = carry
-            ki, kblk, vblk = ki_kv
+            if segment_ids is not None:
+                ki, kblk, vblk, ksegblk = ki_kv
+            else:
+                ki, kblk, vblk = ki_kv
+                ksegblk = None
             kpos = ki * kv_chunk + kv_pos_base               # (kc,)
             s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
                            preferred_element_type=jnp.float32) * scale
@@ -124,12 +147,16 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
                 mask = mask & (qpos[:, None] >= kpos[None, :])
             if window is not None:
                 mask = mask & (qpos[:, None] - kpos[None, :] < window)
-            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            mask_b = mask[None]                              # (1|B, qc, kc)
+            if ksegblk is not None:
+                mask_b = mask_b & (qsegblk[:, :, None] == ksegblk[:, None, :])
+                mask_b = mask_b & (ksegblk[:, None, :] > 0)
+            s = jnp.where(mask_b[:, None, None], s, -jnp.inf)
             m_new = jnp.maximum(m, s.max(axis=-1))
             # guard fully-masked rows
             m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
             p = jnp.exp(s - m_safe[..., None])
-            p = jnp.where(mask[None, None, None], p, 0.0)
+            p = jnp.where(mask_b[:, None, None], p, 0.0)
             corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
             corr = jnp.where(jnp.isinf(m), 0.0, corr)
             l_new = l * corr + p.sum(axis=-1)
@@ -141,12 +168,15 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
         init = (jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32),
                 jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
                 jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, init, (jnp.arange(nkv), kb, vb))
+        kv_xs = ((jnp.arange(nkv), kb, vb, ksegb)
+                 if segment_ids is not None else (jnp.arange(nkv), kb, vb))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, kv_xs)
         out = acc / jnp.maximum(l, 1e-20)[..., None]
         return None, out.astype(q.dtype)
 
-    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    q_xs = ((jnp.arange(nq), qb, qsegb)
+            if segment_ids is not None else (jnp.arange(nq), qb))
+    _, outs = jax.lax.scan(q_step, None, q_xs)
     # (nq, B, Hkv, G, qc, D) -> (B, Hq, Sq, D)
     out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * q_chunk, D)
     return out[:, :, :Sq]
@@ -154,12 +184,15 @@ def _chunk_attn_flash(q, k, v, *, causal: bool, window: Optional[int],
 
 def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
                     window: Optional[int] = None, impl: str = "reference",
-                    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+                    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    segment_ids=None):
     """Full-sequence attention (train / prefill).
 
     x: (B, S, d_model). ``kv_override`` supplies external K/V inputs
     (cross-attention): tuple of (B, S_kv, d_model) source hidden states is
-    projected by wk/wv.
+    projected by wk/wv. ``segment_ids``: optional (B, S) int32
+    packed-document ids (0 = pad) — self-attention is confined within
+    equal nonzero ids on every impl (ignored for cross-attention).
     """
     B, S, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -178,11 +211,14 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
     k = constrain(k, ("batch", "kv_heads", None, None))
     v = constrain(v, ("batch", "kv_heads", None, None))
     causal = (mask_mode == "causal") and kv_override is None
+    if kv_override is not None:
+        segment_ids = None  # cross-attention: sources are not packed
     if impl == "pallas" and kv_override is None:
         # differentiable Pallas kernel (custom_vjp) — safe under
         # jax.value_and_grad and gradient accumulation
         from repro.kernels import ops as kops
-        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+        out = kops.flash_attention(q, k, v, segment_ids, causal=causal,
+                                   window=window)
     elif impl == "naive":
         # one-shot einsum attention: used ONLY by the dry-run cost pass
         # (XLA cost_analysis does not multiply loop bodies by trip count,
@@ -201,12 +237,18 @@ def attention_apply(params, x, cfg, *, positions=None, mask_mode="causal",
             mask &= qpos >= kpos
         if window is not None:
             mask &= (qpos - kpos) < window
-        s = jnp.where(mask[None, None, None], s, -1e30)
+        mask_b = mask[None]                                  # (1|B, Sq, Skv)
+        if segment_ids is not None:
+            seg = segment_ids
+            mask_b = mask_b & (seg[:, :, None] == seg[:, None, :])
+            mask_b = mask_b & (seg[:, None, :] > 0)
+        s = jnp.where(mask_b[:, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v
                          ).reshape(B_, Hq_, Sq_, D_)
     else:
-        out = _chunk_attn_flash(q, k, v, causal=causal, window=window)
+        out = _chunk_attn_flash(q, k, v, causal=causal, window=window,
+                                segment_ids=segment_ids)
     out = constrain(out, ("batch", "heads", None, None))
     y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(y, ("batch", None, "embed"))

@@ -136,14 +136,15 @@ def init_model(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _apply_block(kind: str, bp, x, cfg, *, window, impl, enc_out=None,
-                 cross_p=None, positions=None):
+                 cross_p=None, positions=None, segment_ids=None):
     """Returns (x, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN, BLOCK_MOE):
         h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, impl=impl)
         mode = "causal" if cfg.causal else "full"
         x = x + L.attention_apply(bp["attn"], h, cfg, positions=positions,
-                                  mask_mode=mode, window=window, impl=impl)
+                                  mask_mode=mode, window=window, impl=impl,
+                                  segment_ids=segment_ids)
         if cross_p is not None:
             h = L.rmsnorm(cross_p["norm"], x, cfg.norm_eps, impl=impl)
             x = x + L.attention_apply(cross_p["attn"], h, cfg,
@@ -169,7 +170,8 @@ def _apply_block(kind: str, bp, x, cfg, *, window, impl, enc_out=None,
 
 
 def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
-               unroll: bool = False, stream=None):
+               unroll: bool = False, stream=None, positions=None,
+               segment_ids=None):
     unit, n_rep = pattern_unit(cfg)
     shared = params.get("shared")
     cross = params.get("cross")  # (layers,...) stacked — only for uniform attn decoders
@@ -183,7 +185,8 @@ def _run_stack(params, x, cfg, *, window, impl, enc_out=None,
             if cross_slice is not None and kind in (BLOCK_ATTN, BLOCK_MOE):
                 cp = cross_slice
             x, a = _apply_block(kind, bp, x, cfg, window=window, impl=impl,
-                                enc_out=enc_out, cross_p=cp)
+                                enc_out=enc_out, cross_p=cp,
+                                positions=positions, segment_ids=segment_ids)
             aux = aux + a
         return (x, aux), None
 
@@ -314,12 +317,16 @@ def forward(params, cfg: ModelConfig, batch: Dict, *, window=None,
             impl: str = "reference", unroll: bool = False, stream=None):
     """Returns (final hidden states (B,S,d), aux_loss). ``stream`` (a
     core/overlap.LayerStream) switches the layer scan to gathered-from-
-    shards streaming for the scheduled ZeRO-3 path."""
+    shards streaming for the scheduled ZeRO-3 path. Packed batches carry
+    ``segment_ids`` (B,S) int32 (0 = pad) and per-document-reset
+    ``positions`` (B,S) int32; both thread into every attention block."""
     enc_out = (_encode(params, cfg, batch, impl, unroll=unroll)
                if cfg.encoder_layers else None)
     x = _embed_inputs(params, cfg, batch, impl)
     x, aux = _run_stack(params, x, cfg, window=window, impl=impl,
-                        enc_out=enc_out, unroll=unroll, stream=stream)
+                        enc_out=enc_out, unroll=unroll, stream=stream,
+                        positions=batch.get("positions"),
+                        segment_ids=batch.get("segment_ids"))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, impl=impl)
     return x, aux
 

@@ -1,0 +1,363 @@
+"""Ragged-throughput tests: sequence packing, segment-aware attention,
+effective-token planning, and the satellite plumbing (tokens/sec EMA,
+profile cache, overlap calibration).
+
+The NaN-probe test is the load-bearing one for the kernels: it proves the
+``pl.when`` segment block-skip really never *reads* a fully-disjoint K/V
+tile (masking alone would still read it, and 0 * NaN = NaN would leak).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.allocation import allocate_stage01, fit_curve
+from repro.core.cluster import cluster_B, make_cluster
+from repro.core.hetero import layout_from_plan
+from repro.core.overlap import SCHEDULED_OVERLAP_FACTOR, calibrate_overlap_factor
+from repro.core.planner import make_runners, plan
+from repro.core.profiler import StepSegments, profile_cluster
+from repro.core.telemetry import EMAWindow
+from repro.core.workload import (PackedWorkload, train_flops_per_row,
+                                 train_flops_per_token)
+from repro.data.pipeline import (HeteroDataLoader, MixedLengthDocs,
+                                 pack_documents)
+from repro.kernels.flash_attention import flash_attention_vjp
+from repro.models import model as mm
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def _seg_row(seq, seg_lens):
+    """Contiguous segments 1..n then pad 0 — the pack_documents layout."""
+    row = np.zeros(seq, np.int32)
+    off = 0
+    for sid, L in enumerate(seg_lens, start=1):
+        row[off:off + L] = sid
+        off += L
+    assert off <= seq
+    return row
+
+
+# ---------------------------------------------------------------------------
+# packer: fill efficiency + emitted layout invariants
+# ---------------------------------------------------------------------------
+
+def test_pack_documents_layout_and_fill():
+    seq, rows = 64, 8
+    src = MixedLengthDocs(1000, seq, min_len=8, seed=3)
+    budget = int(round(rows * seq * HeteroDataLoader.PACK_OVERDRAW
+                       / src.mean_doc_len))
+    fields, stats = pack_documents(src.documents(budget, 0), rows, seq)
+    # FFD reaches single-digit-ish pad fractions; the padded baseline
+    # (one doc per row) wastes >= 40% of the slots on the same stream
+    assert stats.pad_fraction < 0.15
+    padded = src.rows(rows, 0)
+    padded_fill = float((padded[:, 1:] != 0).mean())
+    assert 1.0 - padded_fill >= 0.40
+    seg, pos, lm = (fields["segment_ids"], fields["positions"],
+                    fields["loss_mask"])
+    # loss mask == real-token indicator; positions restart per document;
+    # segment ids are contiguous runs 1..n per row
+    np.testing.assert_array_equal(lm, (seg > 0).astype(np.float32))
+    for r in range(rows):
+        ids = seg[r][seg[r] > 0]
+        if ids.size == 0:
+            continue
+        uniq = np.unique(ids)
+        np.testing.assert_array_equal(uniq, np.arange(1, uniq.size + 1))
+        # contiguous: sorted run order (FFD appends left to right)
+        assert np.all(np.diff(ids) >= 0)
+        for sid in uniq:
+            np.testing.assert_array_equal(
+                pos[r][seg[r] == sid], np.arange(int((seg[r] == sid).sum())))
+
+
+# ---------------------------------------------------------------------------
+# kernel: packed parity + the NaN block-skip probe
+# ---------------------------------------------------------------------------
+
+def _ref_attention(q, k, v, seg, causal, window):
+    """Dense jnp oracle with the same (q_seg == k_seg) & (k_seg != 0) mask.
+
+    Finite -1e9 masking keeps fully-masked pad rows NaN-free; only
+    non-pad positions are ever compared.
+    """
+    Hq, Hkv = q.shape[1], k.shape[1]
+    kx = jnp.repeat(k, Hq // Hkv, axis=1)
+    vx = jnp.repeat(v, Hq // Hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kx) / jnp.sqrt(q.shape[-1])
+    m = (seg[:, None, :, None] == seg[:, None, None, :]) \
+        & (seg[:, None, None, :] != 0)
+    idx = jnp.arange(q.shape[2])
+    if causal:
+        m = m & (idx[:, None] >= idx[None, :])
+    if window is not None:
+        m = m & (idx[:, None] - idx[None, :] < window)
+    p = jax.nn.softmax(jnp.where(m, s, -1e9), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_flash_segment_parity_fwd_and_grads(window):
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    q, k, v = _rand(B, Hq, S, D), _rand(B, Hkv, S, D), _rand(B, Hkv, S, D)
+    seg = jnp.asarray(np.stack([_seg_row(S, [40, 50, 30]),     # 8 pad slots
+                                _seg_row(S, [60, 68])]))       # full row
+    real = (np.asarray(seg) > 0)[:, None, :, None]             # (B,1,S,1)
+    cot = _rand(B, Hq, S, D) * real                            # 0 at pads
+
+    def f_kernel(q, k, v):
+        out = flash_attention_vjp(q, k, v, seg, causal=True, window=window,
+                                  block_q=32, block_k=32, interpret=True)
+        return jnp.sum(out * cot), out
+
+    def f_ref(q, k, v):
+        out = _ref_attention(q, k, v, seg, causal=True, window=window)
+        return jnp.sum(out * cot), out
+
+    (_, out_k), grads_k = jax.value_and_grad(f_kernel, (0, 1, 2),
+                                             has_aux=True)(q, k, v)
+    (_, out_r), grads_r = jax.value_and_grad(f_ref, (0, 1, 2),
+                                             has_aux=True)(q, k, v)
+    np.testing.assert_allclose(np.asarray(out_k * real),
+                               np.asarray(out_r * real),
+                               rtol=2e-3, atol=2e-3)
+    for gk, gr, name in zip(grads_k, grads_r, "qkv"):
+        np.testing.assert_allclose(np.asarray(gk * (real if name == "q"
+                                                    else 1.0)),
+                                   np.asarray(gr * (real if name == "q"
+                                                    else 1.0)),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"d{name}")
+
+
+def test_segment_block_skip_never_reads_disjoint_tiles():
+    """Poison V rows of a K tile fully inside an *earlier* segment: if the
+    pl.when skip works, later segments' outputs stay finite (the tile is
+    never read); with masking alone, 0 * NaN = NaN would leak through."""
+    B, H, S, D, blk = 1, 2, 128, 32, 32
+    q, k = _rand(B, H, S, D), _rand(B, H, S, D)
+    v = np.asarray(_rand(B, H, S, D)).copy()
+    # seg1 rows 0..49, seg2 rows 50..99, pad 100..127; K tile [0, 32) is
+    # fully seg1 and fully disjoint from every q tile at rows >= 64
+    seg = jnp.asarray(_seg_row(S, [50, 50])[None])
+    v[:, :, :blk, :] = np.nan
+    v = jnp.asarray(v)
+    out = flash_attention_vjp(q, k, v, seg, causal=True,
+                              block_q=blk, block_k=blk, interpret=True)
+    # q tiles [64,96) and [96,128) have nonzero-seg range {2} — disjoint
+    # from the poisoned tile's {1}, so rows 64..99 must be finite
+    assert bool(jnp.all(jnp.isfinite(out[:, :, 64:100, :])))
+    # seg1's own rows legitimately read the poisoned values
+    assert not bool(jnp.all(jnp.isfinite(out[:, :, :50, :])))
+    # sanity: without segment ids the causal mask alone reads the tile
+    out_noseg = flash_attention_vjp(q, k, v, None, causal=True,
+                                    block_q=blk, block_k=blk, interpret=True)
+    assert not bool(jnp.all(jnp.isfinite(out_noseg[:, :, 64:100, :])))
+
+
+# ---------------------------------------------------------------------------
+# model: packed loss == padded per-document loss (same documents)
+# ---------------------------------------------------------------------------
+
+def test_model_packed_loss_matches_padded():
+    cfg = get_config("llama-0.5b", reduced=True)
+    seq, rows = 64, 2
+    src = MixedLengthDocs(cfg.vocab_size, seq, min_len=8, max_len=30, seed=5)
+    docs = src.documents(6, 0)
+    fields, stats = pack_documents(docs, rows, seq)
+    assert stats.n_dropped == 0 and stats.n_packed == len(docs)
+    params, _ = mm.init_model(jax.random.PRNGKey(0), cfg)
+
+    packed = {k: jnp.asarray(v) for k, v in fields.items()}
+    loss_p, met_p = mm.loss_fn(params, cfg, packed, impl="reference")
+
+    # padded baseline: one doc per row, default positions, no segments
+    pad = np.zeros((len(docs), seq + 1), np.int32)
+    for i, d in enumerate(docs):
+        pad[i, :len(d)] = d[:seq + 1]
+    batch = {"tokens": jnp.asarray(pad[:, :-1]),
+             "labels": jnp.asarray(pad[:, 1:]),
+             "loss_mask": jnp.asarray((pad[:, 1:] != 0).astype(np.float32))}
+    loss_d, met_d = mm.loss_fn(params, cfg, batch, impl="reference")
+
+    assert int(met_p["tokens"]) == int(met_d["tokens"]) == stats.real_tokens
+    np.testing.assert_allclose(float(loss_p), float(loss_d), rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# loader: packed stream through the hetero layout, seek/relayout purity
+# ---------------------------------------------------------------------------
+
+def _layout(gbs=16, seq=64):
+    cfg = get_config("llama-0.5b")
+    cluster = make_cluster("t", [("V100-16G", 2), ("T4-16G", 2)])
+    runners = make_runners(cluster, cfg, seq, 0)
+    curves = {n: fit_curve(p)
+              for n, p in profile_cluster(runners, 0).items()}
+    return layout_from_plan(allocate_stage01(curves, gbs))
+
+
+def test_packed_loader_fill_and_fields():
+    seq = 64
+    layout = _layout(16, seq)
+    src = MixedLengthDocs(1000, seq, min_len=8, seed=1)
+    packed = HeteroDataLoader(src, layout, seq, packing=True).next_batch()
+    padded = HeteroDataLoader(src, layout, seq).next_batch()
+    for name in ("tokens", "labels", "segment_ids", "positions",
+                 "loss_mask"):
+        assert name in packed, name
+    cap = layout.total_real() * seq
+    frac_packed = 1.0 - float(packed["loss_mask"].sum()) / cap
+    frac_padded = 1.0 - float(padded["loss_mask"].sum()) / cap
+    assert frac_packed < 0.15
+    assert frac_padded >= 0.40
+    # labels are next-token shifted within every segment
+    seg, tok, lab = (packed[k] for k in ("segment_ids", "tokens", "labels"))
+    inner = (seg[:, :, 1:] == seg[:, :, :-1]) & (seg[:, :, 1:] > 0)
+    np.testing.assert_array_equal(tok[:, :, 1:][inner], lab[:, :, :-1][inner])
+
+
+def test_packed_loader_seek_and_relayout_are_pure():
+    seq = 64
+    layout = _layout(16, seq)
+    src = MixedLengthDocs(1000, seq, min_len=8, seed=2)
+    a = HeteroDataLoader(src, layout, seq, packing=True)
+    batches = [a.next_batch() for _ in range(3)]
+    b = HeteroDataLoader(src, layout, seq, packing=True)
+    b.seek(2)
+    replay = b.next_batch()
+    for name, arr in batches[2].items():
+        np.testing.assert_array_equal(arr, replay[name], err_msg=name)
+    # relayout with seek: same stream position, new layout — stats agree
+    c = HeteroDataLoader(src, layout, seq, packing=True)
+    c.relayout(_layout(24, seq), seek=2)
+    c.next_batch()
+    assert c.last_pack_stats.pad_fraction < 0.15
+
+
+# ---------------------------------------------------------------------------
+# planner: effective-token pricing moves the hetero allocation
+# ---------------------------------------------------------------------------
+
+def test_train_flops_per_row_effective_tokens():
+    cfg = get_config("llama-0.5b")
+    seq = 4096
+    base = train_flops_per_row(cfg, seq)
+    assert base == pytest.approx(train_flops_per_token(cfg, seq) * seq)
+    # pure fill discount: linear in token_fraction at unchanged span
+    half = train_flops_per_row(cfg, seq,
+                               PackedWorkload(0.5, mean_segment_len=seq))
+    assert half == pytest.approx(0.5 * base)
+    # shorter segments shrink the quadratic attention term too
+    short = train_flops_per_row(cfg, seq, PackedWorkload(1.0, 128.0))
+    assert short < base
+    assert short == pytest.approx(train_flops_per_token(cfg, 128) * seq)
+    # stats clamp into [0, 1]
+    stats = dataclasses.make_dataclass(
+        "S", ["pad_fraction", "mean_segment_len"])(-0.2, 64.0)
+    pw = PackedWorkload.from_stats(stats)
+    assert pw.token_fraction == 1.0 and pw.mean_segment_len == 64.0
+
+
+def test_planner_allocation_shifts_under_packed_pricing():
+    """The acceptance scenario: pricing the packed workload changes the
+    hetero batch split (pad-heavy compute overweights the fast devices;
+    the effective workload hands rows back to the slow ones)."""
+    cfg = get_config("llama-0.5b")
+    pw = PackedWorkload(token_fraction=0.6, mean_segment_len=128.0)
+    p0 = plan(cluster_B(), cfg, 128, 4096, zero_stage=3)
+    p1 = plan(cluster_B(), cfg, 128, 4096, zero_stage=3, packed=pw)
+    a0 = {n: a.gmbs for n, a in p0.allocation.assignments.items()}
+    a1 = {n: a.gmbs for n, a in p1.allocation.assignments.items()}
+    assert sum(a0.values()) == sum(a1.values()) == 128
+    assert a0 != a1
+    # the packed plan shifts rows toward the slower T4s: with the
+    # compute-per-row discounted, the comm/compute balance at stage 3
+    # lets them carry more of the batch
+    t4 = [n for n in a0 if n.startswith("T4")]
+    assert sum(a1[n] for n in t4) > sum(a0[n] for n in t4)
+    # both plans still simulate
+    assert p0.predicted.iter_time > 0 and p1.predicted.iter_time > 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: tokens/sec EMA, profile cache, overlap calibration
+# ---------------------------------------------------------------------------
+
+def test_ema_window_tokens_per_sec():
+    w = EMAWindow(alpha=0.5)
+    w.record(9.0, tokens=1.0)          # warmup: timed the jit compile
+    assert w.tokens_per_sec is None
+    w.record(0.5, tokens=100.0)
+    assert w.tokens_per_sec == pytest.approx(200.0)
+    w.record(0.5, tokens=50.0)
+    assert w.tokens_per_sec == pytest.approx(0.5 * 100.0 + 0.5 * 200.0)
+    # tokens-less records (padded callers) leave the EMA untouched
+    w.record(0.5)
+    assert w.tokens_per_sec == pytest.approx(150.0)
+    w.reset()
+    assert w.tokens_per_sec is None and w.value is None
+
+
+class _CountingRunner:
+    """Minimal DeviceRunner that counts real executions."""
+    source = "measured"
+    dedupe_key = None
+
+    def __init__(self, cache_key):
+        self.cache_key = cache_key
+        self.calls = 0
+
+    def memory_capacity_bytes(self):
+        return 16e9
+
+    def memory_bytes_at(self, batch):
+        return 1e9 + batch * 2e9
+
+    def run_step(self, batch):
+        self.calls += 1
+        if self.memory_bytes_at(batch) > self.memory_capacity_bytes():
+            from repro.core.profiler import SimOOM
+            raise SimOOM("oom")
+        return StepSegments(fwd=1e-3 * batch, bwd=2e-3 * batch)
+
+
+def test_profile_cache_skips_reprofiling():
+    cache = {}
+    r1 = _CountingRunner(("cfg", 64, 0, "kind"))
+    first = profile_cluster({"d#1": r1}, 0, cache=cache)
+    assert r1.calls > 0 and first["d#1"].probes == r1.calls
+    assert ("cfg", 64, 0, "kind") in cache
+    # fresh runner, same persistent identity: served from cache, zero runs
+    r2 = _CountingRunner(("cfg", 64, 0, "kind"))
+    second = profile_cluster({"d#1": r2}, 0, cache=cache)
+    assert r2.calls == 0
+    assert second["d#1"].probes == 0
+    assert second["d#1"].shared_from is None  # hit lives in a prior call
+    assert second["d#1"].mbs == first["d#1"].mbs
+    assert second["d#1"].source == "measured"
+    # different workload identity misses
+    r3 = _CountingRunner(("cfg", 128, 0, "kind"))
+    profile_cluster({"d#1": r3}, 0, cache=cache)
+    assert r3.calls > 0
+
+
+def test_calibrate_overlap_factor():
+    # scheduled hid 0.7s of 1.0s comm
+    assert calibrate_overlap_factor(2.0, 1.3, 1.0) == pytest.approx(0.7)
+    # never credits full hiding: clamped at 0.95
+    assert calibrate_overlap_factor(2.0, 0.9, 1.0) == 0.95
+    # degenerate probes fall back to the static default
+    fb = SCHEDULED_OVERLAP_FACTOR
+    assert calibrate_overlap_factor(0.0, 1.0, 1.0) == fb
+    assert calibrate_overlap_factor(2.0, 1.3, 0.0) == fb
+    assert calibrate_overlap_factor(1.0, 1.2, 0.5) == fb  # sched slower
+    assert calibrate_overlap_factor(2.0, 1.3, 1.0, fallback=0.5) != 0.5
