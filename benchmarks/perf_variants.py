@@ -462,6 +462,84 @@ def elastic_replan_rows() -> List[str]:
         f"loss_finite={d['loss_finite']}")]
 
 
+_ROBUST_SUBPROC = r"""
+import os, json, time, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from repro.api import FaultPolicy, FaultSchedule, Session, Supervisor
+from repro.checkpoint import committed_steps
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+
+cfg = get_config("llama-0.5b", reduced=True)
+sess = Session.build(cfg, make_cluster("c8", [("V100-16G", 4),
+                                              ("T4-16G", 4)], 12.0),
+                     gbs=16, seq=64, zero=3, impl="reference", lr=1e-3)
+sess.step()                               # compile + warm up
+times = []
+for _ in range(5):
+    t0 = time.perf_counter()
+    m = sess.step()
+    jax.block_until_ready(m["loss"])
+    times.append(time.perf_counter() - t0)
+step_s = sorted(times)[len(times) // 2]
+
+# checkpoint stall: how long does save() hold the training loop? The
+# blocking path pays gather + serialize + write + fsync + rename; the
+# async path pays only the device->host gather (the rest commits on the
+# background thread).
+ckpt = tempfile.mkdtemp()
+t0 = time.perf_counter()
+sess.save(ckpt)
+blocking_stall = time.perf_counter() - t0
+t0 = time.perf_counter()
+pend = sess.save(ckpt, async_=True)
+async_stall = time.perf_counter() - t0
+pend.result(120)                          # the write itself still lands
+
+# recovery cost: lose two devices mid-step under the supervisor and
+# time the absorb (drain + re-plan + reshard onto the six survivors)
+sched = FaultSchedule().lose(int(sess.state.step), "T4-16G#3", "T4-16G#4")
+sup = Supervisor(sess, FaultPolicy(min_devices=4), sched, ckpt_path=ckpt)
+t0 = time.perf_counter()
+m = sup.step()
+recovery_s = time.perf_counter() - t0
+ev = {e.kind: e.seconds for e in sup.events}
+out = {"step_ms": step_s * 1e3,
+       "blocking_stall_ms": blocking_stall * 1e3,
+       "async_stall_ms": async_stall * 1e3,
+       "recovery_ms": recovery_s * 1e3,
+       "replan_recovery_ms": ev.get("replan_recovered", 0.0) * 1e3,
+       "new_devices": sup.session.cluster.n,
+       "committed": committed_steps(ckpt),
+       "loss_finite": bool(np.isfinite(float(m["loss"])))}
+print("ROBUST_JSON " + json.dumps(out))
+"""
+
+
+def robustness_async_ckpt_rows() -> List[str]:
+    """Fault-tolerance overhead rows (subprocess, 8-placeholder-device
+    CPU mesh): the training-loop stall of an async save vs the blocking
+    commit protocol, and the wall cost of absorbing a two-device loss
+    through the supervised step loop (drain + re-plan + reshard),
+    expressed in train-step equivalents."""
+    d = _run_subproc_json(_ROBUST_SUBPROC, "ROBUST_JSON")
+    step_ms = max(d["step_ms"], 1e-9)
+    return [csv_row(
+        "perf/robustness/async_ckpt/8dev_cpu", d["async_stall_ms"] * 1e3,
+        f"async_stall_ms={d['async_stall_ms']:.2f};"
+        f"blocking_stall_ms={d['blocking_stall_ms']:.2f};"
+        f"stall_ratio={d['async_stall_ms'] / max(d['blocking_stall_ms'], 1e-9):.3f};"
+        f"async_stall_lt_blocking="
+        f"{d['async_stall_ms'] < d['blocking_stall_ms']};"
+        f"step_ms={d['step_ms']:.2f};"
+        f"recovery_ms={d['recovery_ms']:.2f};"
+        f"recovery_steps_equivalent={d['recovery_ms'] / step_ms:.2f};"
+        f"survivors={d['new_devices']};"
+        f"loss_finite={d['loss_finite']}")]
+
+
 def run() -> List[str]:
     base: Dict = {}
     variants = []
@@ -529,6 +607,11 @@ def run() -> List[str]:
         rows.extend(ragged_packing_rows())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/ragged/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(robustness_async_ckpt_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/robustness/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

@@ -26,7 +26,9 @@ def _parse_derived(derived: str) -> dict:
                 "hidden_comm_bytes", "kv_bytes_saved_per_step", "speedup",
                 "replan_ms", "step_ms", "steps_equivalent",
                 "packed_tokens_per_sec", "padded_tokens_per_sec",
-                "pad_fraction_packed", "pad_fraction_padded"):
+                "pad_fraction_packed", "pad_fraction_padded",
+                "async_stall_ms", "blocking_stall_ms", "recovery_ms",
+                "recovery_steps_equivalent"):
         # anchor on a field boundary: the bare "ms" key must not match
         # inside "replan_ms=…" / "step_ms=…"
         m = re.search(rf"(?:^|;){key}=([-0-9.eE]+)x?(?:;|$)", derived)

@@ -8,14 +8,30 @@
 init → register_axes → shardings → device_put → make_*_step → jit
 ceremony; `build_step` is the unified step constructor underneath it and
 `TrainState` the state pytree that carries the logical axes in-state.
+
+The fault-tolerance surface rides on the same facade: `Session.save`
+grows async + retention modes, `Supervisor` wraps the step loop with
+retry / re-plan / restore recovery, and `FaultSchedule` scripts
+deterministic fault plans for tests and benchmarks.
 """
 from repro.api.session import Session
 from repro.api.state import (StaticAxes, TrainState, host_train_state,
                              new_train_state)
 from repro.api.steps import ProbeHarness, build_step, step_io
-from repro.core.telemetry import (DriftConfig, DriftReport, EMAWindow,
+from repro.checkpoint import AsyncCheckpointWriter, PendingSave, SimulatedCrash
+from repro.core.faults import (DeviceLossError, FaultPolicy, FaultSchedule,
+                               FaultToleranceExhausted, Supervisor,
+                               TransientStepError, classify_fault,
+                               drop_devices)
+from repro.core.telemetry import (DeviceTimers, DriftConfig, DriftReport,
+                                  EMAWindow, EventLog, FaultEvent,
                                   ReplanReport)
 
 __all__ = ["Session", "TrainState", "StaticAxes", "new_train_state",
            "host_train_state", "build_step", "step_io", "ProbeHarness",
-           "DriftConfig", "DriftReport", "EMAWindow", "ReplanReport"]
+           "DriftConfig", "DriftReport", "EMAWindow", "ReplanReport",
+           "DeviceTimers", "EventLog", "FaultEvent",
+           "FaultSchedule", "FaultPolicy", "Supervisor", "classify_fault",
+           "drop_devices", "DeviceLossError", "TransientStepError",
+           "FaultToleranceExhausted",
+           "AsyncCheckpointWriter", "PendingSave", "SimulatedCrash"]

@@ -54,13 +54,15 @@ import jax.numpy as jnp
 
 from repro.api import steps as _steps
 from repro.api.state import TrainState, host_train_state, new_train_state
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (AsyncCheckpointWriter, restore_checkpoint,
+                              save_checkpoint)
 from repro.configs.base import ModelConfig, get_config
 from repro.core import cluster as CL
 from repro.core.hetero import HeteroBatchLayout, layout_from_plan
 from repro.core.sharding import MeshRules
-from repro.core.telemetry import (DriftConfig, DriftReport, EMAWindow,
-                                  ReplanReport, detect_drift)
+from repro.core.telemetry import (DeviceTimers, DriftConfig, DriftReport,
+                                  EMAWindow, EventLog, ReplanReport,
+                                  detect_drift)
 from repro.core.zero import model_shardings
 from repro.launch.mesh import data_axis_size, make_debug_mesh
 from repro.models import model as mm
@@ -148,6 +150,21 @@ class Session:
         self.plan_seconds = 0.0
         self.telemetry = EMAWindow()
         self.drift_config = DriftConfig()
+        # per-device step-time EMAs feeding DriftReport.observed_imbalance
+        # (fed by _device_step_times — a proxy under single-process SPMD)
+        self.device_timers = DeviceTimers()
+        # pluggable per-device time source: fn(session, wall_dt) -> {dev: s}.
+        # None = the predicted-busy-share proxy. A multi-host deployment
+        # would install real per-host wall times here.
+        self.device_time_provider = None
+        # fault/recovery/checkpoint transition log, shared with the
+        # Supervisor and any AsyncCheckpointWriter this session creates
+        self.events = EventLog()
+        # deterministic fault plan (core.faults.FaultSchedule) — None
+        # means no injection anywhere on the hot path
+        self._fault_schedule = None
+        # one async writer per checkpoint directory, created lazily
+        self._writers: Dict[str, AsyncCheckpointWriter] = {}
         self.replans = 0
         self.last_replan: Optional[ReplanReport] = None
         # substrate calibration for drift detection: observed/predicted
@@ -158,6 +175,7 @@ class Session:
         self._zero_request: Optional[int] = None
         self._plan_seq: Optional[int] = None
         self._jit_step = None
+        self._jit_step_raw = None         # the jitted fn before injection
         self._prefill = None
         self._decode = None
         self._loader = None
@@ -492,7 +510,8 @@ class Session:
                 return state.replace(params=p, opt=o,
                                      step=state.step + 1), metrics
 
-            self._jit_step = jax.jit(state_step)
+            self._jit_step_raw = jax.jit(state_step)
+            self._apply_fault_wrapper()
         else:  # serve
             self._prefill = jax.jit(_steps.build_step(
                 cfg, rules, kind="prefill", window=self.window,
@@ -500,6 +519,86 @@ class Session:
             self._decode = jax.jit(_steps.build_step(
                 cfg, rules, kind="decode", window=self.window,
                 impl=self.impl))
+
+    def _apply_fault_wrapper(self):
+        """(Re)derive ``_jit_step`` from the raw jitted fn: plain when no
+        fault schedule is attached, wrapped with step-boundary injection
+        otherwise. Kept separate from ``_build_step_fns`` so attaching a
+        schedule does not force a re-jit."""
+        fn = self._jit_step_raw
+        if fn is not None and self._fault_schedule is not None:
+            fn = _steps.with_fault_injection(
+                fn, self._fault_schedule, lambda: int(self.state.step))
+        self._jit_step = fn
+
+    # ---------------------------------------------------------- faults --
+    def attach_faults(self, schedule) -> "Session":
+        """Arm a deterministic :class:`~repro.core.faults.FaultSchedule`
+        on this session. Step-boundary faults (device loss, transient
+        step failures) and straggler slowdowns inject through the step
+        wrapper; checkpoint IO faults inject through the save path's
+        ``io_hook``. This is the testing/benchmark surface — a real
+        deployment raises :class:`DeviceLossError` from its own health
+        monitoring instead."""
+        self._fault_schedule = schedule
+        self._apply_fault_wrapper()
+        for w in self._writers.values():
+            w.io_hook = self._ckpt_io_hook
+        return self
+
+    def _ckpt_io_hook(self, event: str, step: int) -> None:
+        """Checkpoint IO choke point: every write/rename in the commit
+        protocol announces itself here, and an attached schedule may
+        answer with OSError (retryable) or SimulatedCrash (fatal)."""
+        if self._fault_schedule is not None:
+            self._fault_schedule.checkpoint_io(event, step)
+
+    def drain(self) -> "Session":
+        """Discard in-flight work after a fault and restore the invariant
+        that the loader's position matches the last *applied* step.
+
+        Gradient accumulation runs inside one jitted step (a lax.scan),
+        and ``state.step`` advances only when that step returns — so a
+        step that failed mid-flight applied nothing: no partial
+        accumulator can leak. Draining therefore means (a) blocking on
+        whatever was dispatched so poisoned buffers surface now rather
+        than at the next use, and (b) rewinding the loader to
+        ``state.step`` so the interrupted batch replays in full — no
+        micro-step of it is lost or double-counted."""
+        try:
+            jax.block_until_ready(self.state)
+        except Exception:  # noqa: BLE001 — the fault that got us here may re-raise
+            pass
+        if self._loader is not None:
+            self._loader.seek(int(self.state.step))
+        return self
+
+    def _device_step_times(self, dt: float) -> Dict[str, float]:
+        """Best-available per-device step times for one observed step.
+
+        Single-process SPMD has no per-device clock: ``dt`` is the wall
+        time of the *whole* step, i.e. the max over devices. The proxy
+        distributes it over the plan's predicted per-device busy shares
+        (the planner's own imbalance model), scaled by any injected
+        straggler factor — so a ``FaultSchedule.slow()`` host shows up in
+        ``DriftReport.observed_imbalance`` exactly as a real straggler
+        would on a fleet with real timers. ``device_time_provider``
+        replaces the whole proxy when a better source exists."""
+        if self.device_time_provider is not None:
+            return self.device_time_provider(self, dt)
+        if self.plan is None or self.plan.predicted is None:
+            return {}
+        busy = getattr(self.plan.predicted, "device_busy", None) or {}
+        mx = max(busy.values(), default=0.0)
+        if mx <= 0:
+            return {}
+        step_idx = max(int(self.state.step) - 1, 0)
+        times = {}
+        for dev, b in busy.items():
+            factor = (self._fault_schedule.slow_factor(step_idx, device=dev)
+                      if self._fault_schedule is not None else 1.0)
+            times[dev] = dt * (b / mx) * factor
+        return times
 
     # ------------------------------------------------------- execution --
     def step(self, batch=None, *args):
@@ -546,8 +645,11 @@ class Session:
             # tokens is the loss-mask sum — *non-pad* tokens, so the
             # tokens/sec EMA measures useful throughput (packed and
             # padded runs are comparable on it; wall time alone is not)
-            self.telemetry.record(time.perf_counter() - t0,
-                                  tokens=float(metrics["tokens"]))
+            dt = time.perf_counter() - t0
+            self.telemetry.record(dt, tokens=float(metrics["tokens"]))
+            per_dev = self._device_step_times(dt)
+            if per_dev:
+                self.device_timers.record(per_dev)
             if (self._drift_baseline is None
                     and self.telemetry.count
                     >= self.drift_config.min_samples):
@@ -597,7 +699,8 @@ class Session:
             self._drift_baseline = self.telemetry.value / predicted
         return detect_drift(self.telemetry, predicted,
                             config or self.drift_config, busy,
-                            baseline=self._drift_baseline or 1.0)
+                            baseline=self._drift_baseline or 1.0,
+                            device_timers=self.device_timers)
 
     def maybe_replan(self, config: Optional[DriftConfig] = None,
                      profile: str = "measured") -> Optional[ReplanReport]:
@@ -679,7 +782,7 @@ class Session:
         rollback = (self.mesh, self.cluster, self.plan, self.layout,
                     self.rules, self.accum_steps, self.profile, self.gbs,
                     self._p_shardings, self._o_shardings, self._jit_step,
-                    self.state)
+                    self._jit_step_raw, self.state)
         try:
             self.profile, self.gbs = new_profile, new_gbs
             if new_cluster is not None:
@@ -717,24 +820,37 @@ class Session:
             # configuration and re-place the gathered state on it
             (self.mesh, self.cluster, self.plan, self.layout, self.rules,
              self.accum_steps, self.profile, self.gbs, self._p_shardings,
-             self._o_shardings, self._jit_step, self.state) = rollback
+             self._o_shardings, self._jit_step, self._jit_step_raw,
+             self.state) = rollback
             with self.mesh:
                 self.state = jax.device_put(host, self._state_shardings())
             if self._loader is not None:
                 self._loader.relayout(self.layout,
                                       seek=int(self.state.step))
+            # drop the telemetry that triggered this attempt: keeping the
+            # drifted EMA and the stale baseline would make maybe_replan
+            # re-fire immediately — a failed-replan loop with no new
+            # evidence. Fresh samples must re-establish drift first.
+            self.telemetry.reset()
+            self.device_timers.reset()
+            self._drift_baseline = None
             raise
         reshard_seconds = time.time() - tr
 
         self.plan_seconds = plan_seconds
         self.telemetry.reset()
+        self.device_timers.reset()
         self._drift_baseline = None          # new plan, new calibration
         self.replans += 1
         self._meta.update({
             "cluster": _cluster_meta(new_cluster), "gbs": self.gbs,
             "zero": stage, "profile": self.profile})
         self.last_replan = ReplanReport(
-            trigger="cluster" if cluster is not None else trigger,
+            # an explicit cluster= with the default trigger is a
+            # membership change; callers that name their trigger (the
+            # Supervisor's "fault", maybe_replan's "drift") keep it
+            trigger=("cluster" if cluster is not None
+                     and trigger == "explicit" else trigger),
             plan_seconds=plan_seconds, reshard_seconds=reshard_seconds,
             old_devices=old_devices,
             new_devices=(new_cluster.n if new_cluster is not None
@@ -872,14 +988,59 @@ class Session:
                                    remat=self.cfg.remat)
 
     # ---------------------------------------------------- save/restore --
-    def save(self, path: str) -> str:
+    def save(self, path: str, *, async_: bool = False,
+             keep_last: Optional[int] = None):
         """Checkpoint params/opt/step plus the session recipe; restore
-        with :meth:`Session.restore`."""
+        with :meth:`Session.restore`.
+
+        ``async_=False`` (default) blocks through the whole atomic commit
+        protocol and returns the payload path. ``async_=True`` pays only
+        for the device→host snapshot on the critical path — serialization,
+        write, fsync, rename and retention run on a background thread —
+        and returns a :class:`~repro.checkpoint.PendingSave` (``.result()``
+        to join one save, :meth:`flush_saves` to join them all).
+        ``keep_last=N`` prunes all but the newest N committed checkpoints
+        after each successful commit."""
         if self.mode != "train":
             raise RuntimeError("save() is train-mode only")
-        return save_checkpoint(path, int(self.state.step), self.state.params,
-                               self.state.opt,
-                               metadata={"session": self._meta})
+        meta = {"session": self._meta}
+        if not async_:
+            out = save_checkpoint(path, int(self.state.step),
+                                  self.state.params, self.state.opt,
+                                  metadata=meta, keep_last=keep_last,
+                                  io_hook=self._ckpt_io_hook)
+            self.events.emit("ckpt_committed", step=int(self.state.step),
+                             detail="blocking")
+            return out
+        writer = self._writer_for(path, keep_last)
+        # the snapshot is the only part that must see live state: gather
+        # to host numpy, after which training may keep mutating devices
+        host = host_train_state(self.state)
+        pending = writer.submit(int(host.step), host.params, host.opt,
+                                metadata=meta)
+        self.events.emit("save_async", step=pending.step)
+        return pending
+
+    def _writer_for(self, path: str,
+                    keep_last: Optional[int]) -> AsyncCheckpointWriter:
+        key = str(path)
+        w = self._writers.get(key)
+        if w is None:
+            w = AsyncCheckpointWriter(path, keep_last=keep_last,
+                                      io_hook=self._ckpt_io_hook,
+                                      on_event=self.events.emit)
+            self._writers[key] = w
+        if keep_last is not None:
+            w.keep_last = keep_last
+        return w
+
+    def flush_saves(self, timeout: Optional[float] = None) -> list:
+        """Block until every in-flight async save has committed or
+        failed; returns the accumulated writer errors (empty = all
+        committed)."""
+        for w in self._writers.values():
+            w.wait(timeout)
+        return [e for w in self._writers.values() for e in w.errors]
 
     def load(self, path: str, step: Optional[int] = None) -> "Session":
         """Load a checkpoint into this (already built) session.
@@ -916,8 +1077,13 @@ class Session:
         4-device layout with bit-identical params/opt after gather."""
         d = Path(path)
         if step is None:
-            from repro.checkpoint import latest_step
-            step = latest_step(path)
+            # newest checkpoint that is both committed (in the manifest)
+            # and verifies against its recorded digests — a crash mid-save
+            # or a corrupted payload falls back to the previous good one
+            from repro.checkpoint import latest_step, latest_verified_step
+            step = latest_verified_step(path)
+            if step is None:
+                step = latest_step(path)
             if step is None:
                 raise FileNotFoundError(f"no checkpoints under {path}")
         meta = json.loads((d / f"ckpt_{step:08d}.json").read_text())

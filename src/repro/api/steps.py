@@ -141,6 +141,36 @@ def _train_step(cfg: ModelConfig, rules: MeshRules, axes,
     return train_step
 
 
+def with_fault_injection(step_fn: Callable, schedule,
+                         current_step: Callable[[], int]) -> Callable:
+    """Wrap a (jitted) step callable so a ``core.faults.FaultSchedule``
+    can inject failures at the step boundary — one choke point whether
+    the caller goes through ``Session.step()`` or drives the raw step.
+
+    Before dispatch, ``schedule.check_step(step)`` may raise a scheduled
+    :class:`~repro.core.faults.DeviceLossError` or
+    :class:`~repro.core.faults.TransientStepError`. After dispatch, a
+    scheduled straggler (``schedule.slow_factor > 1``) blocks on the
+    result and sleeps the extra ``(factor - 1)`` fraction of the step's
+    real wall time — the whole step is as slow as its slowest host, which
+    is exactly what the drift telemetry should observe."""
+    import time as _time
+
+    def injected(*args, **kwargs):
+        step = current_step()
+        schedule.check_step(step)
+        factor = schedule.slow_factor(step)
+        if factor <= 1.0:
+            return step_fn(*args, **kwargs)
+        t0 = _time.perf_counter()
+        out = step_fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        _time.sleep((factor - 1.0) * (_time.perf_counter() - t0))
+        return out
+
+    return injected
+
+
 # ---------------------------------------------------------------------------
 # measured profiling substrate (Session.build(profile="measured"))
 # ---------------------------------------------------------------------------

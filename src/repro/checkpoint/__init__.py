@@ -1,4 +1,11 @@
-from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+from repro.checkpoint.async_writer import (AsyncCheckpointWriter,
+                                           PendingSave, SimulatedCrash)
+from repro.checkpoint.checkpoint import (committed_steps, latest_step,
+                                         latest_verified_step,
+                                         restore_checkpoint, save_checkpoint,
+                                         sweep_retention, verify_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "committed_steps", "latest_verified_step", "verify_checkpoint",
+           "sweep_retention", "AsyncCheckpointWriter", "PendingSave",
+           "SimulatedCrash"]

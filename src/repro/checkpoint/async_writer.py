@@ -1,0 +1,203 @@
+"""Async checkpointing: the step loop pays only for the snapshot.
+
+A blocking ``Session.save()`` holds the training loop for the full
+device→host gather *plus* serialization, write, and fsync — seconds on a
+real model, paid every few minutes on a preemptible fleet.
+:class:`AsyncCheckpointWriter` splits the save at the only point that
+must see live state: the snapshot (device→host gather into numpy — the
+arrays are then immutable host memory, untouched by further training
+steps). Everything after the snapshot — npz serialization, the
+write-to-temp → fsync → atomic-rename commit protocol, the manifest
+update, the ``keep_last`` retention sweep — runs on one background
+thread, in submission order.
+
+Failure semantics:
+
+- transient IO errors (``OSError``) are retried with exponential
+  backoff, ``max_retries`` times, before the save is marked failed;
+- a failed or crashed save can never corrupt the directory: the commit
+  point is the manifest rename (see ``checkpoint.py``), so readers only
+  ever observe fully committed checkpoints;
+- errors surface on the returned :class:`PendingSave` (``result()``
+  re-raises) and on ``writer.errors``; they never propagate into the
+  training thread asynchronously.
+
+``io_hook(event, step)`` threads the deterministic fault-injection
+harness into the background write (see ``core/faults.FaultSchedule
+.checkpoint_io_hook``): the hook may raise ``OSError`` to exercise the
+retry path or ``SimulatedCrash`` to abort mid-protocol (e.g. between
+temp-write and rename) the way SIGKILL would.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.checkpoint.checkpoint import (commit_payload, prepare_payload,
+                                         sweep_retention)
+
+
+class SimulatedCrash(BaseException):
+    """Raised by a fault-injection hook to model the process dying at an
+    exact point in the write protocol. Deliberately *not* an
+    ``Exception``/``OSError``: the retry loop must not swallow it — a
+    crash kills the write where it stands, leaving whatever torn on-disk
+    state the protocol allows at that point (which recovery must then
+    survive)."""
+
+
+class PendingSave:
+    """Handle for one enqueued save: ``result()`` blocks until the
+    background commit finishes and returns the payload path (re-raising
+    the writer's error if the save failed); ``done``/``error``/``path``
+    for non-blocking inspection."""
+
+    def __init__(self, step: int, target: str):
+        self.step = step
+        self.target = target          # directory the checkpoint commits into
+        self.path: Optional[str] = None
+        self.error: Optional[BaseException] = None
+        self.retries = 0              # IO retries this save needed
+        self._done = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> str:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"async save of step {self.step} still in flight")
+        if self.error is not None:
+            raise self.error
+        return self.path
+
+
+class AsyncCheckpointWriter:
+    """One background thread draining a queue of snapshotted saves.
+
+    ``submit()`` is called with *already gathered* host arrays (the
+    caller's critical path did the snapshot); it enqueues and returns a
+    :class:`PendingSave` immediately. Saves commit in submission order —
+    a newer step can never land before an older one, so ``keep_last``
+    retention and ``latest_step`` stay monotonic.
+    """
+
+    def __init__(self, path: str, *, keep_last: Optional[int] = None,
+                 max_retries: int = 3, backoff_s: float = 0.05,
+                 backoff_factor: float = 2.0,
+                 io_hook: Optional[Callable[[str, int], None]] = None,
+                 on_event: Optional[Callable[..., None]] = None):
+        self.path = str(path)
+        self.keep_last = keep_last
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_factor = backoff_factor
+        self.io_hook = io_hook
+        # on_event(kind, step=, detail=) — telemetry sink (EventLog.emit)
+        self.on_event = on_event or (lambda *a, **k: None)
+        self.committed: List[int] = []
+        self.errors: List[BaseException] = []
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, step: int, params, opt_state=None,
+               metadata: Optional[Dict] = None) -> PendingSave:
+        """Serialize-and-commit ``step`` in the background. ``params`` /
+        ``opt_state`` must be host arrays (numpy) or otherwise immutable
+        — the training loop is free to keep stepping the live state."""
+        if self._closed:
+            raise RuntimeError("writer is closed")
+        # flattening/encoding is cheap (no copies for numpy inputs) but
+        # runs here so digest computation sees exactly what was submitted
+        arrays, meta, digests = prepare_payload(step, params, opt_state,
+                                                metadata)
+        pending = PendingSave(step, self.path)
+        self._q.put((pending, arrays, meta, digests))
+        self._ensure_thread()
+        return pending
+
+    # ----------------------------------------------------------- control --
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Block until every enqueued save has committed or failed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._q.all_tasks_done:
+                if self._q.unfinished_tasks == 0:
+                    return
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("async saves still in flight")
+                self._q.all_tasks_done.wait(remaining)
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain and stop the background thread (idempotent)."""
+        if self._closed:
+            return
+        self.wait(timeout)
+        self._closed = True
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout)
+            self._thread = None
+
+    # --------------------------------------------------------- internals --
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name="ckpt-writer", daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            pending, arrays, meta, digests = item
+            try:
+                self._commit_with_retry(pending, arrays, meta, digests)
+            finally:
+                self._q.task_done()
+                pending._done.set()
+
+    def _commit_with_retry(self, pending: PendingSave, arrays, meta,
+                           digests) -> None:
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                pending.path = commit_payload(
+                    self.path, pending.step, arrays, meta, digests,
+                    io_hook=self.io_hook)
+                self.committed.append(pending.step)
+                self.on_event("ckpt_committed", step=pending.step,
+                              detail=f"retries={pending.retries}")
+                if self.keep_last is not None:
+                    sweep_retention(self.path, self.keep_last)
+                return
+            except OSError as e:
+                pending.retries = attempt + 1
+                if attempt >= self.max_retries:
+                    pending.error = e
+                    self.errors.append(e)
+                    self.on_event("ckpt_failed", step=pending.step,
+                                  detail=f"{type(e).__name__}: {e}")
+                    return
+                self.on_event("ckpt_io_retry", step=pending.step,
+                              detail=f"attempt={attempt + 1} "
+                                     f"backoff={delay:.3f}s: {e}")
+                time.sleep(delay)
+                delay *= self.backoff_factor
+            except SimulatedCrash as e:
+                # the injected process death: no retry, no cleanup — the
+                # on-disk state is whatever the protocol left behind
+                pending.error = e
+                self.errors.append(e)
+                self.on_event("ckpt_crashed", step=pending.step,
+                              detail=str(e))
+                return

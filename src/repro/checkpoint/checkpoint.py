@@ -1,20 +1,49 @@
-"""Sharding-aware npz checkpointing.
+"""Sharding-aware npz checkpointing with a crash-consistent commit
+protocol.
 
-Parameters/optimizer state are flattened with stable path-derived keys and
-written as one npz per host. On restore, arrays are re-placed with the
-current mesh's shardings (fully-addressable single-host in this container;
-the path keys are host-independent so multi-host restore shards by key).
+Parameters/optimizer state are flattened with stable path-derived keys
+and written as one npz per host. On restore, arrays are re-placed with
+the current mesh's shardings (fully-addressable single-host in this
+container; the path keys are host-independent so multi-host restore
+shards by key).
+
+Durability contract (the fault-tolerance layer builds on this):
+
+- every file lands via *write-to-temp → fsync → atomic rename*
+  (``os.replace``), so a crash mid-write leaves only a ``.tmp.*`` orphan,
+  never a half-written ``ckpt_*.npz``;
+- a checkpoint exists only once it is recorded in the directory-level
+  ``MANIFEST.json`` (itself atomically replaced), which carries a
+  per-array crc32 digest table and the recorded session recipe — the
+  manifest update is the *commit point*: payload and metadata renamed
+  but manifest not yet updated means the checkpoint is torn and is
+  ignored by :func:`latest_step`;
+- :func:`restore_checkpoint` verifies the digests and, when asked for
+  the latest step, silently falls back to the newest checkpoint that
+  *does* verify (a torn or bit-rotted newest step must not take down
+  recovery — it is exactly the situation checkpoints exist for).
+
+``io_hook(event, step)`` threads the deterministic fault-injection
+harness (:mod:`repro.core.faults`) into the write path: the hook runs
+immediately before each named IO action ("payload_write",
+"payload_rename", "meta_write", "manifest_write") and may raise to
+simulate IO errors or a crash at that exact point.
 """
 from __future__ import annotations
 
 import json
+import os
+import zlib
 
 import jax.numpy as jnp
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+MANIFEST_NAME = "MANIFEST.json"
+IoHook = Optional[Callable[[str, int], None]]
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -34,36 +63,232 @@ def _encode(arr: np.ndarray) -> Tuple[np.ndarray, str]:
     return arr, dt
 
 
-def save_checkpoint(path: str, step: int, params, opt_state=None,
-                    metadata: Optional[Dict] = None) -> str:
-    d = Path(path)
-    d.mkdir(parents=True, exist_ok=True)
-    out = {}
-    dtypes = {}
+def _digest(arr: np.ndarray) -> str:
+    """crc32 over the raw bytes plus the shape/dtype header — cheap
+    enough to verify on every restore, strong enough to catch torn or
+    bit-rotted payloads."""
+    h = zlib.crc32(repr((arr.shape, str(arr.dtype))).encode())
+    h = zlib.crc32(np.ascontiguousarray(arr).tobytes(), h)
+    return f"{h:08x}"
+
+
+def _atomic_write(target: Path, data: bytes, *, fsync: bool = True) -> None:
+    """write-to-temp → fsync → os.replace: the file either has its old
+    content (or is absent) or has the complete new content — never a
+    prefix."""
+    tmp = target.with_name(target.name + f".tmp.{os.getpid()}")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, target)
+    finally:
+        if tmp.exists():            # crash/injection between write and rename
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+
+
+def _load_manifest(d: Path) -> Dict:
+    fp = d / MANIFEST_NAME
+    if not fp.exists():
+        return {"version": 1, "steps": {}}
+    try:
+        m = json.loads(fp.read_text())
+    except (OSError, json.JSONDecodeError):
+        return {"version": 1, "steps": {}}
+    m.setdefault("steps", {})
+    return m
+
+
+def _payload_name(step: int) -> str:
+    return f"ckpt_{step:08d}.npz"
+
+
+def _meta_name(step: int) -> str:
+    return f"ckpt_{step:08d}.json"
+
+
+def prepare_payload(step: int, params, opt_state=None,
+                    metadata: Optional[Dict] = None
+                    ) -> Tuple[Dict[str, np.ndarray], Dict, Dict[str, str]]:
+    """Gather + encode the state into host arrays: ``(arrays, meta,
+    digests)``. This is the only part of a save that must happen while
+    the state is live — everything after it operates on the snapshot
+    (the async writer runs it on the critical path and ships the rest to
+    its background thread)."""
+    out: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
     for k, v in _flatten_with_paths(params).items():
         out[f"params/{k}"], dtypes[f"params/{k}"] = _encode(np.asarray(v))
     if opt_state is not None:
         for k, v in _flatten_with_paths(opt_state).items():
             out[f"opt/{k}"], dtypes[f"opt/{k}"] = _encode(np.asarray(v))
-    fn = d / f"ckpt_{step:08d}.npz"
-    np.savez(fn, **out)
+    digests = {k: _digest(v) for k, v in out.items()}
     meta = {"step": step, "dtypes": dtypes, **(metadata or {})}
-    (d / f"ckpt_{step:08d}.json").write_text(json.dumps(meta))
-    return str(fn)
+    return out, meta, digests
+
+
+def commit_payload(path: str, step: int, arrays: Dict[str, np.ndarray],
+                   meta: Dict, digests: Dict[str, str], *,
+                   io_hook: IoHook = None, fsync: bool = True) -> str:
+    """Write one checkpoint with the crash-consistent commit protocol:
+    payload (tmp→rename), metadata (tmp→rename), then the manifest
+    update (tmp→rename) as the commit point. A crash at any earlier
+    point leaves the previous committed step authoritative."""
+    import io
+
+    d = Path(path)
+    d.mkdir(parents=True, exist_ok=True)
+    hook = io_hook or (lambda event, s: None)
+
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    hook("payload_write", step)
+    target = d / _payload_name(step)
+    tmp = target.with_name(target.name + f".tmp.{os.getpid()}")
+    with open(tmp, "wb") as f:
+        f.write(buf.getvalue())
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    hook("payload_rename", step)
+    os.replace(tmp, target)
+
+    hook("meta_write", step)
+    _atomic_write(d / _meta_name(step), json.dumps(meta).encode(),
+                  fsync=fsync)
+
+    hook("manifest_write", step)
+    manifest = _load_manifest(d)
+    manifest["steps"][str(step)] = {
+        "file": _payload_name(step), "meta": _meta_name(step),
+        "digests": digests,
+        "recipe": meta.get("session"),
+    }
+    _atomic_write(d / MANIFEST_NAME, json.dumps(manifest).encode(),
+                  fsync=fsync)
+    return str(target)
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None,
+                    metadata: Optional[Dict] = None, *,
+                    keep_last: Optional[int] = None,
+                    io_hook: IoHook = None) -> str:
+    """Blocking save: snapshot + commit protocol in the caller's thread
+    (``repro.checkpoint.async_writer`` moves everything after the
+    snapshot off the critical path). ``keep_last=N`` sweeps older
+    committed checkpoints after the commit."""
+    arrays, meta, digests = prepare_payload(step, params, opt_state, metadata)
+    fn = commit_payload(path, step, arrays, meta, digests, io_hook=io_hook)
+    if keep_last is not None:
+        sweep_retention(path, keep_last)
+    return fn
+
+
+def committed_steps(path: str) -> List[int]:
+    """Steps recorded in the manifest whose payload actually exists —
+    the only checkpoints that count. Directories written before the
+    manifest protocol fall back to a glob that ignores ``.tmp`` orphans
+    (half-written files never land under the final name either way)."""
+    d = Path(path)
+    if not d.exists():
+        return []
+    manifest = _load_manifest(d)
+    if manifest["steps"]:
+        return sorted(int(s) for s, rec in manifest["steps"].items()
+                      if (d / rec["file"]).exists())
+    # legacy layout: no manifest was ever written here (the glob cannot
+    # match in-flight ``*.npz.tmp.<pid>`` orphans — they end in the pid)
+    return sorted(int(f.stem.split("_")[1]) for f in d.glob("ckpt_*.npz"))
 
 
 def latest_step(path: str) -> Optional[int]:
-    d = Path(path)
-    if not d.exists():
-        return None
-    steps = sorted(int(f.stem.split("_")[1]) for f in d.glob("ckpt_*.npz"))
+    steps = committed_steps(path)
     return steps[-1] if steps else None
 
 
+def verify_checkpoint(path: str, step: int) -> bool:
+    """Recompute the per-array digests of a committed checkpoint and
+    compare against the manifest. False on any mismatch, missing file,
+    unreadable payload, or missing manifest entry (legacy checkpoints
+    without digests verify True — there is nothing to compare)."""
+    d = Path(path)
+    manifest = _load_manifest(d)
+    rec = manifest["steps"].get(str(step))
+    if rec is None:
+        # legacy checkpoint: loadable npz+json is the best check we have
+        try:
+            np.load(d / _payload_name(step))
+            json.loads((d / _meta_name(step)).read_text())
+            return True
+        except Exception:  # noqa: BLE001 — any unreadable form is torn
+            return False
+    try:
+        data = np.load(d / rec["file"])
+        for key, want in rec["digests"].items():
+            if _digest(data[key]) != want:
+                return False
+        json.loads((d / rec["meta"]).read_text())
+        return True
+    except Exception:  # noqa: BLE001 — any unreadable form is torn
+        return False
+
+
+def latest_verified_step(path: str) -> Optional[int]:
+    """Newest committed step whose digests verify — what restore falls
+    back through when the newest checkpoint is torn."""
+    for step in reversed(committed_steps(path)):
+        if verify_checkpoint(path, step):
+            return step
+    return None
+
+
+def sweep_retention(path: str, keep_last: int) -> List[int]:
+    """Drop all but the newest ``keep_last`` committed checkpoints:
+    manifest entries removed first (atomically — a crash mid-sweep must
+    not orphan entries pointing at deleted files... it can only orphan
+    *files*, which are harmless), then payload/metadata files and any
+    stale ``.tmp`` orphans. Returns the dropped steps."""
+    d = Path(path)
+    manifest = _load_manifest(d)
+    steps = sorted(int(s) for s in manifest["steps"])
+    drop = steps[:-keep_last] if keep_last > 0 else steps
+    if drop:
+        records = {s: manifest["steps"].pop(str(s)) for s in drop}
+        _atomic_write(d / MANIFEST_NAME, json.dumps(manifest).encode())
+        for s, rec in records.items():
+            for name in (rec["file"], rec["meta"]):
+                try:
+                    (d / name).unlink()
+                except OSError:
+                    pass
+    # stale .tmp orphans (crash between temp-write and rename) are swept
+    # even when retention keeps every step — they are dead weight either way
+    for orphan in d.glob("*.tmp.*"):
+        try:
+            orphan.unlink()
+        except OSError:
+            pass
+    return drop
+
+
+def read_metadata(path: str, step: int) -> Dict:
+    d = Path(path)
+    return json.loads((d / _meta_name(step)).read_text())
+
+
 def restore_checkpoint(path: str, step: Optional[int], params_template,
-                       opt_template=None, shardings=None
+                       opt_template=None, shardings=None, *,
+                       verify: bool = True
                        ) -> Tuple[int, Any, Any]:
-    """Load params/opt for ``step`` (latest when ``None``).
+    """Load params/opt for ``step`` (newest *verified* committed step
+    when ``None`` — torn or digest-mismatched checkpoints are skipped
+    and the previous committed one loads instead; an explicitly
+    requested step that fails verification raises).
 
     ``shardings`` — an optional ``(param_shardings, opt_shardings)`` pair
     of sharding trees matching the templates — places each restored array
@@ -75,11 +300,17 @@ def restore_checkpoint(path: str, step: Optional[int], params_template,
     """
     d = Path(path)
     if step is None:
-        step = latest_step(path)
+        step = (latest_verified_step(path) if verify
+                else latest_step(path))
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {path}")
-    data = np.load(d / f"ckpt_{step:08d}.npz")
-    meta = json.loads((d / f"ckpt_{step:08d}.json").read_text())
+            raise FileNotFoundError(f"no committed checkpoints under {path}")
+    elif verify and not verify_checkpoint(path, step):
+        raise ValueError(
+            f"checkpoint step {step} under {path} is torn or corrupt "
+            f"(digest mismatch); newest verified step is "
+            f"{latest_verified_step(path)}")
+    data = np.load(d / _payload_name(step))
+    meta = json.loads((d / _meta_name(step)).read_text())
     dtypes = meta.get("dtypes", {})
 
     def rebuild(template, prefix, sharding_tree=None):

@@ -1,0 +1,427 @@
+"""Fault model for the elastic Session runtime: a deterministic
+fault-injection harness, fault classification, and the supervised
+recovery loop.
+
+Poplar's pitch is a *large number of heterogeneous devices* — in
+practice the fleet that gets preempted, loses nodes, and stalls on slow
+hosts. PR 5 built plan → execute → observe → re-plan; this module makes
+that loop survive hostile schedules:
+
+- :class:`FaultSchedule` — scripted, seed-free fault plans ("lose device
+  T4-16G#3 at step 40", "fail checkpoint IO twice from step 25", "slow
+  host 2x for steps 10-20") injectable into the Session step boundary
+  and the checkpoint writer, so every recovery path is testable in CI on
+  the 8-device CPU mesh. Entirely deterministic: entries fire at exact
+  step counts and are consumed — two runs of the same schedule observe
+  the same faults.
+- :func:`classify_fault` — transient (retry with backoff) vs membership
+  change (devices gone: re-plan over survivors) vs fatal (programming
+  errors: never retry).
+- :class:`Supervisor` — wraps a Session's step loop: catches failures,
+  drains in-flight gradient-accumulation state (the loader rewinds to
+  the last *applied* step, so the interrupted accumulation batch replays
+  in full — no micro-step is lost or double-applied), then recovers:
+  transient faults retry with exponential backoff; device loss re-plans
+  over the survivors via the existing ``replan(cluster=)`` rollback
+  machinery (degrading gracefully to fewer devices); if resharding
+  itself fails, falls back to restoring a fresh Session from the last
+  *committed* checkpoint. Every transition is reported through
+  ``core.telemetry.EventLog``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.checkpoint.async_writer import SimulatedCrash
+
+
+class DeviceLossError(RuntimeError):
+    """A device (or several) left the cluster mid-run. ``lost`` names
+    device instances (``"T4-16G#3"`` — profiling's per-kind numbering —
+    or a bare kind name meaning one instance of it); ``survivors`` may
+    carry the already-computed surviving ClusterSpec (otherwise the
+    supervisor derives it from the session's cluster minus ``lost``)."""
+
+    def __init__(self, lost, survivors=None):
+        self.lost = list(lost)
+        self.survivors = survivors
+        super().__init__(f"device loss: {', '.join(self.lost)}")
+
+
+class TransientStepError(RuntimeError):
+    """An injected (or real) one-off step failure — retryable."""
+
+
+class FaultToleranceExhausted(RuntimeError):
+    """The supervisor ran out of recovery options (retry budget spent,
+    or fewer survivors than ``FaultPolicy.min_devices``)."""
+
+
+_FATAL = (ValueError, TypeError, KeyError, AttributeError,
+          NotImplementedError)
+
+
+def classify_fault(exc: BaseException) -> str:
+    """``"membership"`` (devices gone — re-plan over survivors),
+    ``"transient"`` (worth a retry with backoff), or ``"fatal"``
+    (programming errors — retrying reruns the same bug)."""
+    if isinstance(exc, DeviceLossError):
+        return "membership"
+    if isinstance(exc, _FATAL):
+        return "fatal"
+    return "transient"
+
+
+@dataclass
+class FaultPolicy:
+    """How hard the supervisor fights before giving up.
+
+    ``max_retries`` bounds recovery attempts *per training step* —
+    transient retries and membership recoveries both draw from it.
+    ``backoff_s`` * ``backoff_factor**attempt`` sleeps between transient
+    retries (device loss recovers immediately — waiting does not bring
+    the device back). ``min_devices``: a membership change leaving fewer
+    survivors is unrecoverable (raise instead of limping on a cluster
+    the plan space cannot serve). ``restore_on_failure``: when the
+    re-plan/reshard path itself fails, rebuild a fresh Session from the
+    last committed checkpoint instead of propagating."""
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    min_devices: int = 1
+    restore_on_failure: bool = True
+
+
+# --------------------------------------------------------------------------
+# deterministic fault schedules
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Entry:
+    kind: str                     # lose | step_fail | ckpt_io | ckpt_crash | slow
+    step: int                     # first step (or save-step) it applies to
+    until: int                    # last step inclusive (slow ranges)
+    devices: List[str] = field(default_factory=list)
+    count: int = 1                # remaining firings (consumed per fire)
+    factor: float = 2.0           # slow multiplier
+    at: str = "payload_write"     # ckpt_crash / ckpt_io injection point
+
+
+class FaultSchedule:
+    """A scripted fault plan. Build programmatically::
+
+        FaultSchedule().lose(40, "T4-16G#3", "T4-16G#4") \
+                       .fail_ckpt_io(25, times=2) \
+                       .slow(10, 20, 2.0, device="T4-16G#2")
+
+    or parse the CLI spec grammar (comma-separated on the command line)::
+
+        lose:<step>:<dev>[+<dev>...]      device loss raised before <step>
+        step_fail:<step>[:<times>]        transient step failure(s)
+        ckpt_io:<step>[:<times>]          checkpoint IO error (retryable)
+        ckpt_crash:<step>[:<point>]       crash mid-save at <point>
+                                          (payload_write|payload_rename|
+                                           meta_write|manifest_write)
+        slow:<a>-<b>:<dev|*>:<factor>     straggler host for steps a..b
+
+    Hooks are consumed deterministically: :meth:`check_step` fires at
+    the Session step boundary (raising :class:`DeviceLossError` /
+    :class:`TransientStepError`), :meth:`checkpoint_io` inside the
+    checkpoint write protocol (raising ``OSError`` or
+    :class:`SimulatedCrash`), :meth:`slow_factor` scales step wall time
+    (and the per-device telemetry proxy, so the drift EMA sees the
+    injected imbalance)."""
+
+    def __init__(self):
+        self.entries: List[_Entry] = []
+        self.fired: List[str] = []    # human-readable log of what fired
+
+    # ------------------------------------------------------- construction --
+    def lose(self, step: int, *devices: str) -> "FaultSchedule":
+        self.entries.append(_Entry("lose", step, step,
+                                   devices=list(devices)))
+        return self
+
+    def fail_step(self, step: int, times: int = 1) -> "FaultSchedule":
+        self.entries.append(_Entry("step_fail", step, step, count=times))
+        return self
+
+    def fail_ckpt_io(self, step: int, times: int = 1,
+                     at: str = "payload_write") -> "FaultSchedule":
+        self.entries.append(_Entry("ckpt_io", step, step, count=times,
+                                   at=at))
+        return self
+
+    def crash_ckpt(self, step: int,
+                   at: str = "payload_rename") -> "FaultSchedule":
+        self.entries.append(_Entry("ckpt_crash", step, step, at=at))
+        return self
+
+    def slow(self, start: int, stop: int, factor: float,
+             device: Optional[str] = None) -> "FaultSchedule":
+        self.entries.append(_Entry(
+            "slow", start, stop, factor=factor,
+            devices=[device] if device and device != "*" else []))
+        return self
+
+    @classmethod
+    def parse(cls, specs) -> "FaultSchedule":
+        """Parse the CLI grammar (a list of spec strings, or one
+        comma-separated string)."""
+        if isinstance(specs, str):
+            specs = [s for s in specs.split(",") if s]
+        sched = cls()
+        for spec in specs:
+            parts = spec.split(":")
+            kind = parts[0]
+            if kind == "lose":
+                sched.lose(int(parts[1]), *parts[2].split("+"))
+            elif kind == "step_fail":
+                sched.fail_step(int(parts[1]),
+                                int(parts[2]) if len(parts) > 2 else 1)
+            elif kind == "ckpt_io":
+                sched.fail_ckpt_io(int(parts[1]),
+                                   int(parts[2]) if len(parts) > 2 else 1)
+            elif kind == "ckpt_crash":
+                sched.crash_ckpt(int(parts[1]),
+                                 parts[2] if len(parts) > 2
+                                 else "payload_rename")
+            elif kind == "slow":
+                a, b = (int(x) for x in parts[1].split("-"))
+                sched.slow(a, b, float(parts[3]),
+                           device=parts[2] if parts[2] != "*" else None)
+            else:
+                raise ValueError(f"unknown fault spec {spec!r}")
+        return sched
+
+    # ------------------------------------------------------------- hooks --
+    def check_step(self, step: int) -> None:
+        """Fire step-boundary faults scheduled at ``step`` (device loss
+        first — a lost device fails the step before any retryable
+        hiccup would)."""
+        for e in self.entries:
+            if e.kind == "lose" and e.count > 0 and step >= e.step:
+                e.count -= 1
+                self.fired.append(f"lose@{step}:{'+'.join(e.devices)}")
+                raise DeviceLossError(e.devices)
+        for e in self.entries:
+            if e.kind == "step_fail" and e.count > 0 and step >= e.step:
+                e.count -= 1
+                self.fired.append(f"step_fail@{step}")
+                raise TransientStepError(
+                    f"injected step failure at step {step}")
+
+    def slow_factor(self, step: int, device: Optional[str] = None) -> float:
+        """Wall-time multiplier for ``step``. ``device=None`` asks for
+        the whole-host factor (the max over active entries — the step
+        is as slow as its slowest participant); naming a device returns
+        that device's factor (1.0 when the entry targets others)."""
+        factor = 1.0
+        for e in self.entries:
+            if e.kind != "slow" or not (e.step <= step <= e.until):
+                continue
+            if device is None or not e.devices or device in e.devices:
+                factor = max(factor, e.factor)
+        return factor
+
+    def checkpoint_io(self, event: str, step: int) -> None:
+        """The writer-side hook (``io_hook(event, step)`` in
+        ``checkpoint.commit_payload``): raise ``OSError`` while an
+        injected IO-failure budget remains, or :class:`SimulatedCrash`
+        at the scripted crash point."""
+        for e in self.entries:
+            if (e.kind == "ckpt_crash" and e.count > 0 and step >= e.step
+                    and event == e.at):
+                e.count -= 1
+                self.fired.append(f"ckpt_crash@{step}:{event}")
+                raise SimulatedCrash(
+                    f"injected crash during {event} of step {step}")
+        for e in self.entries:
+            if (e.kind == "ckpt_io" and e.count > 0 and step >= e.step
+                    and event == e.at):
+                e.count -= 1
+                self.fired.append(f"ckpt_io@{step}:{event}")
+                raise OSError(f"injected IO error during {event} "
+                              f"of step {step}")
+
+
+def drop_devices(cluster, lost: List[str]):
+    """The surviving ClusterSpec after ``lost`` leave. Instance ids use
+    profiling's per-kind numbering (``"T4-16G#3"``); a bare kind name
+    drops one instance of that kind."""
+    from repro.core.cluster import make_cluster
+
+    remaining: Dict[str, int] = {}
+    order: List[str] = []
+    for d in cluster.devices:
+        if d.name not in remaining:
+            order.append(d.name)
+        remaining[d.name] = remaining.get(d.name, 0) + 1
+    for name in lost:
+        kind = name.split("#")[0]
+        if kind not in remaining or remaining[kind] <= 0:
+            raise ValueError(f"cannot lose {name!r}: no {kind!r} left in "
+                             f"cluster {cluster.name!r}")
+        remaining[kind] -= 1
+    composition = [(k, remaining[k]) for k in order if remaining[k] > 0]
+    if not composition:
+        raise ValueError("device loss leaves an empty cluster")
+    return make_cluster(f"{cluster.name}-{cluster.n - len(lost)}",
+                        composition, cluster.inter_link_gbps,
+                        shared_bus=cluster.shared_bus)
+
+
+# --------------------------------------------------------------------------
+# the supervised step loop
+# --------------------------------------------------------------------------
+
+class Supervisor:
+    """Fault-tolerant wrapper around a Session's step loop.
+
+    ``sup.step()`` runs one training step, absorbing faults per the
+    :class:`FaultPolicy`; ``sup.session`` is the live session (re-bound
+    when recovery had to restore from a checkpoint — callers must read
+    it through the supervisor). ``ckpt_path`` enables periodic durable
+    saves (``save_every``, async by default) and the restore-fallback
+    recovery path.
+    """
+
+    def __init__(self, session, policy: Optional[FaultPolicy] = None,
+                 schedule: Optional[FaultSchedule] = None, *,
+                 ckpt_path: Optional[str] = None, save_every: int = 0,
+                 async_save: bool = True, keep_last: Optional[int] = None):
+        self.session = session
+        self.policy = policy or FaultPolicy()
+        self.schedule = schedule
+        self.ckpt_path = ckpt_path
+        self.save_every = save_every
+        self.async_save = async_save
+        self.keep_last = keep_last
+        self.events = session.events
+        self.recoveries = 0
+        if schedule is not None:
+            session.attach_faults(schedule)
+
+    # ---------------------------------------------------------------- API --
+    def step(self):
+        """One supervised training step: returns the metrics dict, or
+        raises :class:`FaultToleranceExhausted` (or the fatal original)
+        when the policy's budget cannot absorb the failure."""
+        policy = self.policy
+        delay = policy.backoff_s
+        last_exc: Optional[BaseException] = None
+        for attempt in range(policy.max_retries + 1):
+            sess = self.session
+            step_idx = int(sess.state.step)
+            try:
+                metrics = sess.step()
+                self._maybe_autosave(step_idx + 1)
+                return metrics
+            except DeviceLossError as e:
+                last_exc = e
+                self.events.emit("device_loss", step=step_idx,
+                                 detail="+".join(e.lost))
+                self._recover_membership(e, step_idx)
+            except SimulatedCrash:
+                raise
+            except Exception as e:  # noqa: BLE001 — classified below
+                last_exc = e
+                kind = classify_fault(e)
+                if kind == "fatal":
+                    self.events.emit("fatal", step=step_idx,
+                                     detail=f"{type(e).__name__}: {e}")
+                    raise
+                self.events.emit("transient", step=step_idx,
+                                 detail=f"{type(e).__name__}: {e} "
+                                        f"(attempt {attempt + 1})")
+                sess.drain()
+                if attempt < policy.max_retries:
+                    time.sleep(delay)
+                    delay *= policy.backoff_factor
+        self.events.emit("gave_up", step=int(self.session.state.step),
+                         detail=f"after {policy.max_retries + 1} attempts")
+        raise FaultToleranceExhausted(
+            f"step failed {policy.max_retries + 1} times; last: "
+            f"{last_exc!r}") from last_exc
+
+    def run(self, n_steps: int):
+        """Drive ``n_steps`` supervised steps; returns the last metrics."""
+        metrics = None
+        for _ in range(n_steps):
+            metrics = self.step()
+        self.flush()
+        return metrics
+
+    def flush(self) -> None:
+        """Wait for in-flight async checkpoint writes."""
+        self.session.flush_saves()
+
+    # ----------------------------------------------------------- recovery --
+    def _recover_membership(self, e: DeviceLossError, step_idx: int) -> None:
+        sess, policy = self.session, self.policy
+        sess.drain()     # replay the interrupted accum batch after recovery
+        survivors = e.survivors
+        if survivors is None:
+            if sess.cluster is None:
+                raise FaultToleranceExhausted(
+                    "device loss on an unplanned session — no cluster to "
+                    "re-plan over") from e
+            survivors = drop_devices(sess.cluster, e.lost)
+        if survivors.n < policy.min_devices:
+            self.events.emit("gave_up", step=step_idx,
+                             detail=f"{survivors.n} survivors < "
+                                    f"min_devices={policy.min_devices}")
+            raise FaultToleranceExhausted(
+                f"{survivors.n} surviving devices, policy requires "
+                f">= {policy.min_devices}") from e
+        t0 = time.monotonic()
+        try:
+            rep = sess.replan(cluster=survivors, trigger="fault")
+            self.recoveries += 1
+            self.events.emit("replan_recovered", step=step_idx,
+                             detail=f"{rep.old_devices}->{rep.new_devices} "
+                                    f"stage={rep.zero_stage}",
+                             seconds=time.monotonic() - t0)
+        except Exception as replan_err:  # noqa: BLE001 — fall back to restore
+            self.events.emit("replan_failed", step=step_idx,
+                            detail=f"{type(replan_err).__name__}: "
+                                   f"{replan_err}")
+            if not (policy.restore_on_failure and self.ckpt_path):
+                raise
+            self._recover_restore(survivors, step_idx, replan_err)
+
+    def _recover_restore(self, survivors, step_idx: int,
+                         cause: BaseException) -> None:
+        """Last resort: abandon the live state and rebuild a fresh
+        Session from the newest *committed, digest-verified* checkpoint
+        on the surviving cluster."""
+        from repro.checkpoint import latest_verified_step
+
+        step = latest_verified_step(self.ckpt_path)
+        if step is None:
+            raise FaultToleranceExhausted(
+                f"reshard failed and no committed checkpoint under "
+                f"{self.ckpt_path}") from cause
+        t0 = time.monotonic()
+        from repro.api.session import Session
+        new_sess = Session.restore(self.ckpt_path, cfg=self.session.cfg,
+                                   cluster=survivors, step=step)
+        new_sess.events = self.events          # keep one continuous log
+        if self.schedule is not None:
+            new_sess.attach_faults(self.schedule)
+        self.session = new_sess
+        self.recoveries += 1
+        self.events.emit("restore_recovered", step=step_idx,
+                         detail=f"rolled back to committed step {step} on "
+                                f"{survivors.n} devices",
+                         seconds=time.monotonic() - t0)
+
+    # ---------------------------------------------------------- autosave --
+    def _maybe_autosave(self, applied_step: int) -> None:
+        if not (self.ckpt_path and self.save_every
+                and applied_step % self.save_every == 0):
+            return
+        self.session.save(self.ckpt_path, async_=self.async_save,
+                          keep_last=self.keep_last)

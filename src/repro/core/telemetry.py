@@ -17,8 +17,9 @@ The detector is deliberately mechanism-only: *when* to act on a
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -62,6 +63,55 @@ class EMAWindow:
         self.tokens_per_sec = None
 
 
+class DeviceTimers:
+    """Per-device step-time EMAs under SPMD.
+
+    The global step EMA only sees ``max`` over devices — a straggler is
+    invisible until it dominates. This window keeps one
+    :class:`EMAWindow` per device so the drift detector can report
+    *imbalance* (max/min of the per-device EMAs) next to the global
+    ratio.
+
+    What feeds it is substrate-dependent: a multi-host fleet records
+    real per-host wall times; a single-process SPMD session has no
+    per-device clock, so the Session feeds the best available proxy —
+    observed wall time distributed over the plan's predicted per-device
+    busy shares, scaled by any injected straggler factors (see
+    ``Session._device_step_times``). The mechanism is the same either
+    way; only the provider differs.
+    """
+
+    def __init__(self, alpha: float = 0.3, warmup: int = 1):
+        self.alpha, self.warmup = alpha, warmup
+        self.windows: Dict[str, EMAWindow] = {}
+
+    def record(self, times: Dict[str, float]) -> None:
+        for dev, dt in times.items():
+            w = self.windows.get(dev)
+            if w is None:
+                w = self.windows[dev] = EMAWindow(alpha=self.alpha,
+                                                 warmup=self.warmup)
+            w.record(dt)
+
+    def values(self) -> Dict[str, float]:
+        return {d: w.value for d, w in self.windows.items()
+                if w.value is not None}
+
+    def imbalance(self) -> float:
+        """max/min of the per-device EMAs (1.0 = balanced or unjudged)."""
+        vals = [v for v in self.values().values() if v > 0]
+        if len(vals) < 2:
+            return 1.0
+        return max(vals) / max(min(vals), 1e-12)
+
+    def slowest(self) -> Optional[str]:
+        vals = self.values()
+        return max(vals, key=vals.get) if vals else None
+
+    def reset(self) -> None:
+        self.windows.clear()
+
+
 @dataclass
 class DriftConfig:
     """When does observed reality contradict the plan?
@@ -96,6 +146,13 @@ class DriftReport:
     # (max busy / min busy over active devices) — context for deciding
     # whether a re-plan can plausibly rebalance anything
     predicted_imbalance: float = 1.0
+    # *observed* per-device imbalance (max/min of the DeviceTimers EMAs;
+    # 1.0 when unjudged). predicted says what the plan accepted; observed
+    # says what the cluster is doing — observed >> predicted means a
+    # straggler the plan did not price in
+    observed_imbalance: float = 1.0
+    # the device behind observed_imbalance, when one stands out
+    slowest_device: Optional[str] = None
 
 
 def predicted_imbalance(device_busy: Dict[str, float]) -> float:
@@ -109,7 +166,9 @@ def predicted_imbalance(device_busy: Dict[str, float]) -> float:
 def detect_drift(window: EMAWindow, predicted_s: Optional[float],
                  config: DriftConfig = DriftConfig(),
                  device_busy: Optional[Dict[str, float]] = None,
-                 baseline: float = 1.0) -> Optional[DriftReport]:
+                 baseline: float = 1.0,
+                 device_timers: Optional[DeviceTimers] = None
+                 ) -> Optional[DriftReport]:
     """Compare the observed step-time EMA against the plan's prediction.
 
     Returns ``None`` while there is nothing to judge (no prediction — the
@@ -143,16 +202,69 @@ def detect_drift(window: EMAWindow, predicted_s: Optional[float],
                   f"(<{lo:.2f}x band) — plan underuses the cluster")
     else:
         reason = f"within band ({ratio:.2f}x of prediction)"
+    obs_imb = device_timers.imbalance() if device_timers is not None else 1.0
     return DriftReport(
         observed_s=window.value, predicted_s=predicted_s, ratio=ratio,
         drifted=drifted, reason=reason, baseline=baseline,
-        predicted_imbalance=predicted_imbalance(device_busy or {}))
+        predicted_imbalance=predicted_imbalance(device_busy or {}),
+        observed_imbalance=obs_imb,
+        slowest_device=(device_timers.slowest()
+                        if device_timers is not None and obs_imb > 1.0
+                        else None))
+
+
+@dataclass
+class FaultEvent:
+    """One runtime transition: a fault observed, a recovery taken, a
+    checkpoint committed. ``kind`` vocabulary (core/faults.py and the
+    checkpoint writer emit these): ``device_loss``, ``transient``,
+    ``fatal``, ``replan_recovered``, ``replan_failed``,
+    ``restore_recovered``, ``gave_up``, ``save_async``,
+    ``ckpt_committed``, ``ckpt_io_retry``, ``ckpt_failed``,
+    ``ckpt_crashed``."""
+    kind: str
+    step: int = 0
+    detail: str = ""
+    seconds: float = 0.0              # how long the transition took
+    wall: float = 0.0                 # time.time() at emission
+
+
+@dataclass
+class EventLog:
+    """Append-only log of fault/recovery/checkpoint transitions — the
+    reporting channel the supervised step loop and the async checkpoint
+    writer share. ``verbose=True`` additionally prints each event (the
+    ``[fault]`` lines of ``launch/train.py``)."""
+    events: List[FaultEvent] = field(default_factory=list)
+    verbose: bool = False
+
+    def emit(self, kind: str, step: int = 0, detail: str = "",
+             seconds: float = 0.0) -> FaultEvent:
+        ev = FaultEvent(kind, step, detail, seconds, wall=time.time())
+        self.events.append(ev)
+        if self.verbose:
+            extra = f" ({seconds:.2f}s)" if seconds else ""
+            print(f"[fault] step {step}: {kind}"
+                  + (f" — {detail}" if detail else "") + extra)
+        return ev
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for ev in self.events:
+            out[ev.kind] = out.get(ev.kind, 0) + 1
+        return out
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self):
+        return len(self.events)
 
 
 @dataclass
 class ReplanReport:
     """What one ``Session.replan()`` did, and what it cost."""
-    trigger: str                      # "explicit" | "drift" | "cluster"
+    trigger: str                      # "explicit" | "drift" | "cluster" | "fault"
     plan_seconds: float               # planner (re-profile + search) time
     reshard_seconds: float            # state gather + re-place + re-jit
     old_devices: int

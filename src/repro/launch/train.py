@@ -89,6 +89,26 @@ def main(argv=None):
     ap.add_argument("--resume", default=None, metavar="CKPT",
                     help="resume params/opt/step from a Session checkpoint "
                          "directory (crash recovery)")
+    ap.add_argument("--ckpt-every", type=int, default=0, metavar="N",
+                    help="checkpoint to --ckpt every N applied steps "
+                         "(0 = final save only)")
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="asynchronous checkpointing: the step loop pays "
+                         "only for the device->host snapshot; "
+                         "serialization, atomic commit and retention run "
+                         "on a background thread")
+    ap.add_argument("--keep-last", type=int, default=None, metavar="N",
+                    help="retain only the newest N committed checkpoints")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, comma-separated "
+                         "(see core.faults.FaultSchedule.parse): e.g. "
+                         "'lose:40:T4-16G#3+T4-16G#4,ckpt_io:25:2,"
+                         "slow:10-20:T4-16G#2:2.0'")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="recovery attempts per step before giving up")
+    ap.add_argument("--min-devices", type=int, default=1,
+                    help="fewest survivors a device loss may leave before "
+                         "the run is declared unrecoverable")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
 
@@ -148,12 +168,31 @@ def main(argv=None):
     print(f"[layout] groups={len(lay['groups'])} "
           f"padded/group={lay['padded_group_batch']} gas={lay['gas']}")
 
-    # ---- train loop: Session feeds its own hetero loader ----
+    # ---- train loop: supervised steps over the Session's hetero loader.
+    # The Supervisor absorbs faults per the policy (transient retry,
+    # device-loss re-plan over survivors, restore-from-checkpoint
+    # fallback) and drives the periodic async checkpoints; on a
+    # fault-free run it is a plain pass-through around sess.step().
+    from repro.api import FaultPolicy, FaultSchedule, Supervisor
+    sess.events.verbose = True            # [fault] transition lines
+    schedule = (FaultSchedule.parse(args.fault_plan)
+                if args.fault_plan else None)
+    policy = FaultPolicy(max_retries=args.max_retries,
+                         min_devices=args.min_devices)
+    sup = Supervisor(sess, policy, schedule, ckpt_path=args.ckpt,
+                     save_every=args.ckpt_every,
+                     async_save=args.async_ckpt,
+                     keep_last=args.keep_last)
+
     tokens_seen = 0
     start = int(sess.state.step)
+    steps_run = 0
     t_start = time.time()
-    for step in range(start, args.steps):
-        met = sess.step()
+    while int(sup.session.state.step) < args.steps:
+        step = int(sup.session.state.step)
+        met = sup.step()
+        sess = sup.session                # recovery may rebind the session
+        steps_run += 1
         tokens_seen += int(met["tokens"])
         if step % args.log_every == 0:
             tps = sess.telemetry.tokens_per_sec
@@ -164,22 +203,36 @@ def main(argv=None):
         if args.replan_every and step and step % args.replan_every == 0:
             rep = sess.maybe_replan()
             if rep is not None:
+                imb = (f", imb={rep.drift.observed_imbalance:.2f}x"
+                       if rep.drift is not None else "")
                 print(f"[replan] step {step}: {rep.drift.reason} -> "
                       f"re-planned ({rep.plan_seconds:.2f}s plan + "
                       f"{rep.reshard_seconds:.2f}s reshard, "
                       f"stage={rep.zero_stage}, "
-                      f"source={rep.profile_source})")
+                      f"source={rep.profile_source}{imb})")
             else:
                 d = sess.drift()
                 if d is not None:
-                    print(f"[drift] step {step}: {d.reason}")
+                    imb = (f" imb={d.observed_imbalance:.2f}x"
+                           + (f" ({d.slowest_device})"
+                              if d.slowest_device else ""))
+                    print(f"[drift] step {step}: {d.reason}{imb}")
     dt = time.time() - t_start
-    steps_run = max(args.steps - start, 1)
     print(f"[done] {steps_run} steps, {tokens_seen} tokens, "
           f"{tokens_seen/dt:.0f} tok/s (wall, this host)")
     if args.ckpt:
-        fn = sess.save(args.ckpt)
-        print(f"[ckpt] saved {fn}")
+        out = sess.save(args.ckpt, async_=args.async_ckpt,
+                        keep_last=args.keep_last)
+        if args.async_ckpt:
+            errs = sess.flush_saves()
+            print(f"[ckpt] committed step {out.step} async"
+                  + (f" ({len(errs)} failed saves)" if errs else ""))
+        else:
+            print(f"[ckpt] saved {out}")
+    counts = sess.events.counts()
+    if counts:
+        print("[events] " + " ".join(f"{k}={v}"
+                                     for k, v in sorted(counts.items())))
 
 
 if __name__ == "__main__":

@@ -369,6 +369,41 @@ def test_replan_commit_failure_rolls_back(monkeypatch):
     assert np.isfinite(float(sess.step()["loss"]))
 
 
+def test_failed_replan_resets_drift_state(monkeypatch):
+    """Satellite (bugfix): a rolled-back replan must also reset the
+    telemetry EMA, per-device timers and the drift baseline. Keeping the
+    drifted window meant the very next maybe_replan() re-fired on the
+    same stale evidence — a failed-replan loop that never gathers a
+    fresh sample of reality."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, plan_seq=8, impl="reference")
+    for _ in range(4):
+        sess.step()
+    # manufacture drift: pretend observed steps are far off the plan
+    sess._drift_baseline = 1.0
+    for _ in range(4):
+        sess.telemetry.record(sess.plan.predicted.iter_time * 10)
+    for _ in range(3):
+        sess.device_timers.record({"T4-16G#1": 1.0, "T4-16G#2": 4.0})
+    rep = sess.drift()
+    assert rep.drifted and rep.observed_imbalance > 1.0
+
+    def boom():
+        raise RuntimeError("jit exploded")
+
+    monkeypatch.setattr(sess, "_build_step_fns", boom)
+    with pytest.raises(RuntimeError, match="jit exploded"):
+        sess.replan(trigger="drift")
+    # the stale evidence is gone: nothing to re-fire on until fresh
+    # samples re-establish drift under the (unchanged) old plan
+    assert sess.telemetry.count == 0
+    assert sess._drift_baseline is None
+    assert sess.device_timers.imbalance() == 1.0
+    assert sess.maybe_replan() is None
+    assert sess.replans == 0
+
+
 def test_adhoc_drift_probe_does_not_poison_calibration():
     """drift(config=) with a permissive ad-hoc config may judge however
     it likes, but the *persistent* baseline only calibrates once the

@@ -1,0 +1,460 @@
+"""Fault-tolerant Session runtime: atomic/async checkpointing with
+crash-consistent recovery, the deterministic fault-injection harness,
+and the supervised step loop (retry / re-plan over survivors / restore
+fallback).
+
+The checkpoint protocol tests exercise the exact crash points SIGKILL
+could hit (between temp-write and rename, before the manifest merge) via
+``SimulatedCrash`` injection and assert that readers only ever observe
+fully committed, digest-verified checkpoints. The 8-device acceptance
+path (lose two devices mid-run, continue on six, crash-mid-save then
+bit-identical restore) runs in a subprocess with placeholder XLA host
+devices.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.checkpoint import (AsyncCheckpointWriter, SimulatedCrash,
+                              committed_steps, latest_step,
+                              latest_verified_step, restore_checkpoint,
+                              save_checkpoint, sweep_retention,
+                              verify_checkpoint)
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+from repro.core.faults import (DeviceLossError, FaultPolicy, FaultSchedule,
+                               FaultToleranceExhausted, Supervisor,
+                               TransientStepError, classify_fault,
+                               drop_devices)
+from repro.core.telemetry import DeviceTimers
+
+
+def _params(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32) * scale,
+            "b": np.arange(3, dtype=np.float32) * scale}
+
+
+# ------------------------------------------------ atomic commit protocol --
+
+def test_sync_save_is_atomic_and_committed(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _params())
+    save_checkpoint(d, 5, _params(1))
+    assert committed_steps(d) == [0, 5]
+    assert latest_step(d) == 5
+    assert latest_verified_step(d) == 5
+    assert verify_checkpoint(d, 5)
+    # no temp residue after a clean commit
+    assert not list(tmp_path.glob("*.tmp.*"))
+
+
+def test_crash_between_temp_write_and_rename_leaves_no_torn_state(tmp_path):
+    """SimulatedCrash at payload_rename: the payload temp file exists but
+    was never renamed — the directory's committed set is unchanged and
+    latest_step still resolves to the previous good checkpoint."""
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _params())
+
+    def crash_hook(event, step):
+        if event == "payload_rename":
+            raise SimulatedCrash(f"killed during {event}")
+
+    with pytest.raises(SimulatedCrash):
+        save_checkpoint(d, 7, _params(1), io_hook=crash_hook)
+    assert committed_steps(d) == [3]
+    assert latest_step(d) == 3
+    assert latest_verified_step(d) == 3
+    # the torn write is invisible to the glob (ckpt_*.npz never matches
+    # the .tmp suffix) but its residue is on disk for the retention sweep
+    assert list(tmp_path.glob("*.tmp.*"))
+    sweep_retention(d, keep_last=5)
+    assert not list(tmp_path.glob("*.tmp.*"))
+    assert committed_steps(d) == [3]
+
+
+def test_crash_before_manifest_merge_is_not_committed(tmp_path):
+    """The manifest merge is the commit point: a crash after the payload
+    and meta renames but before the manifest write leaves files on disk
+    that no reader treats as committed."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _params())
+
+    def crash_hook(event, step):
+        if event == "manifest_write":
+            raise SimulatedCrash("killed before commit point")
+
+    with pytest.raises(SimulatedCrash):
+        save_checkpoint(d, 2, _params(1), io_hook=crash_hook)
+    assert (tmp_path / "ckpt_00000002.npz").exists()   # orphaned payload
+    assert committed_steps(d) == [1]
+    assert latest_verified_step(d) == 1
+
+
+def test_corrupt_payload_falls_back_to_previous_checkpoint(tmp_path):
+    """Digest mismatch on the newest checkpoint: restore (step=None)
+    skips it and loads the previous committed one bit-identically."""
+    d = str(tmp_path)
+    good = _params(seed=0)
+    save_checkpoint(d, 1, good)
+    save_checkpoint(d, 2, _params(seed=1))
+    (tmp_path / "ckpt_00000002.npz").write_bytes(b"garbage not a zipfile")
+    assert not verify_checkpoint(d, 2)
+    assert latest_verified_step(d) == 1
+
+    step, params, _ = restore_checkpoint(d, None, _params())
+    assert step == 1
+    for k in good:
+        np.testing.assert_array_equal(params[k], good[k])
+    # asking for the corrupt step explicitly is an error, not silence
+    with pytest.raises(ValueError, match="verif"):
+        restore_checkpoint(d, 2, _params())
+
+
+def test_keep_last_retention(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        save_checkpoint(d, s, _params(s), keep_last=2)
+    assert committed_steps(d) == [3, 4]
+    assert not (tmp_path / "ckpt_00000000.npz").exists()
+    assert not (tmp_path / "ckpt_00000000.json").exists()
+    assert latest_verified_step(d) == 4
+
+
+# ------------------------------------------------------- async writer ----
+
+def test_async_save_returns_before_write_completes(tmp_path):
+    """The deterministic stall test: the io_hook blocks the background
+    write on an Event, proving submit() returned while the commit was
+    still in flight — the critical path paid only for the snapshot."""
+    d = str(tmp_path)
+    gate = threading.Event()
+    entered = threading.Event()
+
+    def hook(event, step):
+        if event == "payload_write":
+            entered.set()
+            assert gate.wait(30)
+
+    w = AsyncCheckpointWriter(d, io_hook=hook)
+    pending = w.submit(4, _params())
+    assert not pending.done                    # write gated, submit returned
+    assert entered.wait(30)                    # background thread is inside
+    assert latest_step(d) is None              # nothing committed yet
+    gate.set()
+    assert pending.result(30).endswith("ckpt_00000004.npz")
+    assert latest_verified_step(d) == 4
+    w.close()
+
+
+def test_async_writer_retries_io_errors_with_backoff(tmp_path):
+    d = str(tmp_path)
+    sched = FaultSchedule().fail_ckpt_io(0, times=2)
+    events = []
+    w = AsyncCheckpointWriter(
+        d, io_hook=sched.checkpoint_io, backoff_s=0.01,
+        on_event=lambda kind, **kw: events.append(kind))
+    pending = w.submit(0, _params())
+    assert pending.result(30)
+    assert pending.retries == 2
+    assert latest_verified_step(d) == 0
+    assert events.count("ckpt_io_retry") == 2
+    assert events[-1] == "ckpt_committed"
+    w.close()
+
+
+def test_async_writer_exhausts_retries_then_fails(tmp_path):
+    d = str(tmp_path)
+    sched = FaultSchedule().fail_ckpt_io(0, times=99)
+    w = AsyncCheckpointWriter(d, io_hook=sched.checkpoint_io,
+                              max_retries=2, backoff_s=0.01)
+    pending = w.submit(0, _params())
+    with pytest.raises(OSError):
+        pending.result(30)
+    assert w.errors and latest_step(d) is None
+    w.close()
+
+
+def test_async_crash_mid_save_restores_previous_bit_identically(tmp_path):
+    """Crash in the background writer between temp-write and rename: the
+    PendingSave surfaces the crash, and restore falls back to the last
+    committed checkpoint with bit-identical arrays."""
+    d = str(tmp_path)
+    good = _params(seed=7)
+    save_checkpoint(d, 10, good)
+    sched = FaultSchedule().crash_ckpt(11, at="payload_rename")
+    w = AsyncCheckpointWriter(d, io_hook=sched.checkpoint_io)
+    pending = w.submit(11, _params(seed=8))
+    with pytest.raises(SimulatedCrash):
+        pending.result(30)
+    assert latest_verified_step(d) == 10
+    step, params, _ = restore_checkpoint(d, None, _params())
+    assert step == 10
+    for k in good:
+        np.testing.assert_array_equal(params[k], good[k])
+    w.close()
+
+
+# ------------------------------------------------- fault schedule units --
+
+def test_fault_schedule_parse_grammar():
+    s = FaultSchedule.parse(
+        "lose:40:T4-16G#3+T4-16G#4,step_fail:5:2,ckpt_io:25:2,"
+        "ckpt_crash:30:payload_rename,slow:10-20:T4-16G#2:2.0")
+    kinds = [e.kind for e in s.entries]
+    assert kinds == ["lose", "step_fail", "ckpt_io", "ckpt_crash", "slow"]
+    assert s.entries[0].devices == ["T4-16G#3", "T4-16G#4"]
+    assert s.entries[1].count == 2
+    assert s.entries[3].at == "payload_rename"
+    assert s.slow_factor(15, device="T4-16G#2") == 2.0
+    assert s.slow_factor(15, device="V100-16G#1") == 1.0
+    assert s.slow_factor(25, device="T4-16G#2") == 1.0
+    with pytest.raises(ValueError, match="unknown fault spec"):
+        FaultSchedule.parse("meteor:1")
+
+
+def test_fault_schedule_entries_are_consumed():
+    s = FaultSchedule().fail_step(3, times=2)
+    s.check_step(1)                            # before the step: nothing
+    for _ in range(2):
+        with pytest.raises(TransientStepError):
+            s.check_step(3)
+    s.check_step(3)                            # budget consumed: clean
+    assert s.fired == ["step_fail@3", "step_fail@3"]
+
+    s = FaultSchedule().lose(4, "T4-16G#2")
+    with pytest.raises(DeviceLossError) as ei:
+        s.check_step(7)                        # >= step still fires (late)
+    assert ei.value.lost == ["T4-16G#2"]
+    s.check_step(7)                            # once only
+
+
+def test_classify_fault():
+    assert classify_fault(DeviceLossError(["a"])) == "membership"
+    assert classify_fault(TransientStepError("x")) == "transient"
+    assert classify_fault(OSError("disk")) == "transient"
+    assert classify_fault(ValueError("bug")) == "fatal"
+    assert classify_fault(TypeError("bug")) == "fatal"
+
+
+def test_drop_devices():
+    c = make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+    s = drop_devices(c, ["T4-16G#3", "T4-16G#4"])
+    assert s.n == 6
+    names = [d.name for d in s.devices]
+    assert names.count("V100-16G") == 4 and names.count("T4-16G") == 2
+    assert s.inter_link_gbps == c.inter_link_gbps
+    with pytest.raises(ValueError, match="no 'H100-80G' left"):
+        drop_devices(c, ["H100-80G#1"])
+    with pytest.raises(ValueError, match="empty cluster"):
+        drop_devices(make_cluster("c1", [("T4-16G", 1)], 12.0), ["T4-16G#1"])
+
+
+def test_device_timers_imbalance():
+    t = DeviceTimers(warmup=0)
+    for _ in range(3):
+        t.record({"a": 1.0, "b": 3.0})
+    assert t.imbalance() == pytest.approx(3.0)
+    assert t.slowest() == "b"
+    t.reset()
+    assert t.imbalance() == 1.0 and t.slowest() is None
+
+
+# ------------------------------------------------- supervised step loop --
+
+def _small_session(**kw):
+    cfg = get_config("llama-0.5b", reduced=True)
+    kw.setdefault("zero", 0)
+    return Session.build(cfg, None, gbs=4, seq=8, impl="reference", **kw)
+
+
+def test_supervisor_transient_retry_loses_no_microsteps():
+    """A transient step failure retries in place and the loss trajectory
+    is identical to a fault-free control run — the interrupted
+    accumulation batch replayed in full, nothing lost or double-fed."""
+    control = _small_session(accum_steps=2)
+    want = [float(control.step()["loss"]) for _ in range(4)]
+
+    sess = _small_session(accum_steps=2)
+    sched = FaultSchedule().fail_step(1, times=1).fail_step(3, times=2)
+    sup = Supervisor(sess, FaultPolicy(max_retries=2, backoff_s=0.001),
+                     sched)
+    got = [float(sup.step()["loss"]) for _ in range(4)]
+    assert got == want
+    assert len(sched.fired) == 3
+    assert sup.events.counts()["transient"] == 3
+
+
+def test_supervisor_exhausts_retry_budget():
+    sess = _small_session()
+    sched = FaultSchedule().fail_step(0, times=99)
+    sup = Supervisor(sess, FaultPolicy(max_retries=1, backoff_s=0.001),
+                     sched)
+    with pytest.raises(FaultToleranceExhausted):
+        sup.step()
+    assert sup.events.counts()["gave_up"] == 1
+
+
+def test_supervisor_fatal_faults_are_not_retried():
+    sess = _small_session()
+    sup = Supervisor(sess, FaultPolicy(backoff_s=0.001))
+
+    calls = []
+    real_step = sess.step
+
+    def bad_step(*a, **k):
+        calls.append(1)
+        raise ValueError("programming error")
+
+    sess.step = bad_step
+    with pytest.raises(ValueError, match="programming error"):
+        sup.step()
+    assert len(calls) == 1                     # exactly one attempt
+    sess.step = real_step
+
+
+def test_supervisor_min_devices_gate():
+    """Device loss leaving fewer survivors than the policy's floor is
+    unrecoverable — and the session is untouched by the attempt."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, plan_seq=8, impl="reference")
+    sched = FaultSchedule().lose(0, "T4-16G#2")
+    sup = Supervisor(sess, FaultPolicy(min_devices=2), sched)
+    with pytest.raises(FaultToleranceExhausted, match="surviving"):
+        sup.step()
+    assert sess.cluster.n == 2                 # no partial recovery
+
+
+def test_supervisor_autosave_and_flush(tmp_path):
+    d = str(tmp_path)
+    sess = _small_session()
+    sup = Supervisor(sess, ckpt_path=d, save_every=2, async_save=True,
+                     keep_last=2)
+    sup.run(4)
+    assert sess.flush_saves() == []
+    assert committed_steps(d) == [2, 4]
+
+
+def test_slow_host_shows_in_observed_imbalance():
+    """An injected straggler must surface in DriftReport
+    .observed_imbalance via the per-device timing proxy."""
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, plan_seq=8, impl="reference")
+    sess.attach_faults(FaultSchedule().slow(0, 99, 3.0, device="T4-16G#2"))
+    for _ in range(6):
+        sess.step()
+    rep = sess.drift()
+    assert rep is not None
+    assert rep.observed_imbalance == pytest.approx(3.0, rel=0.2)
+    assert rep.slowest_device == "T4-16G#2"
+
+
+def test_session_drain_rewinds_loader_to_applied_step():
+    sess = _small_session()
+    for _ in range(3):
+        sess.step()
+    loader = sess.loader()
+    loader.next_batch()                        # in-flight batch pulled...
+    sess.drain()                               # ...fault: drain discards it
+    assert loader._epoch == int(sess.state.step)
+    # the replayed batch is the one the interrupted step consumed
+    b1 = loader.next_batch()
+    loader.seek(3)
+    b2 = loader.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+# --------------------------------------- 8-device acceptance (slow) -----
+
+FT_SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+from dataclasses import replace
+import jax, numpy as np
+from repro.api import (FaultPolicy, FaultSchedule, Session, SimulatedCrash,
+                       Supervisor)
+from repro.checkpoint import committed_steps, latest_verified_step
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+
+cfg = get_config("llama-0.5b", reduced=True)
+cfg = replace(cfg, dtype="float32", param_dtype="float32")
+C8 = lambda: make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+kw = dict(gbs=16, seq=16, zero=3, impl="reference", lr=1e-3)
+
+ckpt = tempfile.mkdtemp()
+sess = Session.build(cfg, C8(), **kw)
+assert sess.mesh.devices.size == 8
+
+# lose two devices at step 3, fail checkpoint IO once at the step-2
+# autosave: the supervisor must retry the save, re-plan onto the six
+# survivors, and keep training with finite loss
+sched = (FaultSchedule().lose(3, "T4-16G#3", "T4-16G#4")
+                        .fail_ckpt_io(2, times=1))
+sup = Supervisor(sess, FaultPolicy(min_devices=4), sched,
+                 ckpt_path=ckpt, save_every=2, async_save=True)
+m = sup.run(6)
+assert np.isfinite(float(m["loss"])), m
+assert sup.session.cluster.n == 6
+assert sup.session.mesh.devices.size == 6
+assert int(sup.session.state.step) == 6
+counts = sup.events.counts()
+assert counts["device_loss"] == 1 and counts["replan_recovered"] == 1
+assert counts["ckpt_io_retry"] == 1            # the injected IO fault
+assert sup.session.last_replan.trigger == "fault"
+assert sup.session.flush_saves() == []         # every save committed
+assert committed_steps(ckpt) == [2, 4, 6]
+print("FT_DEVICE_LOSS_OK")
+
+# trajectory check: the post-loss continuation consumed the full global
+# batch (total_batch preserved over survivors)
+assert sum(a.gmbs for a in
+           sup.session.plan.allocation.assignments.values()) == 16
+print("FT_BATCH_PRESERVED_OK")
+
+# crash mid-save (between temp write and rename), then restore: the torn
+# write is invisible and restore lands on the last committed step with
+# bit-identical params
+want = jax.tree.map(np.asarray, sup.session.state.params)
+crash = FaultSchedule().crash_ckpt(6, at="payload_rename")
+sup.session.attach_faults(crash)
+pend = sup.session.save(ckpt, async_=True)
+try:
+    pend.result(60)
+    raise SystemExit("expected SimulatedCrash")
+except SimulatedCrash:
+    pass
+assert latest_verified_step(ckpt) == 6         # prior commit, untouched
+resumed = Session.restore(ckpt, cfg=cfg)
+assert int(resumed.state.step) == 6
+for a, b in zip(jax.tree.leaves(want),
+                jax.tree.leaves(resumed.state.params)):
+    np.testing.assert_array_equal(a, np.asarray(b))
+assert np.isfinite(float(resumed.step()["loss"]))
+print("FT_CRASH_RESTORE_OK")
+print("FT_ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fault_tolerance_8dev_subprocess():
+    """Acceptance on the 8-device CPU mesh: lose two devices mid-run
+    (supervised re-plan onto six survivors, finite loss, async saves
+    committed through an injected IO fault), then crash-mid-save and
+    bit-identical restore from the last committed checkpoint."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", FT_SUBPROC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "FT_ALL_OK" in out.stdout, out.stdout + out.stderr
