@@ -28,7 +28,9 @@ def _parse_derived(derived: str) -> dict:
                 "packed_tokens_per_sec", "padded_tokens_per_sec",
                 "pad_fraction_packed", "pad_fraction_padded",
                 "async_stall_ms", "blocking_stall_ms", "recovery_ms",
-                "recovery_steps_equivalent"):
+                "recovery_steps_equivalent", "rearbitration_ms",
+                "arbitration_search_ms", "arbitration_steps_equivalent",
+                "utility_arbiter", "utility_even", "utility_delta"):
         # anchor on a field boundary: the bare "ms" key must not match
         # inside "replan_ms=…" / "step_ms=…"
         m = re.search(rf"(?:^|;){key}=([-0-9.eE]+)x?(?:;|$)", derived)

@@ -13,8 +13,15 @@ The fault-tolerance surface rides on the same facade: `Session.save`
 grows async + retention modes, `Supervisor` wraps the step loop with
 retry / re-plan / restore recovery, and `FaultSchedule` scripts
 deterministic fault plans for tests and benchmarks.
+
+Multi-tenancy sits one layer above: `ClusterArbiter` owns the physical
+cluster and leases disjoint device subsets to registered tenants (each a
+Session + FaultPolicy + priority floor), re-arbitrating globally on
+fault/drift via `TenantSupervisor` (see README.md §multi-tenant).
 """
 from repro.api.session import Session
+from repro.core.arbiter import (ClusterArbiter, Tenant, TenantSupervisor,
+                                TenantSuspended)
 from repro.api.state import (StaticAxes, TrainState, host_train_state,
                              new_train_state)
 from repro.api.steps import ProbeHarness, build_step, step_io
@@ -23,9 +30,9 @@ from repro.core.faults import (DeviceLossError, FaultPolicy, FaultSchedule,
                                FaultToleranceExhausted, Supervisor,
                                TransientStepError, classify_fault,
                                drop_devices)
-from repro.core.telemetry import (DeviceTimers, DriftConfig, DriftReport,
-                                  EMAWindow, EventLog, FaultEvent,
-                                  ReplanReport)
+from repro.core.telemetry import (ArbitrationReport, DeviceTimers,
+                                  DriftConfig, DriftReport, EMAWindow,
+                                  EventLog, FaultEvent, ReplanReport)
 
 __all__ = ["Session", "TrainState", "StaticAxes", "new_train_state",
            "host_train_state", "build_step", "step_io", "ProbeHarness",
@@ -34,4 +41,6 @@ __all__ = ["Session", "TrainState", "StaticAxes", "new_train_state",
            "FaultSchedule", "FaultPolicy", "Supervisor", "classify_fault",
            "drop_devices", "DeviceLossError", "TransientStepError",
            "FaultToleranceExhausted",
-           "AsyncCheckpointWriter", "PendingSave", "SimulatedCrash"]
+           "AsyncCheckpointWriter", "PendingSave", "SimulatedCrash",
+           "ClusterArbiter", "Tenant", "TenantSupervisor",
+           "TenantSuspended", "ArbitrationReport"]

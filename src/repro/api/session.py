@@ -178,6 +178,15 @@ class Session:
         self._jit_step_raw = None         # the jitted fn before injection
         self._prefill = None
         self._decode = None
+        self._prefill_raw = None          # serve fns before fault injection
+        self._decode_raw = None
+        # serve-mode fault-schedule clock: decode calls have no state.step,
+        # so each decode consumes one tick for FaultSchedule matching
+        self._serve_tick = 0
+        # multi-tenant surface (core/arbiter.py): the lease this session
+        # currently runs under, and whether the arbiter suspended it
+        self.lease = None
+        self._suspended = False
         self._loader = None
         self._p_shardings = None
         self._o_shardings = None
@@ -513,23 +522,41 @@ class Session:
             self._jit_step_raw = jax.jit(state_step)
             self._apply_fault_wrapper()
         else:  # serve
-            self._prefill = jax.jit(_steps.build_step(
+            self._prefill_raw = jax.jit(_steps.build_step(
                 cfg, rules, kind="prefill", window=self.window,
                 impl=self.impl))
-            self._decode = jax.jit(_steps.build_step(
+            self._decode_raw = jax.jit(_steps.build_step(
                 cfg, rules, kind="decode", window=self.window,
                 impl=self.impl))
+            self._apply_fault_wrapper()
+
+    def _bump_serve_tick(self) -> int:
+        tick = self._serve_tick
+        self._serve_tick += 1
+        return tick
 
     def _apply_fault_wrapper(self):
-        """(Re)derive ``_jit_step`` from the raw jitted fn: plain when no
-        fault schedule is attached, wrapped with step-boundary injection
-        otherwise. Kept separate from ``_build_step_fns`` so attaching a
-        schedule does not force a re-jit."""
+        """(Re)derive the dispatched step fns from the raw jitted fns:
+        plain when no fault schedule is attached, wrapped with
+        step-boundary injection otherwise. Kept separate from
+        ``_build_step_fns`` so attaching a schedule does not force a
+        re-jit. Serve sessions have no ``state.step`` clock — each decode
+        call consumes one ``_serve_tick`` for schedule matching (prefill
+        reads the tick without consuming it)."""
         fn = self._jit_step_raw
         if fn is not None and self._fault_schedule is not None:
             fn = _steps.with_fault_injection(
                 fn, self._fault_schedule, lambda: int(self.state.step))
         self._jit_step = fn
+        pf, dc = self._prefill_raw, self._decode_raw
+        if self._fault_schedule is not None:
+            if pf is not None:
+                pf = _steps.with_fault_injection(
+                    pf, self._fault_schedule, lambda: self._serve_tick)
+            if dc is not None:
+                dc = _steps.with_fault_injection(
+                    dc, self._fault_schedule, self._bump_serve_tick)
+        self._prefill, self._decode = pf, dc
 
     # ---------------------------------------------------------- faults --
     def attach_faults(self, schedule) -> "Session":
@@ -609,6 +636,10 @@ class Session:
         ``self.state``. serve: ``step(tokens, decode_state)`` aliases
         :meth:`decode`.
         """
+        if self._suspended:
+            raise RuntimeError(
+                "session is suspended (its lease was revoked); resume() "
+                "must run before stepping")
         if self.mode == "serve":
             return self.decode(batch, *args)
         if self.mode != "train":
@@ -752,8 +783,8 @@ class Session:
         Returns a :class:`ReplanReport` (plan + reshard wall seconds —
         the elastic overhead the benchmarks compare to one train step).
         """
-        if self.mode != "train":
-            raise RuntimeError("replan() is train-mode only")
+        if self.mode not in ("train", "serve"):
+            raise RuntimeError("replan() is train/serve-mode only")
         if profile is not None and profile not in PROFILES:
             raise ValueError(
                 f"profile={profile!r}; expected one of {PROFILES}")
@@ -768,7 +799,7 @@ class Session:
         tp = time.time()
         new_plan = None
         stage = self.rules.zero_stage
-        if new_cluster is not None:
+        if new_cluster is not None and self.mode == "train":
             new_plan = self._run_planner(new_cluster, self.rules.overlap,
                                          gbs=new_gbs, profile=new_profile)
             stage = new_plan.zero_stage
@@ -782,10 +813,11 @@ class Session:
         rollback = (self.mesh, self.cluster, self.plan, self.layout,
                     self.rules, self.accum_steps, self.profile, self.gbs,
                     self._p_shardings, self._o_shardings, self._jit_step,
-                    self._jit_step_raw, self.state)
+                    self._jit_step_raw, self._prefill, self._decode,
+                    self._prefill_raw, self._decode_raw, self.state)
         try:
             self.profile, self.gbs = new_profile, new_gbs
-            if new_cluster is not None:
+            if new_cluster is not None and self.mode == "train":
                 self.plan = new_plan
             if mesh is not None:
                 self.mesh = mesh
@@ -821,7 +853,8 @@ class Session:
             (self.mesh, self.cluster, self.plan, self.layout, self.rules,
              self.accum_steps, self.profile, self.gbs, self._p_shardings,
              self._o_shardings, self._jit_step, self._jit_step_raw,
-             self.state) = rollback
+             self._prefill, self._decode, self._prefill_raw,
+             self._decode_raw, self.state) = rollback
             with self.mesh:
                 self.state = jax.device_put(host, self._state_shardings())
             if self._loader is not None:
@@ -871,6 +904,10 @@ class Session:
     def decode(self, tokens, decode_state):
         if self._decode is None:
             raise RuntimeError("decode() is serve-mode only")
+        if self._suspended:
+            raise RuntimeError(
+                "session is suspended (its lease was revoked); resume() "
+                "must run before decoding")
         with self.mesh:
             return self._decode(self.state.params, tokens, decode_state)
 
@@ -989,7 +1026,7 @@ class Session:
 
     # ---------------------------------------------------- save/restore --
     def save(self, path: str, *, async_: bool = False,
-             keep_last: Optional[int] = None):
+             keep_last: Optional[int] = None, incremental: bool = True):
         """Checkpoint params/opt/step plus the session recipe; restore
         with :meth:`Session.restore`.
 
@@ -1000,19 +1037,26 @@ class Session:
         and returns a :class:`~repro.checkpoint.PendingSave` (``.result()``
         to join one save, :meth:`flush_saves` to join them all).
         ``keep_last=N`` prunes all but the newest N committed checkpoints
-        after each successful commit."""
-        if self.mode != "train":
-            raise RuntimeError("save() is train-mode only")
+        after each successful commit. ``incremental=True`` (default)
+        skips re-writing arrays whose crc32 digest is unchanged from the
+        previous committed step — their manifest entries point at the
+        prior payload file instead (restore/verify follow the
+        indirection). Serve sessions save too (params-only, opt=None) —
+        the arbiter's suspend path needs a durable snapshot regardless of
+        mode."""
+        if self.mode not in ("train", "serve"):
+            raise RuntimeError(f"save() not available in mode={self.mode!r}")
         meta = {"session": self._meta}
         if not async_:
             out = save_checkpoint(path, int(self.state.step),
                                   self.state.params, self.state.opt,
                                   metadata=meta, keep_last=keep_last,
-                                  io_hook=self._ckpt_io_hook)
+                                  io_hook=self._ckpt_io_hook,
+                                  incremental=incremental)
             self.events.emit("ckpt_committed", step=int(self.state.step),
                              detail="blocking")
             return out
-        writer = self._writer_for(path, keep_last)
+        writer = self._writer_for(path, keep_last, incremental)
         # the snapshot is the only part that must see live state: gather
         # to host numpy, after which training may keep mutating devices
         host = host_train_state(self.state)
@@ -1021,8 +1065,8 @@ class Session:
         self.events.emit("save_async", step=pending.step)
         return pending
 
-    def _writer_for(self, path: str,
-                    keep_last: Optional[int]) -> AsyncCheckpointWriter:
+    def _writer_for(self, path: str, keep_last: Optional[int],
+                    incremental: bool = False) -> AsyncCheckpointWriter:
         key = str(path)
         w = self._writers.get(key)
         if w is None:
@@ -1032,6 +1076,7 @@ class Session:
             self._writers[key] = w
         if keep_last is not None:
             w.keep_last = keep_last
+        w.incremental = incremental
         return w
 
     def flush_saves(self, timeout: Optional[float] = None) -> list:
@@ -1041,6 +1086,48 @@ class Session:
         for w in self._writers.values():
             w.wait(timeout)
         return [e for w in self._writers.values() for e in w.errors]
+
+    # ------------------------------------------------- suspend / resume --
+    def suspend(self, ckpt_path: Optional[str] = None, *,
+                reason: str = "") -> "Session":
+        """Yield this session's devices: drain in-flight work, flush
+        pending async saves, commit a blocking checkpoint (when
+        ``ckpt_path`` is given — the state is durable *before* the lease
+        is handed away), and refuse further step/decode calls until
+        :meth:`resume`. Idempotent. The arbiter's graceful-degradation
+        path: the lowest-priority tenant suspends here rather than
+        crashing anyone."""
+        if self._suspended:
+            return self
+        self.drain()
+        self.flush_saves()
+        if ckpt_path is not None:
+            self.save(ckpt_path)          # blocking — committed now
+        self._suspended = True
+        self.events.emit("suspended", step=int(self.state.step),
+                         detail=reason)
+        return self
+
+    def resume(self, cluster=None, *, ckpt_path: Optional[str] = None,
+               mesh=None, trigger: str = "resume") -> "Session":
+        """Undo :meth:`suspend`: re-admit step/decode calls, optionally
+        migrate onto a new lease (``cluster=`` goes through
+        :meth:`replan`) and reload the suspend-time checkpoint
+        (``ckpt_path=`` — the suspend/resume round trip goes through the
+        committed state, so a suspended tenant's devices can be reused
+        freely in between)."""
+        self._suspended = False
+        if cluster is not None or mesh is not None:
+            self.replan(cluster=cluster, mesh=mesh, trigger=trigger)
+        if ckpt_path is not None:
+            from repro.checkpoint import latest_verified_step
+            step = latest_verified_step(ckpt_path)
+            if step is not None:
+                self.load(ckpt_path, step)
+        self.events.emit("resumed", step=int(self.state.step),
+                         detail=f"devices={self.cluster.n}"
+                                if self.cluster is not None else "")
+        return self
 
     def load(self, path: str, step: Optional[int] = None) -> "Session":
         """Load a checkpoint into this (already built) session.

@@ -89,9 +89,13 @@ class AsyncCheckpointWriter:
                  max_retries: int = 3, backoff_s: float = 0.05,
                  backoff_factor: float = 2.0,
                  io_hook: Optional[Callable[[str, int], None]] = None,
-                 on_event: Optional[Callable[..., None]] = None):
+                 on_event: Optional[Callable[..., None]] = None,
+                 incremental: bool = False):
         self.path = str(path)
         self.keep_last = keep_last
+        # skip re-writing arrays unchanged since the previous committed
+        # step (manifest-level indirection; see checkpoint.commit_payload)
+        self.incremental = incremental
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.backoff_factor = backoff_factor
@@ -173,7 +177,7 @@ class AsyncCheckpointWriter:
             try:
                 pending.path = commit_payload(
                     self.path, pending.step, arrays, meta, digests,
-                    io_hook=self.io_hook)
+                    io_hook=self.io_hook, incremental=self.incremental)
                 self.committed.append(pending.step)
                 self.on_event("ckpt_committed", step=pending.step,
                               detail=f"retries={pending.retries}")

@@ -132,21 +132,55 @@ def prepare_payload(step: int, params, opt_state=None,
     return out, meta, digests
 
 
+def _incremental_sources(d: Path, step: int,
+                         digests: Dict[str, str]) -> Dict[str, str]:
+    """Map each array key whose digest is unchanged from the previous
+    committed step to the payload *file* that already holds its bytes
+    (following the previous entry's own indirection, so chains collapse
+    to the origin file). Keys absent from the map must be written."""
+    manifest = _load_manifest(d)
+    prev_steps = [int(s) for s in manifest["steps"] if int(s) < step]
+    if not prev_steps:
+        return {}
+    prev = manifest["steps"][str(max(prev_steps))]
+    prev_sources = prev.get("sources", {})
+    sources: Dict[str, str] = {}
+    for key, want in digests.items():
+        if prev.get("digests", {}).get(key) != want:
+            continue
+        src = prev_sources.get(key, prev["file"])
+        if (d / src).exists():
+            sources[key] = src
+    return sources
+
+
 def commit_payload(path: str, step: int, arrays: Dict[str, np.ndarray],
                    meta: Dict, digests: Dict[str, str], *,
-                   io_hook: IoHook = None, fsync: bool = True) -> str:
+                   io_hook: IoHook = None, fsync: bool = True,
+                   incremental: bool = False) -> str:
     """Write one checkpoint with the crash-consistent commit protocol:
     payload (tmp→rename), metadata (tmp→rename), then the manifest
     update (tmp→rename) as the commit point. A crash at any earlier
-    point leaves the previous committed step authoritative."""
+    point leaves the previous committed step authoritative.
+
+    ``incremental=True`` compares ``digests`` against the previous
+    committed manifest entry and skips re-writing unchanged arrays: the
+    new entry's ``sources`` table points each skipped key at the prior
+    step's payload file, and the digest table stays complete, so
+    verify/restore follow the indirection transparently.
+    :func:`sweep_retention` keeps any payload file a surviving manifest
+    entry still references."""
     import io
 
     d = Path(path)
     d.mkdir(parents=True, exist_ok=True)
     hook = io_hook or (lambda event, s: None)
 
+    sources = _incremental_sources(d, step, digests) if incremental else {}
+    written = {k: v for k, v in arrays.items() if k not in sources}
+
     buf = io.BytesIO()
-    np.savez(buf, **arrays)
+    np.savez(buf, **written)
     hook("payload_write", step)
     target = d / _payload_name(step)
     tmp = target.with_name(target.name + f".tmp.{os.getpid()}")
@@ -164,11 +198,14 @@ def commit_payload(path: str, step: int, arrays: Dict[str, np.ndarray],
 
     hook("manifest_write", step)
     manifest = _load_manifest(d)
-    manifest["steps"][str(step)] = {
+    entry = {
         "file": _payload_name(step), "meta": _meta_name(step),
         "digests": digests,
         "recipe": meta.get("session"),
     }
+    if sources:
+        entry["sources"] = sources
+    manifest["steps"][str(step)] = entry
     _atomic_write(d / MANIFEST_NAME, json.dumps(manifest).encode(),
                   fsync=fsync)
     return str(target)
@@ -177,13 +214,17 @@ def commit_payload(path: str, step: int, arrays: Dict[str, np.ndarray],
 def save_checkpoint(path: str, step: int, params, opt_state=None,
                     metadata: Optional[Dict] = None, *,
                     keep_last: Optional[int] = None,
-                    io_hook: IoHook = None) -> str:
+                    io_hook: IoHook = None,
+                    incremental: bool = False) -> str:
     """Blocking save: snapshot + commit protocol in the caller's thread
     (``repro.checkpoint.async_writer`` moves everything after the
     snapshot off the critical path). ``keep_last=N`` sweeps older
-    committed checkpoints after the commit."""
+    committed checkpoints after the commit; ``incremental=True`` skips
+    re-writing arrays unchanged since the previous committed step (their
+    manifest entries point at the prior payload file)."""
     arrays, meta, digests = prepare_payload(step, params, opt_state, metadata)
-    fn = commit_payload(path, step, arrays, meta, digests, io_hook=io_hook)
+    fn = commit_payload(path, step, arrays, meta, digests, io_hook=io_hook,
+                        incremental=incremental)
     if keep_last is not None:
         sweep_retention(path, keep_last)
     return fn
@@ -228,9 +269,17 @@ def verify_checkpoint(path: str, step: int) -> bool:
         except Exception:  # noqa: BLE001 — any unreadable form is torn
             return False
     try:
-        data = np.load(d / rec["file"])
+        sources = rec.get("sources", {})
+        cache: Dict[str, Any] = {}
+
+        def _arr(key: str):
+            fname = sources.get(key, rec["file"])
+            if fname not in cache:
+                cache[fname] = np.load(d / fname)
+            return cache[fname][key]
+
         for key, want in rec["digests"].items():
-            if _digest(data[key]) != want:
+            if _digest(_arr(key)) != want:
                 return False
         json.loads((d / rec["meta"]).read_text())
         return True
@@ -260,8 +309,18 @@ def sweep_retention(path: str, keep_last: int) -> List[int]:
     if drop:
         records = {s: manifest["steps"].pop(str(s)) for s in drop}
         _atomic_write(d / MANIFEST_NAME, json.dumps(manifest).encode())
+        # an incremental entry's sources point into *older* payload
+        # files: any file a surviving entry still references must not be
+        # unlinked, or the newer checkpoint would silently lose leaves
+        referenced = set()
+        for rec in manifest["steps"].values():
+            referenced.add(rec["file"])
+            referenced.update(rec.get("sources", {}).values())
         for s, rec in records.items():
-            for name in (rec["file"], rec["meta"]):
+            names = [rec["meta"]]
+            if rec["file"] not in referenced:
+                names.append(rec["file"])
+            for name in names:
                 try:
                     (d / name).unlink()
                 except OSError:
@@ -309,7 +368,18 @@ def restore_checkpoint(path: str, step: Optional[int], params_template,
             f"checkpoint step {step} under {path} is torn or corrupt "
             f"(digest mismatch); newest verified step is "
             f"{latest_verified_step(path)}")
-    data = np.load(d / _payload_name(step))
+    rec = _load_manifest(d)["steps"].get(str(step), {})
+    sources = rec.get("sources", {})
+    payloads = {None: np.load(d / rec.get("file", _payload_name(step)))}
+
+    def _read(key: str):
+        # incremental entries source unchanged leaves from a prior
+        # step's payload file; everything else lives in this step's own
+        fname = sources.get(key)
+        if fname not in payloads:
+            payloads[fname] = np.load(d / fname)
+        return payloads[fname][key]
+
     meta = json.loads((d / _meta_name(step)).read_text())
     dtypes = meta.get("dtypes", {})
 
@@ -324,7 +394,7 @@ def restore_checkpoint(path: str, step: Optional[int], params_template,
         for (pth, _), sh in zip(with_path, sh_leaves):
             k = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                          for p in pth)
-            arr = data[f"{prefix}/{k}"]
+            arr = _read(f"{prefix}/{k}")
             if dtypes.get(f"{prefix}/{k}") == "bfloat16":
                 arr = arr.view(jnp.bfloat16.dtype)
             new_leaves.append(jax.device_put(arr, sh) if sh is not None

@@ -1,0 +1,567 @@
+"""Multi-tenant cluster arbitration: N Sessions, one physical cluster.
+
+A production cluster is never owned by one job — the realistic
+heavy-traffic shape is a train Session and a serve Session co-located on
+the same devices. PR 7's Supervisor recovers each Session in isolation
+(``replan(cluster=survivors)``), which is locally correct and globally
+naive: tenant A's loss should be able to shrink A, make B donate, or —
+when A is higher priority — be absorbed entirely by B.
+
+:class:`ClusterArbiter` owns the physical :class:`ClusterSpec` and
+leases disjoint device subsets to registered tenants. Arbitration is
+Algorithm-1-native: for each candidate partition of the healthy devices
+it runs every tenant's *own* planner constrained to its tentative lease
+— the train tenant's Poplar plan (measured profiles flow through the
+session's shared ``profile_cache``, so candidate sweeps cost no new
+probes) and the serve tenant's decode-wave plan — and picks the
+partition maximizing summed weighted utility subject to every tenant's
+``min_devices`` floor. When no partition satisfies all floors, the
+arbiter degrades gracefully in priority order: the lowest-priority
+tenant is suspended behind a drained, committed checkpoint
+(EventLog-recorded) and auto-resumes when devices return.
+
+:class:`TenantSupervisor` is the PR-7 Supervisor with its
+membership-change recovery routed through the arbiter: a
+``DeviceLossError`` in any tenant triggers *one* global re-arbitration
+(simultaneous reports of the same physical loss converge — no replan
+storm), after which every surviving tenant runs on its new lease.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec, make_cluster
+from repro.core.faults import (FaultPolicy, FaultToleranceExhausted,
+                               Supervisor)
+from repro.core.profiler import SimOOM
+from repro.core.telemetry import (ArbitrationReport, DriftConfig, EMAWindow,
+                                  EventLog, detect_drift)
+
+
+class TenantSuspended(RuntimeError):
+    """Raised to a tenant's driver when arbitration left *this* tenant
+    without a lease (it was the lowest-priority floor that had to give).
+    The tenant's state is committed — it auto-resumes on
+    :meth:`ClusterArbiter.restore_devices`."""
+
+
+@dataclass
+class Tenant:
+    """One registered workload plus its runtime bindings."""
+    name: str
+    kind: str                          # "train" | "serve"
+    cfg: object
+    priority: int = 0                  # higher = kept longer under pressure
+    min_devices: int = 1               # lease floor (else: suspend)
+    weight: float = 1.0                # utility scale in the global objective
+    policy: FaultPolicy = field(default_factory=FaultPolicy)
+    # train workload
+    gbs: int = 0
+    seq: int = 0
+    zero: Optional[int] = None
+    # serve workload
+    requests: int = 0
+    cache_len: int = 0
+    ckpt_path: Optional[str] = None
+    # runtime bindings
+    session: object = None
+    supervisor: Optional[Supervisor] = None
+    suspended: bool = False
+    lease: Optional[ClusterSpec] = None
+    lease_devices: Tuple[str, ...] = ()
+    last_plan: object = None
+    predicted_utility: float = 0.0
+    # serve-side drift: observed wave latencies vs last_plan.wave_latency
+    observed: EMAWindow = field(default_factory=lambda: EMAWindow(warmup=0))
+    _drift_baseline: Optional[float] = None
+    _order: int = 0                    # registration order (tiebreak)
+
+
+class ClusterArbiter:
+    """Owns the physical cluster; leases disjoint, exhaustive device
+    subsets to tenants and re-arbitrates on fault, drift, or device
+    return. See the module docstring for the algorithm."""
+
+    def __init__(self, cluster: ClusterSpec, *,
+                 events: Optional[EventLog] = None,
+                 drift: Optional[DriftConfig] = None,
+                 max_candidates: int = 4096):
+        self.cluster = cluster
+        self.events = events if events is not None else EventLog()
+        self.drift_config = drift or DriftConfig()
+        self.max_candidates = max_candidates
+        # instance names in cluster device order, profiling's per-kind
+        # numbering ("V100-16G#1", ...)
+        counts: Dict[str, int] = {}
+        self.instances: List[str] = []
+        self._kind_order: List[str] = []
+        for spec in cluster.devices:
+            if spec.name not in counts:
+                self._kind_order.append(spec.name)
+            counts[spec.name] = counts.get(spec.name, 0) + 1
+            self.instances.append(f"{spec.name}#{counts[spec.name]}")
+        self.healthy = set(self.instances)
+        self.lost: set = set()
+        self.tenants: Dict[str, Tenant] = {}
+        # measured DeviceProfiles shared across every tenant's planner —
+        # re-arbitration candidate sweeps reuse cached probes
+        self.probe_cache: Dict = {}
+        # per-(tenant, composition) predicted utility; cleared when the
+        # workload changes (drift re-arbitration, serve load update)
+        self._utility_cache: Dict[Tuple, Optional[float]] = {}
+        self.arbitrations = 0
+        self.last_report: Optional[ArbitrationReport] = None
+        self._next_order = 0
+
+    # ------------------------------------------------------ registration --
+    def register_train(self, name: str, cfg, *, gbs: int, seq: int,
+                       zero: Optional[int] = None, priority: int = 0,
+                       min_devices: int = 1, weight: float = 1.0,
+                       policy: Optional[FaultPolicy] = None,
+                       ckpt_path: Optional[str] = None) -> Tenant:
+        return self._register(Tenant(
+            name, "train", cfg, priority=priority, min_devices=min_devices,
+            weight=weight, policy=policy or FaultPolicy(), gbs=gbs, seq=seq,
+            zero=zero, ckpt_path=ckpt_path))
+
+    def register_serve(self, name: str, cfg, *, requests: int,
+                       cache_len: int, priority: int = 0,
+                       min_devices: int = 1, weight: float = 1.0,
+                       policy: Optional[FaultPolicy] = None,
+                       ckpt_path: Optional[str] = None) -> Tenant:
+        return self._register(Tenant(
+            name, "serve", cfg, priority=priority, min_devices=min_devices,
+            weight=weight, policy=policy or FaultPolicy(),
+            requests=requests, cache_len=cache_len, ckpt_path=ckpt_path))
+
+    def _register(self, t: Tenant) -> Tenant:
+        if t.name in self.tenants:
+            raise ValueError(f"tenant {t.name!r} already registered")
+        if t.min_devices < 1:
+            raise ValueError("min_devices must be >= 1")
+        t._order = self._next_order
+        self._next_order += 1
+        self.tenants[t.name] = t
+        return t
+
+    def attach(self, name: str, session, *, schedule=None,
+               save_every: int = 0, async_save: bool = True,
+               keep_last: Optional[int] = None,
+               supervised: bool = True) -> Optional[Supervisor]:
+        """Bind a built Session (on the tenant's current lease) to its
+        tenant: shared probe cache, shared event log, and — by default —
+        a :class:`TenantSupervisor` routing membership faults here."""
+        t = self.tenants[name]
+        t.session = session
+        session.lease = t.lease
+        # probes the session already paid for join the shared pool
+        self.probe_cache.update(session._profile_cache)
+        session._profile_cache = self.probe_cache
+        # one continuous multi-tenant log: merge what the session already
+        # recorded (tagged), then share
+        for ev in session.events:
+            if not ev.tenant:
+                ev.tenant = name
+            self.events.events.append(ev)
+        session.events = self.events
+        if supervised:
+            t.supervisor = TenantSupervisor(
+                self, name, session, schedule=schedule,
+                ckpt_path=t.ckpt_path, save_every=save_every,
+                async_save=async_save, keep_last=keep_last)
+        elif schedule is not None:
+            session.attach_faults(schedule)
+        return t.supervisor
+
+    # ---------------------------------------------------------- leases ----
+    @property
+    def leases(self) -> Dict[str, Optional[ClusterSpec]]:
+        return {n: t.lease for n, t in self.tenants.items()}
+
+    def _composition(self, comp: Dict[str, int]) -> List[Tuple[str, int]]:
+        return [(k, comp[k]) for k in self._kind_order if comp.get(k, 0) > 0]
+
+    def _lease_cluster(self, name: str, comp: Dict[str, int]) -> ClusterSpec:
+        return make_cluster(f"{self.cluster.name}/{name}",
+                            self._composition(comp),
+                            self.cluster.inter_link_gbps,
+                            shared_bus=self.cluster.shared_bus)
+
+    def _healthy_counts(self) -> Dict[str, int]:
+        counts = {k: 0 for k in self._kind_order}
+        for inst in self.healthy:
+            counts[inst.split("#")[0]] += 1
+        return counts
+
+    def _assign_instances(self, partition: Dict[str, Dict[str, int]]
+                          ) -> Dict[str, Tuple[str, ...]]:
+        """Concrete instances per tenant: per-kind healthy pools in
+        instance order, tenants take from the front in priority order —
+        disjoint and exhaustive over the healthy set by construction."""
+        pools = {k: [i for i in self.instances
+                     if i in self.healthy and i.split("#")[0] == k]
+                 for k in self._kind_order}
+        out: Dict[str, Tuple[str, ...]] = {}
+        for t in self._ranked():
+            if t.name not in partition:
+                continue
+            grab: List[str] = []
+            for k, c in partition[t.name].items():
+                grab.extend(pools[k][:c])
+                pools[k] = pools[k][c:]
+            out[t.name] = tuple(grab)
+        return out
+
+    def _ranked(self) -> List[Tenant]:
+        return sorted(self.tenants.values(),
+                      key=lambda t: (-t.priority, t._order))
+
+    # --------------------------------------------------------- utility ----
+    def _tenant_utility(self, t: Tenant, comp: Dict[str, int]
+                        ) -> Optional[Tuple[float, object]]:
+        """Weighted predicted utility of ``t`` on a lease of composition
+        ``comp`` (None = infeasible there). Train: Poplar plan tokens/sec.
+        Serve: decode-wave requests/sec (1 / predicted wave latency,
+        scaled by wave size)."""
+        lease = self._lease_cluster(t.name, comp)
+        try:
+            if t.kind == "train":
+                if t.session is not None and not t.suspended:
+                    plan = t.session._run_planner(
+                        lease, t.session.rules.overlap)
+                else:
+                    from repro.core.planner import plan as poplar_plan
+                    plan = poplar_plan(lease, t.cfg, t.gbs, seq_len=t.seq,
+                                       zero_stage=t.zero,
+                                       profile_cache=self.probe_cache)
+                tput = plan.predicted.tokens_per_sec if plan.predicted \
+                    else 0.0
+                return t.weight * tput, plan
+            from repro.core.planner import plan_serve
+            plan = plan_serve(lease, t.cfg, t.requests, t.cache_len,
+                              profile_cache=self.probe_cache)
+            return t.weight * plan.requests_per_sec, plan
+        except SimOOM:
+            return None
+
+    def _cached_utility(self, t: Tenant, comp: Dict[str, int]
+                        ) -> Optional[Tuple[float, object]]:
+        key = (t.name, tuple(sorted(comp.items())))
+        if key not in self._utility_cache:
+            self._utility_cache[key] = self._tenant_utility(t, comp)
+        return self._utility_cache[key]
+
+    def evaluate_partition(self, partition: Dict[str, Dict[str, int]]
+                           ) -> Optional[float]:
+        """Summed weighted utility of an explicit partition (None when
+        any tenant is infeasible on its share) — the benchmark surface
+        for comparing the arbiter's pick against a naive split."""
+        total = 0.0
+        for name, comp in partition.items():
+            got = self._cached_utility(self.tenants[name], comp)
+            if got is None:
+                return None
+            total += got[0]
+        return total
+
+    def even_partition(self, names: Optional[List[str]] = None
+                       ) -> Dict[str, Dict[str, int]]:
+        """The naive baseline: each device kind split evenly across
+        tenants, remainders to earlier (higher-priority) tenants —
+        heterogeneity-blind by design."""
+        keep = [t.name for t in self._ranked()] if names is None else names
+        counts = self._healthy_counts()
+        out: Dict[str, Dict[str, int]] = {n: {} for n in keep}
+        for k, total in counts.items():
+            base, rem = divmod(total, len(keep))
+            for i, n in enumerate(keep):
+                c = base + (1 if i < rem else 0)
+                if c:
+                    out[n][k] = c
+        return out
+
+    # ------------------------------------------------------- candidates ---
+    @staticmethod
+    def _splits(total: int, n: int):
+        """All n-tuples of non-negative ints summing to total."""
+        if n == 1:
+            yield (total,)
+            return
+        for first in range(total + 1):
+            for rest in ClusterArbiter._splits(total - first, n - 1):
+                yield (first,) + rest
+
+    def _candidates(self, keep: List[Tenant]):
+        counts = self._healthy_counts()
+        kinds = [k for k in self._kind_order if counts[k] > 0]
+        per_kind = [list(self._splits(counts[k], len(keep))) for k in kinds]
+        emitted = 0
+        for combo in itertools.product(*per_kind):
+            partition = {}
+            ok = True
+            for i, t in enumerate(keep):
+                comp = {k: combo[j][i] for j, k in enumerate(kinds)
+                        if combo[j][i] > 0}
+                if sum(comp.values()) < t.min_devices:
+                    ok = False
+                    break
+                partition[t.name] = comp
+            if not ok:
+                continue
+            yield partition
+            emitted += 1
+            if emitted >= self.max_candidates:
+                return
+
+    # ------------------------------------------------------ arbitration ---
+    def arbitrate(self, trigger: str = "explicit") -> ArbitrationReport:
+        """One global arbitration round: search candidate partitions of
+        the healthy devices over the largest feasible top-priority tenant
+        subset, apply the winner (suspend the dropped, replan/resume the
+        kept), and report."""
+        t0 = time.monotonic()
+        if trigger in ("drift", "return"):
+            # the workload (or the measurement substrate) changed — stale
+            # predicted utilities must not decide the new partition
+            self._utility_cache.clear()
+        ranked = self._ranked()
+        evaluated = 0
+        best = None
+        kept: List[Tenant] = []
+        for n_keep in range(len(ranked), 0, -1):
+            keep = ranked[:n_keep]
+            floor = sum(t.min_devices for t in keep)
+            if floor > len(self.healthy):
+                continue
+            for partition in self._candidates(keep):
+                evaluated += 1
+                utils = {}
+                plans = {}
+                total = 0.0
+                feasible = True
+                for t in keep:
+                    got = self._cached_utility(t, partition[t.name])
+                    if got is None:
+                        feasible = False
+                        break
+                    utils[t.name], plans[t.name] = got
+                    total += got[0]
+                if feasible and (best is None or total > best[0]):
+                    best = (total, partition, utils, plans)
+            if best is not None:
+                kept = keep
+                break
+        if best is None:
+            self.events.emit("gave_up", detail=(
+                f"no feasible partition of {len(self.healthy)} healthy "
+                f"devices for any tenant subset"))
+            raise FaultToleranceExhausted(
+                f"no feasible partition of {len(self.healthy)} healthy "
+                f"devices satisfies any tenant's floor")
+        total, partition, utils, plans = best
+        devices = self._assign_instances(partition)
+        dropped = [t for t in ranked if t.name not in partition]
+
+        # suspend the dropped first — their devices are in the new leases
+        for t in dropped:
+            self._suspend_tenant(t)
+        for t in kept:
+            self._apply_lease(t, partition[t.name], devices[t.name],
+                              plans[t.name], utils[t.name], trigger)
+
+        self.arbitrations += 1
+        report = ArbitrationReport(
+            trigger=trigger, partition=partition, devices=devices,
+            suspended=[t.name for t in dropped], utility=total,
+            per_tenant_utility=utils, candidates=evaluated,
+            healthy=len(self.healthy), seconds=time.monotonic() - t0)
+        self.last_report = report
+        self.events.emit(
+            "arbitrated",
+            detail=(f"trigger={trigger} "
+                    + " ".join(f"{n}={sum(c.values())}dev"
+                               for n, c in partition.items())
+                    + (f" suspended={'+'.join(report.suspended)}"
+                       if report.suspended else "")
+                    + f" utility={total:.1f} candidates={evaluated}"),
+            seconds=report.seconds)
+        return report
+
+    def _suspend_tenant(self, t: Tenant) -> None:
+        already = t.suspended
+        t.suspended = True
+        t.lease, t.lease_devices = None, ()
+        t.predicted_utility = 0.0
+        if t.session is not None:
+            t.session.lease = None
+            if not already:
+                t.session.suspend(t.ckpt_path,
+                                  reason=f"lease revoked ({t.name})")
+        if not already:
+            self.events.emit("tenant_suspended", tenant=t.name,
+                             detail=f"priority={t.priority} "
+                                    f"min_devices={t.min_devices}"
+                                    + (" ckpt committed"
+                                       if t.ckpt_path else ""))
+
+    def _apply_lease(self, t: Tenant, comp: Dict[str, int],
+                     instances: Tuple[str, ...], plan, utility: float,
+                     trigger: str) -> None:
+        lease = self._lease_cluster(t.name, comp)
+        unchanged = (not t.suspended
+                     and t.lease_devices == instances
+                     and t.lease is not None)
+        t.last_plan = plan
+        t.predicted_utility = utility
+        was_suspended = t.suspended
+        t.suspended = False
+        t.lease, t.lease_devices = lease, instances
+        if t.session is None:
+            return
+        t.session.lease = lease
+        if was_suspended:
+            t.session.resume(cluster=lease, ckpt_path=t.ckpt_path,
+                             trigger=trigger)
+            t.observed.reset()
+            t._drift_baseline = None
+            self.events.emit("tenant_resumed", tenant=t.name,
+                             detail=f"{lease.n} devices")
+        elif not unchanged:
+            t.session.replan(cluster=lease, trigger=trigger)
+            t.observed.reset()
+            t._drift_baseline = None
+        # unchanged lease: no-op — this is what keeps simultaneous fault
+        # reports from cascading into a replan storm
+
+    # ----------------------------------------------------------- faults ---
+    def _resolve_lost(self, names: List[str]) -> List[str]:
+        """Map reported losses to concrete instances: ``kind#N`` passes
+        through; a bare kind loses its highest-numbered healthy instance
+        not already claimed by this report — ``["V100", "V100"]`` must
+        resolve to two distinct instances, matching ``drop_devices``'s
+        per-name counting — (or a sentinel when none remain:
+        already-handled loss)."""
+        out: List[str] = []
+        taken: set = set()
+        for name in names:
+            if "#" in name:
+                out.append(name)
+                taken.add(name)
+                continue
+            pool = sorted((i for i in self.healthy
+                           if i.split("#")[0] == name and i not in taken),
+                          key=lambda i: int(i.split("#")[1]))
+            pick = pool[-1] if pool else f"{name}#?"
+            out.append(pick)
+            taken.add(pick)
+        return out
+
+    def handle_fault(self, tenant_name: str, exc,
+                     step_idx: int = 0) -> Optional[ArbitrationReport]:
+        """Route one tenant's DeviceLossError through global
+        re-arbitration. Losses already absorbed by a previous round (the
+        co-tenant reporting the same physical devices) converge to a
+        no-op — exactly one re-arbitration per physical event."""
+        lost = self._resolve_lost(list(getattr(exc, "lost", [])))
+        fresh = [i for i in lost if i in self.healthy]
+        if not fresh:
+            self.events.emit("fault_converged", step=step_idx,
+                             tenant=tenant_name,
+                             detail="+".join(lost) + " already arbitrated")
+            return None
+        for i in fresh:
+            self.healthy.discard(i)
+            self.lost.add(i)
+        self.events.emit("device_loss", step=step_idx, tenant=tenant_name,
+                         detail="+".join(fresh))
+        return self.arbitrate(trigger="fault")
+
+    def restore_devices(self, *names: str) -> Optional[ArbitrationReport]:
+        """Devices came back: re-arbitrate (suspended tenants auto-resume
+        when the new partition has room for their floor)."""
+        returned = [n for n in names if n in self.lost]
+        if not returned:
+            return None
+        for n in returned:
+            self.lost.discard(n)
+            self.healthy.add(n)
+        self.events.emit("device_return", detail="+".join(returned))
+        return self.arbitrate(trigger="return")
+
+    # ------------------------------------------------------------ drift ---
+    def observe_wave(self, name: str, seconds: float) -> None:
+        """Record one serve wave's per-decode-token latency for the
+        tenant's drift window (train tenants observe through their own
+        Session telemetry)."""
+        self.tenants[name].observed.record(seconds)
+
+    def update_serve_load(self, name: str, *, requests: Optional[int] = None,
+                          cache_len: Optional[int] = None,
+                          weight: Optional[float] = None) -> None:
+        """Declare a serve load shift (bigger waves, longer contexts,
+        higher priority weight). Clears the utility cache so the next
+        arbitration re-prices every candidate — how the serve tenant
+        claims devices from train under load."""
+        t = self.tenants[name]
+        if requests is not None:
+            t.requests = requests
+        if cache_len is not None:
+            t.cache_len = cache_len
+        if weight is not None:
+            t.weight = weight
+        self._utility_cache.clear()
+
+    def _tenant_drift(self, t: Tenant):
+        if t.suspended or t.session is None:
+            return None
+        if t.kind == "train":
+            return t.session.drift(self.drift_config)
+        predicted = getattr(t.last_plan, "wave_latency", None)
+        if t.observed.value is not None and predicted and \
+                t._drift_baseline is None and \
+                t.observed.count >= self.drift_config.min_samples:
+            t._drift_baseline = t.observed.value / predicted
+        return detect_drift(t.observed, predicted, self.drift_config,
+                            baseline=t._drift_baseline or 1.0)
+
+    def maybe_rearbitrate(self) -> Optional[ArbitrationReport]:
+        """Check every tenant's drift detector; any drifted tenant
+        triggers one global re-arbitration (per-tenant drift feeds the
+        cluster-level decision, not a tenant-local replan)."""
+        for t in self._ranked():
+            rep = self._tenant_drift(t)
+            if rep is not None and rep.drifted:
+                self.events.emit("drift", tenant=t.name, detail=rep.reason)
+                return self.arbitrate(trigger="drift")
+        return None
+
+
+class TenantSupervisor(Supervisor):
+    """PR-7 Supervisor whose membership recovery goes through the
+    arbiter: a device loss in this tenant re-arbitrates globally instead
+    of replanning session-locally. If the re-arbitration suspends *this*
+    tenant (it was the floor that had to give), the supervised call
+    raises :class:`TenantSuspended` — the driver parks the tenant until
+    :meth:`ClusterArbiter.restore_devices` brings it back."""
+
+    def __init__(self, arbiter: ClusterArbiter, tenant_name: str, session,
+                 schedule=None, **kwargs):
+        self.arbiter = arbiter
+        self.tenant_name = tenant_name
+        t = arbiter.tenants[tenant_name]
+        kwargs.setdefault("ckpt_path", t.ckpt_path)
+        super().__init__(session, t.policy, schedule,
+                         membership_hook=self._route_to_arbiter, **kwargs)
+
+    def _route_to_arbiter(self, sup: Supervisor, exc, step_idx: int) -> None:
+        self.arbiter.handle_fault(self.tenant_name, exc, step_idx)
+        t = self.arbiter.tenants[self.tenant_name]
+        if t.suspended:
+            raise TenantSuspended(
+                f"tenant {self.tenant_name!r} suspended by arbitration "
+                f"(state committed"
+                + (f" under {t.ckpt_path}" if t.ckpt_path else "")
+                + ")") from exc

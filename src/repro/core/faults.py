@@ -291,7 +291,8 @@ class Supervisor:
     def __init__(self, session, policy: Optional[FaultPolicy] = None,
                  schedule: Optional[FaultSchedule] = None, *,
                  ckpt_path: Optional[str] = None, save_every: int = 0,
-                 async_save: bool = True, keep_last: Optional[int] = None):
+                 async_save: bool = True, keep_last: Optional[int] = None,
+                 membership_hook=None):
         self.session = session
         self.policy = policy or FaultPolicy()
         self.schedule = schedule
@@ -299,6 +300,10 @@ class Supervisor:
         self.save_every = save_every
         self.async_save = async_save
         self.keep_last = keep_last
+        # membership_hook(supervisor, exc, step_idx): when set, device-loss
+        # recovery is delegated (e.g. to a ClusterArbiter's global
+        # re-arbitration) instead of the session-local replan-over-survivors
+        self.membership_hook = membership_hook
         self.events = session.events
         self.recoveries = 0
         if schedule is not None:
@@ -309,6 +314,15 @@ class Supervisor:
         """One supervised training step: returns the metrics dict, or
         raises :class:`FaultToleranceExhausted` (or the fatal original)
         when the policy's budget cannot absorb the failure."""
+        metrics = self.call(lambda: self.session.step())
+        if self.session.mode == "train":
+            self._maybe_autosave(int(self.session.state.step))
+        return metrics
+
+    def call(self, fn):
+        """Run any session-touching callable under the supervised
+        fault/recovery loop (serve waves use this: the callable must read
+        ``sup.session`` each invocation, since recovery may rebind it)."""
         policy = self.policy
         delay = policy.backoff_s
         last_exc: Optional[BaseException] = None
@@ -316,9 +330,7 @@ class Supervisor:
             sess = self.session
             step_idx = int(sess.state.step)
             try:
-                metrics = sess.step()
-                self._maybe_autosave(step_idx + 1)
-                return metrics
+                return fn()
             except DeviceLossError as e:
                 last_exc = e
                 self.events.emit("device_loss", step=step_idx,
@@ -361,7 +373,20 @@ class Supervisor:
     # ----------------------------------------------------------- recovery --
     def _recover_membership(self, e: DeviceLossError, step_idx: int) -> None:
         sess, policy = self.session, self.policy
+        # A background commit of the pre-fault state must land (or fail)
+        # before any membership change: replan/re-arbitration re-shards the
+        # live state, and racing the writer could interleave a gather of
+        # half-resharded arrays into the "pre-fault" checkpoint.
+        sess.flush_saves()
         sess.drain()     # replay the interrupted accum batch after recovery
+        if self.membership_hook is not None:
+            t0 = time.monotonic()
+            self.membership_hook(self, e, step_idx)
+            self.recoveries += 1
+            self.events.emit("arbiter_recovered", step=step_idx,
+                             detail="+".join(e.lost),
+                             seconds=time.monotonic() - t0)
+            return
         survivors = e.survivors
         if survivors is None:
             if sess.cluster is None:

@@ -12,7 +12,8 @@ from repro.core.allocation import (AllocationPlan, PerfCurve, allocate_stage01,
                                    allocate_stage23, fit_curve)
 from repro.core.cluster import ClusterSpec, DeviceSpec
 from repro.core.profiler import (AnalyticalRunner, DeviceProfile, DeviceRunner,
-                                 SimOOM, probes_saved, profile_cluster)
+                                 SimOOM, decode_profiles, probes_saved,
+                                 profile_cluster)
 from repro.core.simulator import SimResult, simulate_plan
 from repro.core.workload import (MemoryModel, PackedWorkload,
                                  comm_time_per_microstep,
@@ -34,6 +35,48 @@ class PoplarPlan:
     # "analytical" (DeviceSpec curves), "measured" (real jitted-step wall
     # time), or "mixed"
     profile_source: str = "analytical"
+
+
+@dataclass
+class ServePlan:
+    """Poplar Algorithm 1 applied to the *serving* wave: per-device decode
+    speed profiles -> spline curves -> a stage-0/1 allocation of the wave's
+    requests so every group finishes its decode step together."""
+    allocation: AllocationPlan
+    curves: Dict[str, PerfCurve]
+    profiles: Dict[str, DeviceProfile]
+    requests: int
+    cache_len: int
+    # predicted per-decode-token wave latency (slowest group's step time)
+    wave_latency: float = 0.0
+    profiling_probes: int = 0
+    profiling_probes_saved: int = 0
+
+    @property
+    def requests_per_sec(self) -> float:
+        """Decode throughput the plan predicts: one token for each of the
+        wave's requests per ``wave_latency`` seconds."""
+        if self.wave_latency <= 0:
+            return 0.0
+        return self.requests / self.wave_latency
+
+
+def plan_serve(cluster: ClusterSpec, cfg: ModelConfig, requests: int,
+               cache_len: int,
+               profile_cache: Optional[Dict] = None) -> ServePlan:
+    """Plan one serve wave over ``cluster``: decode profiles (HBM-bound
+    analytical model, shared across identical devices and across calls via
+    ``profile_cache``), spline fit, and the stage-0/1 allocator (decode has
+    no gradient sync, so finish-together is the whole objective)."""
+    if requests < 1:
+        raise ValueError("plan_serve needs at least one request")
+    profiles = decode_profiles(cluster, cfg, cache_len, cache=profile_cache)
+    curves = {n: fit_curve(p) for n, p in profiles.items()}
+    alloc = allocate_stage01(curves, requests)
+    return ServePlan(alloc, curves, profiles, requests, cache_len,
+                     wave_latency=alloc.predicted_iter_time,
+                     profiling_probes=sum(p.probes for p in profiles.values()),
+                     profiling_probes_saved=probes_saved(profiles))
 
 
 def make_runners(cluster: ClusterSpec, cfg: ModelConfig, seq_len: int,

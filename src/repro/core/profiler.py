@@ -289,6 +289,55 @@ def profile_cluster(runners: Dict[str, DeviceRunner], zero_stage: int,
     return profiles
 
 
+def decode_profiles(cluster, cfg, cache_len: int,
+                    cache: Optional[Dict[Tuple, DeviceProfile]] = None,
+                    ) -> Dict[str, DeviceProfile]:
+    """Analytical decode-speed profiles per device: one decode step is
+    HBM-bound — it reads every active parameter once plus ``b`` KV-cache
+    rows of ``cache_len`` tokens — so step time at batch ``b`` is
+    ``(param_bytes + b * cache_tok * cache_len) / hbm_bw``.
+
+    Mirrors :func:`profile_cluster`'s economics on the serve path: one
+    profile per device *kind* per call (identical devices share, with
+    ``probes=0`` / ``shared_from``), and a caller-owned ``cache`` serves
+    repeated plans over an unchanged (cfg, cache_len, kind) workload with
+    ``probes=0`` — what makes arbiter candidate sweeps cheap.
+    """
+    param_bytes = cfg.active_params * 2
+    cache_tok = (2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+                 * max(len([k for k in cfg.blocks()
+                            if k in ("attn", "moe", "shared_attn")]), 1))
+    profiles: Dict[str, DeviceProfile] = {}
+    reps: Dict[Tuple, str] = {}
+    counts: Dict[str, int] = {}
+    for dev in cluster.devices:
+        counts[dev.name] = counts.get(dev.name, 0) + 1
+        name = f"{dev.name}#{counts[dev.name]}"
+        key = ("decode", dev.name, cfg.name, cfg.active_params, cache_len)
+        if key in reps:
+            rep = profiles[reps[key]]
+            profiles[name] = replace(rep, name=name, probes=0,
+                                     shared_from=rep.name)
+            continue
+        reps[key] = name
+        if cache is not None and key in cache:
+            profiles[name] = replace(cache[key], name=name, probes=0,
+                                     shared_from=None)
+            continue
+        bw = dev.hbm_gbps * 1e9
+        mbs = max(int(dev.mem_gb * 1e9 * 0.6
+                      // max(cache_tok * cache_len, 1)), 1)
+        points, b = {}, 1
+        while b <= mbs:
+            points[b] = (param_bytes + b * cache_tok * cache_len) / bw
+            b *= 2
+        profiles[name] = DeviceProfile(name=name, mbs=mbs, points=points,
+                                       probes=len(points))
+        if cache is not None:
+            cache[key] = profiles[name]
+    return profiles
+
+
 def probes_saved(profiles: Dict[str, DeviceProfile]) -> int:
     """Model executions deduplication avoided (vs profiling every device)."""
     return sum(profiles[p.shared_from].probes

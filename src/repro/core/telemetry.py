@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -227,6 +227,7 @@ class FaultEvent:
     detail: str = ""
     seconds: float = 0.0              # how long the transition took
     wall: float = 0.0                 # time.time() at emission
+    tenant: str = ""                  # owning tenant ("" = single-tenant)
 
 
 @dataclass
@@ -239,12 +240,14 @@ class EventLog:
     verbose: bool = False
 
     def emit(self, kind: str, step: int = 0, detail: str = "",
-             seconds: float = 0.0) -> FaultEvent:
-        ev = FaultEvent(kind, step, detail, seconds, wall=time.time())
+             seconds: float = 0.0, tenant: str = "") -> FaultEvent:
+        ev = FaultEvent(kind, step, detail, seconds, wall=time.time(),
+                        tenant=tenant)
         self.events.append(ev)
         if self.verbose:
             extra = f" ({seconds:.2f}s)" if seconds else ""
-            print(f"[fault] step {step}: {kind}"
+            who = f"[{tenant}] " if tenant else ""
+            print(f"[fault] {who}step {step}: {kind}"
                   + (f" — {detail}" if detail else "") + extra)
         return ev
 
@@ -259,6 +262,26 @@ class EventLog:
 
     def __len__(self):
         return len(self.events)
+
+
+@dataclass
+class ArbitrationReport:
+    """What one ``ClusterArbiter.arbitrate()`` decided, and what it cost.
+
+    ``partition`` maps tenant name -> per-kind device composition of its
+    new lease; ``devices`` maps tenant name -> the concrete instance
+    names leased. ``suspended`` lists tenants left without a lease this
+    round (degraded in priority order, checkpointed before yielding
+    their devices)."""
+    trigger: str                      # "initial" | "fault" | "drift" | "return" | "explicit"
+    partition: Dict[str, Dict[str, int]]
+    devices: Dict[str, Tuple[str, ...]]
+    suspended: List[str]
+    utility: float                    # summed weighted utility of the pick
+    per_tenant_utility: Dict[str, float]
+    candidates: int                   # partitions evaluated this round
+    healthy: int                      # healthy device count arbitrated over
+    seconds: float = 0.0
 
 
 @dataclass

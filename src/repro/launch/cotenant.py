@@ -1,0 +1,155 @@
+"""Cotenant launcher: a train Session and a serve Session sharing one
+physical cluster under :class:`~repro.core.arbiter.ClusterArbiter`.
+
+The realistic heavy-traffic deployment shape: training holds most of the
+cluster, serving holds a slice sized by its predicted wave latency, and
+every fault or drift event in *either* tenant re-runs the global
+arbitration (train may shrink, serve may donate, the lowest-priority
+tenant suspends behind a committed checkpoint when no partition fits).
+
+``--fault-plan`` / ``--serve-fault-plan`` inject deterministic
+FaultSchedules into the respective tenant — the same drill CI runs.
+
+Usage:
+  python -m repro.launch.cotenant --arch llama-0.5b --reduced \
+      --steps 12 --serve-every 4 --fault-plan lose:6:T4-16G+T4-16G
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Session
+from repro.configs import get_config
+from repro.core import cluster as CL
+from repro.core.arbiter import ClusterArbiter, TenantSuspended
+from repro.core.faults import FaultPolicy, FaultSchedule
+from repro.core.telemetry import EventLog
+from repro.launch.serve import run_wave
+
+
+def _cluster(name: str) -> CL.ClusterSpec:
+    if name in CL.PAPER_CLUSTERS:
+        return CL.PAPER_CLUSTERS[name]()
+    # default skewed fixture: compute-rich + memory-poor halves, the
+    # shape where arbiter-chosen partitions beat a naive even split
+    return CL.make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--cluster", default="c8",
+                    help="PAPER_CLUSTERS key or 'c8' (default skewed "
+                         "4xV100 + 4xT4 fixture)")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--gbs", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--zero", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--serve-every", type=int, default=4,
+                    help="run one serve wave every N train steps")
+    ap.add_argument("--fault-plan", default=None,
+                    help="FaultSchedule specs for the train tenant")
+    ap.add_argument("--serve-fault-plan", default=None,
+                    help="FaultSchedule specs for the serve tenant "
+                         "(steps are decode ticks)")
+    ap.add_argument("--max-retries", type=int, default=2)
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--train-priority", type=int, default=1)
+    ap.add_argument("--serve-priority", type=int, default=0)
+    ap.add_argument("--train-min", type=int, default=2)
+    ap.add_argument("--serve-min", type=int, default=1)
+    ap.add_argument("--impl", default="auto")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    cluster = _cluster(args.cluster)
+    ckpt_root = Path(args.ckpt_dir or tempfile.mkdtemp(prefix="cotenant-"))
+    policy = FaultPolicy(max_retries=args.max_retries,
+                         min_devices=1)
+
+    arb = ClusterArbiter(cluster, events=EventLog(verbose=True))
+    arb.register_train("train", cfg, gbs=args.gbs, seq=args.seq,
+                       zero=args.zero, priority=args.train_priority,
+                       min_devices=args.train_min, policy=policy,
+                       ckpt_path=str(ckpt_root / "train"))
+    arb.register_serve("serve", cfg, requests=args.requests,
+                       cache_len=args.prompt_len + args.gen,
+                       priority=args.serve_priority,
+                       min_devices=args.serve_min, policy=policy,
+                       ckpt_path=str(ckpt_root / "serve"))
+    rep = arb.arbitrate(trigger="initial")
+    print(f"[arbiter] initial partition over {cluster.n} devices "
+          f"(utility {rep.utility:.1f}, {rep.candidates} candidates):")
+    for name, comp in rep.partition.items():
+        print(f"  {name:8s} -> " + " ".join(f"{k}x{c}"
+                                            for k, c in comp.items()))
+
+    train_sess = Session.build(cfg, arb.leases["train"], gbs=args.gbs,
+                               seq=args.seq, zero=args.zero,
+                               impl=args.impl, lr=1e-3)
+    serve_sess = Session.build(cfg, arb.leases["serve"], mode="serve",
+                               impl=args.impl)
+    train_sup = arb.attach(
+        "train", train_sess,
+        schedule=(FaultSchedule.parse(args.fault_plan)
+                  if args.fault_plan else None),
+        save_every=args.save_every)
+    serve_sup = arb.attach(
+        "serve", serve_sess,
+        schedule=(FaultSchedule.parse(args.serve_fault_plan)
+                  if args.serve_fault_plan else None))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(3, cfg.vocab_size, (args.requests, args.prompt_len)),
+        jnp.int32)
+    losses = []
+    for i in range(args.steps):
+        try:
+            m = train_sup.step()
+            losses.append(float(m["loss"]))
+        except TenantSuspended as e:
+            print(f"[cotenant] train suspended: {e}")
+            break
+        if args.serve_every and (i + 1) % args.serve_every == 0:
+            t = arb.tenants["serve"]
+            if t.suspended:
+                print("[cotenant] serve suspended — skipping wave")
+            else:
+                try:
+                    _, _, decode_s = serve_sup.call(
+                        lambda: run_wave(serve_sup.session, prompts,
+                                         args.gen))
+                    arb.observe_wave("serve", decode_s / args.gen)
+                    print(f"[cotenant] wave after step {i + 1}: "
+                          f"{decode_s / args.gen * 1e3:.2f} ms/tok")
+                except TenantSuspended as e:
+                    print(f"[cotenant] serve suspended: {e}")
+            arb.maybe_rearbitrate()
+
+    train_sup.flush()
+    print(f"[cotenant] {len(losses)} train steps, final loss "
+          f"{losses[-1]:.4f}" if losses else "[cotenant] no steps ran")
+    print(f"[cotenant] arbitrations={arb.arbitrations} "
+          f"recoveries={train_sup.recoveries + serve_sup.recoveries}")
+    counts = arb.events.counts()
+    print("events:", " ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+    for name, t in arb.tenants.items():
+        dev = "+".join(t.lease_devices) if t.lease_devices else "none"
+        state = "suspended" if t.suspended else "running"
+        print(f"  {name:8s} [{state}] lease: {dev}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,9 +13,16 @@ serving groups here:
      allocator is the right shape);
   4. run the wave through a serve-mode Session (jitted prefill/decode).
 
+Fault-injection parity with ``launch/train.py``: ``--fault-plan`` arms a
+deterministic :class:`~repro.core.faults.FaultSchedule` on the serve
+session (each decode call consumes one schedule tick) and a serve-side
+:class:`~repro.core.faults.Supervisor` absorbs the injected faults —
+the serve tenant is drivable in the same cotenant fault drills as train.
+
 Usage:
   python -m repro.launch.serve --arch llama-0.5b --reduced \
-      --cluster C --requests 32 --prompt-len 16 --gen 24
+      --cluster C --requests 32 --prompt-len 16 --gen 24 \
+      [--fault-plan lose:8:T4-16G] [--max-retries 2]
 """
 from __future__ import annotations
 
@@ -30,31 +37,17 @@ from repro.api import Session
 from repro.configs import get_config
 from repro.core import cluster as CL
 from repro.core.allocation import allocate_stage01, fit_curve
-from repro.core.profiler import DeviceProfile
+from repro.core.faults import FaultPolicy, FaultSchedule, Supervisor
+from repro.core.profiler import decode_profiles
 
 
 def profile_decode_groups(cluster: CL.ClusterSpec, cfg, cache_len: int):
     """Decode-speed curves per device: step time ~ param reads + cache
-    reads at batch b (HBM-bound), measured against each device's specs."""
-    curves = {}
-    param_bytes = cfg.active_params * 2
-    cache_tok = (2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
-                 * max(len([k for k in cfg.blocks()
-                            if k in ("attn", "moe", "shared_attn")]), 1))
-    counts: dict = {}
-    for dev in cluster.devices:
-        counts[dev.name] = counts.get(dev.name, 0) + 1
-        name = f"{dev.name}#{counts[dev.name]}"
-        bw = dev.hbm_gbps * 1e9
-        mbs = max(int(dev.mem_gb * 1e9 * 0.6 // max(cache_tok * cache_len, 1)),
-                  1)
-        points, b = {}, 1
-        while b <= mbs:
-            points[b] = (param_bytes + b * cache_tok * cache_len) / bw
-            b *= 2
-        curves[name] = fit_curve(DeviceProfile(
-            name=name, mbs=mbs, points=points, probes=len(points)))
-    return curves
+    reads at batch b (HBM-bound), measured against each device's specs
+    (profiling lives in :func:`repro.core.profiler.decode_profiles` —
+    shared with the serve planner and the multi-tenant arbiter)."""
+    return {n: fit_curve(p)
+            for n, p in decode_profiles(cluster, cfg, cache_len).items()}
 
 
 def run_wave(sess: Session, prompts, gen_tokens: int):
@@ -86,6 +79,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--fault-plan", default=None,
+                    help="comma-separated FaultSchedule specs (steps are "
+                         "decode ticks), e.g. lose:8:T4-16G,step_fail:3")
+    ap.add_argument("--max-retries", type=int, default=2)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -103,17 +100,34 @@ def main(argv=None):
     assert plan.total_batch == args.requests
 
     # ---- execute locally (one wave; per-group waves on a real fleet) ----
-    sess = Session.build(cfg, mode="serve")
+    # the cluster rides along so a membership fault has survivors to
+    # re-plan onto (serve replan = mesh + re-jit, no Poplar search)
+    sess = Session.build(cfg, cluster, mode="serve")
+    sup = None
+    if args.fault_plan:
+        sched = FaultSchedule.parse(args.fault_plan)
+        sup = Supervisor(sess, FaultPolicy(max_retries=args.max_retries),
+                         sched)
+        sess.events.verbose = True
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(3, cfg.vocab_size, (args.requests, args.prompt_len)),
         jnp.int32)
-    gen, prefill_s, decode_s = run_wave(sess, prompts, args.gen)
+    if sup is not None:
+        # the callable re-reads sup.session: recovery may rebind it
+        gen, prefill_s, decode_s = sup.call(
+            lambda: run_wave(sup.session, prompts, args.gen))
+    else:
+        gen, prefill_s, decode_s = run_wave(sess, prompts, args.gen)
     tps = args.requests * args.gen / decode_s
     print(f"arch={args.arch} reduced={args.reduced} "
           f"prefill {prefill_s*1e3:.1f}ms  decode "
           f"{decode_s / args.gen * 1e3:.2f}ms/tok  {tps:.0f} tok/s")
     print("sample:", gen[0][:10].tolist())
+    if sup is not None and len(sess.events):
+        counts = sess.events.counts()
+        print("fault events:", " ".join(f"{k}={v}"
+                                        for k, v in sorted(counts.items())))
 
 
 if __name__ == "__main__":

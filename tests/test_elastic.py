@@ -425,11 +425,22 @@ def test_adhoc_drift_probe_does_not_poison_calibration():
     assert sess._drift_baseline is not None
 
 
-def test_replan_is_train_mode_only():
+def test_replan_mode_guard():
+    # serve sessions replan since the multi-tenant arbiter (lease
+    # migration = mesh + re-jit, no Poplar search); dryrun still refuses
     cfg = get_config("llama-0.5b", reduced=True)
-    sess = Session.build(cfg, mode="serve", impl="reference")
-    with pytest.raises(RuntimeError, match="train"):
+    sess = Session.build(cfg, mode="dryrun")
+    with pytest.raises(RuntimeError, match="train/serve"):
         sess.replan()
+
+    serve = Session.build(cfg, mode="serve", impl="reference")
+    rep = serve.replan()                    # no cluster: re-jit in place
+    assert rep.trigger == "explicit"
+    import jax.numpy as jnp
+    tokens = jnp.zeros((1, 1), jnp.int32)
+    state = serve.init_decode_state(1, 4)
+    logits, _ = serve.decode(tokens, state)
+    assert np.all(np.isfinite(np.asarray(logits)))
 
 
 # ------------------------------------------- 8-device elastic (slow) ----

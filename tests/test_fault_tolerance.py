@@ -203,6 +203,103 @@ def test_async_crash_mid_save_restores_previous_bit_identically(tmp_path):
     w.close()
 
 
+# ------------------------------------------------ incremental saves -----
+
+def test_incremental_save_skips_unchanged_leaves(tmp_path):
+    """Unchanged arrays are not rewritten: the new manifest entry's
+    sources table points them at the prior payload, the new npz holds
+    only the changed leaves, and verify/restore follow the indirection
+    bit-identically."""
+    import json
+    d = str(tmp_path)
+    p1 = _params()
+    save_checkpoint(d, 1, p1, incremental=True)    # no prior: full write
+    p2 = dict(p1)
+    p2["w"] = p1["w"] * 2.0                        # "b" unchanged
+    save_checkpoint(d, 2, p2, incremental=True)
+
+    man = json.loads((tmp_path / "MANIFEST.json").read_text())
+    rec = man["steps"]["2"]
+    assert rec["sources"] == {"params/b": "ckpt_00000001.npz"}
+    with np.load(tmp_path / "ckpt_00000002.npz") as npz:
+        assert "params/w" in npz.files and "params/b" not in npz.files
+    assert "sources" not in man["steps"]["1"]      # the base is full
+
+    assert verify_checkpoint(d, 1) and verify_checkpoint(d, 2)
+    step, params, _ = restore_checkpoint(d, 2, _params())
+    assert step == 2
+    np.testing.assert_array_equal(params["w"], p2["w"])
+    np.testing.assert_array_equal(params["b"], p1["b"])
+
+
+def test_incremental_chains_collapse_to_origin_file(tmp_path):
+    """A leaf unchanged across many saves always sources from the file
+    that actually holds its bytes — not a chain of hops through every
+    intermediate step."""
+    import json
+    d = str(tmp_path)
+    p = _params()
+    save_checkpoint(d, 1, p, incremental=True)
+    for s in (2, 3, 4):
+        p = dict(p)
+        p["w"] = p["w"] + 1.0                      # "b" never changes
+        save_checkpoint(d, s, p, incremental=True)
+    man = json.loads((tmp_path / "MANIFEST.json").read_text())
+    for s in ("2", "3", "4"):
+        assert man["steps"][s]["sources"]["params/b"] == "ckpt_00000001.npz"
+    step, params, _ = restore_checkpoint(d, 4, _params())
+    np.testing.assert_array_equal(params["w"], p["w"])
+    np.testing.assert_array_equal(params["b"], _params()["b"])
+
+
+def test_incremental_resave_of_same_step_is_full(tmp_path):
+    """Re-saving step N compares only against steps strictly below N, so
+    restore-to-earlier-then-save never self-references."""
+    import json
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _params(), incremental=True)
+    save_checkpoint(d, 3, _params(), incremental=True)
+    man = json.loads((tmp_path / "MANIFEST.json").read_text())
+    assert "sources" not in man["steps"]["3"]
+    assert verify_checkpoint(d, 3)
+
+
+def test_retention_sweep_keeps_referenced_base_payloads(tmp_path):
+    """keep_last drops old manifest entries but must not unlink a base
+    payload that surviving incremental entries still source from."""
+    d = str(tmp_path)
+    p = _params()
+    save_checkpoint(d, 1, p, incremental=True)
+    for s in (2, 3):
+        p = dict(p)
+        p["w"] = p["w"] + 1.0
+        save_checkpoint(d, s, p, incremental=True)
+    assert sweep_retention(d, keep_last=2) == [1]      # dropped steps
+    assert committed_steps(d) == [2, 3]
+    assert (tmp_path / "ckpt_00000001.npz").exists()   # still referenced
+    assert not (tmp_path / "ckpt_00000001.json").exists()
+    assert verify_checkpoint(d, 3)
+    step, params, _ = restore_checkpoint(d, 3, _params())
+    np.testing.assert_array_equal(params["b"], _params()["b"])
+    np.testing.assert_array_equal(params["w"], p["w"])
+
+
+def test_async_writer_incremental_mode(tmp_path):
+    import json
+    w = AsyncCheckpointWriter(str(tmp_path), incremental=True)
+    p = _params()
+    w.submit(1, p).result(30)
+    p2 = dict(p)
+    p2["b"] = p["b"] + 1.0
+    w.submit(2, p2).result(30)
+    w.close()
+    man = json.loads((tmp_path / "MANIFEST.json").read_text())
+    assert man["steps"]["2"]["sources"] == {"params/w": "ckpt_00000001.npz"}
+    step, params, _ = restore_checkpoint(str(tmp_path), 2, _params())
+    np.testing.assert_array_equal(params["w"], p["w"])
+    np.testing.assert_array_equal(params["b"], p2["b"])
+
+
 # ------------------------------------------------- fault schedule units --
 
 def test_fault_schedule_parse_grammar():
@@ -342,6 +439,48 @@ def test_supervisor_autosave_and_flush(tmp_path):
     sup.run(4)
     assert sess.flush_saves() == []
     assert committed_steps(d) == [2, 4]
+
+
+def test_membership_recovery_flushes_pending_async_save_first(tmp_path):
+    """Bugfix pin: an async autosave still in flight when a device loss
+    hits must commit *before* the membership change — replan re-shards
+    the live state, and racing the background writer could gather
+    half-resharded arrays into the "pre-fault" checkpoint.
+
+    The io_hook holds the step-2 background commit open until the loss
+    has actually fired, so the only way the commit can precede the
+    recovery in the event log is the supervisor's explicit flush."""
+    d = str(tmp_path)
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, make_cluster("t", [("T4-16G", 2)], 12.0),
+                         gbs=4, seq=8, plan_seq=8, impl="reference")
+    sched = FaultSchedule().lose(3, "T4-16G#2")
+    sup = Supervisor(sess, FaultPolicy(min_devices=1), sched,
+                     ckpt_path=d, save_every=2, async_save=True)
+    loss_fired = threading.Event()
+    real_hook = sess._ckpt_io_hook
+
+    def gated_hook(event, step):
+        if event == "payload_write" and step == 2:
+            assert loss_fired.wait(60), "loss never fired while save pending"
+        real_hook(event, step)
+
+    sess._writer_for(d, None).io_hook = gated_hook
+    real_emit = sup.events.emit
+
+    def emit(kind, **kw):
+        if kind == "device_loss":
+            loss_fired.set()           # loss observed: release the writer
+        return real_emit(kind, **kw)
+
+    sup.events.emit = emit
+    for _ in range(4):
+        sup.step()
+    assert sess.flush_saves() == []
+    kinds = [e.kind for e in sup.events]
+    assert kinds.index("ckpt_committed") < kinds.index("replan_recovered")
+    assert committed_steps(d) == [2, 4]
+    assert int(sup.session.state.step) == 4
 
 
 def test_slow_host_shows_in_observed_imbalance():
