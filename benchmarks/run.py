@@ -30,7 +30,10 @@ def _parse_derived(derived: str) -> dict:
                 "async_stall_ms", "blocking_stall_ms", "recovery_ms",
                 "recovery_steps_equivalent", "rearbitration_ms",
                 "arbitration_search_ms", "arbitration_steps_equivalent",
-                "utility_arbiter", "utility_even", "utility_delta"):
+                "utility_arbiter", "utility_even", "utility_delta",
+                "engine_tokens_per_sec", "wave_tokens_per_sec",
+                "ttft_p50_ms", "ttft_p95_ms", "tok_p50_ms", "tok_p95_ms",
+                "wave_pad_waste", "preemptions"):
         # anchor on a field boundary: the bare "ms" key must not match
         # inside "replan_ms=…" / "step_ms=…"
         m = re.search(rf"(?:^|;){key}=([-0-9.eE]+)x?(?:;|$)", derived)

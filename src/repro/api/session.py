@@ -915,6 +915,46 @@ class Session:
         return mm.init_decode_state(self.cfg, batch, max_len,
                                     enc_out=enc_out)
 
+    def engine(self, *, requests: Optional[int] = None,
+               cache_len: Optional[int] = None, num_pages: int = 256,
+               page_size: int = 16, chunk: int = 32, max_batch: int = 64,
+               split=None, **kw):
+        """A continuous-batching :class:`~repro.serve.engine.Engine`
+        bound to this serve session's parameters.
+
+        When the session rides a cluster (or an arbiter lease) and the
+        caller names the workload (``requests``/``cache_len``), the
+        engine is built with a hetero traffic split priced off that
+        cluster; otherwise it runs split-less (uniform admission).
+
+        An attached FaultSchedule threads through as the engine's
+        ``tick_hook``: every decode tick consumes one serve tick, so
+        scheduled faults fire inside ``Supervisor.call`` exactly as they
+        do on the ``decode()`` path — recovery rebuilds the session, and
+        callers rebuild the engine from the recovered session.
+        """
+        if self.mode != "serve":
+            raise RuntimeError("engine() is serve-mode only")
+        from repro.serve.engine import Engine
+        from repro.serve.split import plan_traffic_split
+        if (split is None and self.cluster is not None
+                and requests and cache_len):
+            split = plan_traffic_split(self.cluster, self.cfg,
+                                       requests=requests,
+                                       cache_len=cache_len,
+                                       page_size=page_size)
+        tick_hook = None
+        if self._fault_schedule is not None:
+            sched = self._fault_schedule
+
+            def tick_hook():
+                sched.check_step(self._bump_serve_tick())
+        impl = self.impl if self.impl in ("reference", "pallas") else "reference"
+        return Engine(self.state.params, self.cfg, num_pages=num_pages,
+                      page_size=page_size, chunk=chunk, max_batch=max_batch,
+                      impl=impl, split=split, cluster=self.cluster,
+                      tick_hook=tick_hook, **kw)
+
     # dryrun-mode surface
     def lower(self):
         """Lower (not compile) the train step against ShapeDtypeStructs —

@@ -213,6 +213,135 @@ def detect_drift(window: EMAWindow, predicted_s: Optional[float],
                         else None))
 
 
+class LatencyHistogram:
+    """Log-spaced latency histogram (serving-side percentiles).
+
+    Serving latency is judged by tail quantiles, and the engine sees
+    thousands of per-token samples per second — storing them all is out,
+    and an EMA hides the tail entirely. Geometric buckets (default 10
+    per decade from 1µs to 1000s) give ~12% worst-case relative error on
+    any percentile at a fixed 271-int footprint. ``percentile`` returns
+    the geometric midpoint of the bucket holding the q-th sample.
+    """
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
+                 buckets_per_decade: int = 10):
+        import math
+        self.lo, self.hi = lo, hi
+        decades = math.log10(hi / lo)
+        n = max(int(round(decades * buckets_per_decade)), 1)
+        self.ratio = (hi / lo) ** (1.0 / n)
+        # bucket i covers [lo * ratio^i, lo * ratio^(i+1)); +2 for the
+        # underflow/overflow catch-alls at the ends
+        self.counts = [0] * (n + 2)
+        self.total = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def _bucket(self, seconds: float) -> int:
+        import math
+        if seconds < self.lo:
+            return 0
+        if seconds >= self.hi:
+            return len(self.counts) - 1
+        return 1 + int(math.log(seconds / self.lo) / math.log(self.ratio))
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        self.counts[min(self._bucket(s), len(self.counts) - 1)] += 1
+        self.total += 1
+        self.sum += s
+        self.max = max(self.max, s)
+
+    def percentile(self, q: float) -> Optional[float]:
+        """q in [0, 100]. None until a sample lands."""
+        if self.total == 0:
+            return None
+        target = q / 100.0 * self.total
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target and c > 0:
+                if i == 0:
+                    return self.lo
+                if i == len(self.counts) - 1:
+                    return self.max
+                lo_edge = self.lo * self.ratio ** (i - 1)
+                return lo_edge * self.ratio ** 0.5
+        return self.max
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.sum / self.total if self.total else None
+
+    def reset(self) -> None:
+        self.counts = [0] * len(self.counts)
+        self.total, self.sum, self.max = 0, 0.0, 0.0
+
+
+@dataclass
+class ServeTelemetry:
+    """Per-request serving metrics: TTFT and per-token latency histograms
+    plus a generated-tokens/sec EMA — what the engine's describe/log line
+    surfaces and what the hetero re-split loop watches for drift.
+
+    TTFT (time-to-first-token) is recorded once per request when its
+    prefill produces the first logits; per-token latency once per decode
+    step per *live* request in the batch (padded bucket slots don't
+    count). ``throughput`` smooths generated tokens per wall-second over
+    decode steps — comparable to ``ServePlan.requests_per_sec *
+    gen_tokens`` when judging plan drift.
+    """
+    ttft: LatencyHistogram = field(default_factory=LatencyHistogram)
+    per_token: LatencyHistogram = field(default_factory=LatencyHistogram)
+    throughput: EMAWindow = field(
+        default_factory=lambda: EMAWindow(warmup=1))
+    requests_done: int = 0
+    tokens_generated: int = 0
+    prefill_tokens: int = 0
+
+    def record_ttft(self, seconds: float) -> None:
+        self.ttft.record(seconds)
+
+    def record_decode(self, dt: float, live: int) -> None:
+        """One decode step of ``live`` requests taking ``dt`` seconds."""
+        if live <= 0:
+            return
+        self.per_token.record(dt)
+        self.throughput.record(dt, tokens=live)
+        self.tokens_generated += live
+
+    def record_prefill(self, tokens: int) -> None:
+        self.prefill_tokens += int(tokens)
+
+    def record_finished(self, n: int = 1) -> None:
+        self.requests_done += n
+
+    def describe(self) -> str:
+        def ms(v):
+            return f"{v * 1e3:.1f}ms" if v is not None else "-"
+        tps = self.throughput.tokens_per_sec
+        rate = f"{tps:.1f} tok/s" if tps is not None else "warming"
+        return (f"serve: {self.requests_done} done · "
+                f"{self.tokens_generated} tok ({self.prefill_tokens} prefill) · "
+                f"ttft p50 {ms(self.ttft.percentile(50))} "
+                f"p95 {ms(self.ttft.percentile(95))} · "
+                f"tok p50 {ms(self.per_token.percentile(50))} "
+                f"p95 {ms(self.per_token.percentile(95))} · {rate}")
+
+    def snapshot(self) -> Dict[str, Optional[float]]:
+        return {
+            "requests_done": self.requests_done,
+            "tokens_generated": self.tokens_generated,
+            "prefill_tokens": self.prefill_tokens,
+            "ttft_p50_s": self.ttft.percentile(50),
+            "ttft_p95_s": self.ttft.percentile(95),
+            "tok_p50_s": self.per_token.percentile(50),
+            "tok_p95_s": self.per_token.percentile(95),
+            "tokens_per_sec": self.throughput.tokens_per_sec,
+        }
+
+
 @dataclass
 class FaultEvent:
     """One runtime transition: a fault observed, a recovery taken, a

@@ -1,0 +1,146 @@
+"""Paged flash-decode — Pallas TPU kernel over a page-table-indexed KV
+cache (the serving engine's hot loop).
+
+``flash_decode`` streams one request's *contiguous* cache; batching
+requests of wildly different lengths through it means padding every
+cache to the longest request and copying each ragged cache into that
+contiguous layout. This kernel removes both costs: K/V live in a shared
+pool of fixed-size pages ``(num_pages, page_size, Hkv, D)`` and each
+request brings a row of page indices (its page table). The grid's
+innermost dimension walks the request's pages; the K/V BlockSpec
+``index_map`` reads the *scalar-prefetched* page table to fetch the
+page each step actually needs — a hardware-level gather, no contiguous
+copy, no padding to the batch's max length (tail pages past a request's
+``length`` are skipped via ``pl.when``).
+
+Grid = (batch, kv_heads, max_pages); scalar-prefetch args are the page
+table ``(B, max_pages)`` and per-request ``lengths (B,)``. Everything
+else is inherited from ``flash_decode``'s GQA-native layout: one
+program row per *KV* head, the whole ``group = Hq/Hkv`` query-head
+group riding each (page_size, D) cache tile, online-softmax running
+statistics in scratch over the sequential page dimension.
+
+Bit-parity contract: with ``page_size == block_k`` the tile boundaries
+and the online-softmax update order match ``flash_decode`` exactly, so
+on equivalent fills the two kernels are bit-identical
+(tests/test_paged_decode.py pins this, GQA + ragged fills +
+page-boundary cases included).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces + scalar-prefetch grid; absent on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _scratch(group: int, d: int):
+    if _VMEM is not None:
+        return [_VMEM((group,), jnp.float32), _VMEM((group,), jnp.float32),
+                _VMEM((group, d), jnp.float32)]
+    return [jax.ShapeDtypeStruct((group,), jnp.float32),
+            jax.ShapeDtypeStruct((group,), jnp.float32),
+            jax.ShapeDtypeStruct((group, d), jnp.float32)]
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  page_size: int, scale: float, max_pages: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = pi * page_size
+
+    @pl.when(start < length)
+    def _page():
+        q = q_ref[...].astype(jnp.float32)                 # (group, D)
+        k = k_ref[...].astype(jnp.float32)                 # (page_size, D)
+        v = v_ref[...].astype(jnp.float32)
+        s = (q @ k.T) * scale                              # (group, page_size)
+        pos = start + jax.lax.iota(jnp.int32, page_size)
+        s = jnp.where((pos < length)[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])                    # (group, page_size)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(pi == max_pages - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_paged_pallas(q, k_pages, v_pages, page_table, lengths, *,
+                              interpret: bool = False):
+    """q: (B, Hq, 1, D); k_pages/v_pages: (num_pages, page_size, Hkv, D)
+    — the pool's storage layout, un-expanded; page_table: (B, max_pages)
+    int32 page indices per request (entries past a request's fill must
+    still be *valid* pool indices — the engine pads with the reserved
+    null page 0; their tiles are never read); lengths: (B,) int32 valid
+    tokens per request. Returns (B, Hq, 1, D).
+
+    A request whose ``length`` is 0 (a padded batch-bucket slot) returns
+    zeros — no page of the pool is touched for it.
+    """
+    B, Hq, _, D = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    if Hq % Hkv:
+        raise ValueError(
+            f"GQA head counts must divide: n_heads={Hq}, n_kv_heads={Hkv}")
+    if page_table.shape[0] != B or lengths.shape != (B,):
+        raise ValueError(
+            f"page_table {page_table.shape} / lengths {lengths.shape} do "
+            f"not match batch {B}")
+    group = Hq // Hkv
+    max_pages = page_table.shape[1]
+    # q heads j*group .. (j+1)*group-1 share kv head j; contiguous-head
+    # reshape is free (same trick as flash_decode)
+    qf = q.reshape(B, Hkv, group, D)
+    scale = 1.0 / float(D) ** 0.5
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               scale=scale, max_pages=max_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, lengths
+        grid=(B, Hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((None, None, group, D),
+                         lambda b, h, i, pt, ln: (b, h, 0, 0)),
+            # the gather: this page's pool row comes from the request's
+            # scalar-prefetched page table, h slices the KV head in place
+            pl.BlockSpec((None, page_size, None, D),
+                         lambda b, h, i, pt, ln: (pt[b, i], 0, h, 0)),
+            pl.BlockSpec((None, page_size, None, D),
+                         lambda b, h, i, pt, ln: (pt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, group, D),
+                               lambda b, h, i, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=_scratch(group, D),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qf, k_pages, v_pages)
+    return out.reshape(B, Hq, 1, D)

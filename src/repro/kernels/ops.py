@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels.flash_attention import flash_attention_vjp
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode_paged import flash_decode_paged_pallas
 from repro.kernels.mamba_scan import mamba_scan_vjp
 from repro.kernels.rmsnorm import rmsnorm_vjp
 
@@ -105,3 +106,17 @@ def flash_decode(q, k, v, filled, *, block_k: int = 512):
     is read once, in place, and serves the whole query-head group."""
     return flash_decode_pallas(q, k, v, filled, block_k=block_k,
                                interpret=_interpret_default())
+
+
+@jax.jit
+def flash_decode_paged(q, k_pages, v_pages, page_table, lengths):
+    """Single-token decode attention over a *paged* KV cache: q
+    (B,Hq,1,D), k/v pools (num_pages, page_size, Hkv, D), page_table
+    (B, max_pages) int32, lengths (B,) int32. Each request's ragged
+    cache is gathered page-by-page through the scalar-prefetched page
+    table — no contiguous copy, no padding to the batch's max length.
+    Bit-identical to :func:`flash_decode` at ``block_k == page_size``
+    on equivalent fills."""
+    return flash_decode_paged_pallas(q, k_pages, v_pages, page_table,
+                                     lengths,
+                                     interpret=_interpret_default())

@@ -20,7 +20,6 @@ import argparse
 import tempfile
 from pathlib import Path
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api import Session
@@ -29,7 +28,7 @@ from repro.core import cluster as CL
 from repro.core.arbiter import ClusterArbiter, TenantSuspended
 from repro.core.faults import FaultPolicy, FaultSchedule
 from repro.core.telemetry import EventLog
-from repro.launch.serve import run_wave
+from repro.launch.serve import run_engine_wave
 
 
 def _cluster(name: str) -> CL.ClusterSpec:
@@ -111,9 +110,11 @@ def main(argv=None):
                   if args.serve_fault_plan else None))
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(3, cfg.vocab_size, (args.requests, args.prompt_len)),
-        jnp.int32)
+    # ragged mixed-length prompts — the traffic shape the engine exists for
+    lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
+                        args.requests)
+    prompts = [rng.integers(3, cfg.vocab_size, int(l)).tolist()
+               for l in lens]
     losses = []
     for i in range(args.steps):
         try:
@@ -128,12 +129,18 @@ def main(argv=None):
                 print("[cotenant] serve suspended — skipping wave")
             else:
                 try:
-                    _, _, decode_s = serve_sup.call(
-                        lambda: run_wave(serve_sup.session, prompts,
-                                         args.gen))
-                    arb.observe_wave("serve", decode_s / args.gen)
+                    # engine built inside the call: recovery rebinds
+                    # serve_sup.session and the retry rebuilds from it
+                    results, wall_s, eng = serve_sup.call(
+                        lambda: run_engine_wave(serve_sup.session, prompts,
+                                                args.gen))
+                    n_tok = sum(len(t) for t in results.values())
+                    snap = eng.telemetry.snapshot()
+                    per_tok = (snap.get("tok_p50_s")
+                               or wall_s / max(n_tok, 1))
+                    arb.observe_wave("serve", per_tok)
                     print(f"[cotenant] wave after step {i + 1}: "
-                          f"{decode_s / args.gen * 1e3:.2f} ms/tok")
+                          f"{eng.log_line()}")
                 except TenantSuspended as e:
                     print(f"[cotenant] serve suspended: {e}")
             arb.maybe_rearbitrate()

@@ -1,28 +1,33 @@
-"""Serving launcher: batched generation with Poplar-style heterogeneity
-awareness applied to the *serving* wave size.
+"""Serving launcher: the hetero-aware continuous-batching engine, with
+the fixed decode wave kept as the baseline it replaced.
 
-The paper allocates training micro-batches per device from measured speed
-curves; the same machinery sizes decode waves across heterogeneous
-serving groups here:
+The engine path (default) is the full PR-9 stack:
 
-  1. profile each device group's decode step time vs batch (Alg. 1 on the
-     serve path — analytical device models on this CPU container);
-  2. spline-fit the curves (Alg. 2 substrate);
-  3. allocate each wave's requests so all groups finish together
-     (allocate_stage01 — decode has no gradient sync, so the stage-0/1
-     allocator is the right shape);
-  4. run the wave through a serve-mode Session (jitted prefill/decode).
+  1. price each device class's prefill vs decode throughput
+     (``serve/split.plan_traffic_split`` over ``core/planner.plan_serve``
+     — Alg. 1 economics applied to the two serving phases);
+  2. run requests through :class:`~repro.serve.engine.Engine`: paged KV
+     cache, per-tick admission/eviction, chunked prefill interleaved
+     with bucketed decode;
+  3. report TTFT / per-token latency percentiles and tokens/sec from
+     the engine's :class:`~repro.core.telemetry.ServeTelemetry`.
+
+``--wave`` runs the pre-engine baseline instead: one fixed wave sized by
+``allocate_stage01`` over ``core/profiler.decode_profiles`` curves, every
+request padded to the longest horizon. ``benchmarks/perf_variants.py``
+races the two; the engine must win on mixed-length traffic.
 
 Fault-injection parity with ``launch/train.py``: ``--fault-plan`` arms a
 deterministic :class:`~repro.core.faults.FaultSchedule` on the serve
-session (each decode call consumes one schedule tick) and a serve-side
-:class:`~repro.core.faults.Supervisor` absorbs the injected faults —
-the serve tenant is drivable in the same cotenant fault drills as train.
+session (each engine decode tick consumes one schedule tick) and a
+serve-side :class:`~repro.core.faults.Supervisor` absorbs the injected
+faults — the serve tenant is drivable in the same cotenant fault drills
+as train.
 
 Usage:
   python -m repro.launch.serve --arch llama-0.5b --reduced \
       --cluster C --requests 32 --prompt-len 16 --gen 24 \
-      [--fault-plan lose:8:T4-16G] [--max-retries 2]
+      [--wave] [--fault-plan lose:8:T4-16G] [--max-retries 2]
 """
 from __future__ import annotations
 
@@ -41,16 +46,10 @@ from repro.core.faults import FaultPolicy, FaultSchedule, Supervisor
 from repro.core.profiler import decode_profiles
 
 
-def profile_decode_groups(cluster: CL.ClusterSpec, cfg, cache_len: int):
-    """Decode-speed curves per device: step time ~ param reads + cache
-    reads at batch b (HBM-bound), measured against each device's specs
-    (profiling lives in :func:`repro.core.profiler.decode_profiles` —
-    shared with the serve planner and the multi-tenant arbiter)."""
-    return {n: fit_curve(p)
-            for n, p in decode_profiles(cluster, cfg, cache_len).items()}
-
-
 def run_wave(sess: Session, prompts, gen_tokens: int):
+    """Fixed-wave baseline: prefill everyone, decode everyone to the
+    same horizon. Short requests pay for long ones at both ends — kept
+    as the benchmark the engine has to beat."""
     B, prompt_len = prompts.shape
     state = sess.init_decode_state(B, prompt_len + gen_tokens)
     logits = None
@@ -70,6 +69,29 @@ def run_wave(sess: Session, prompts, gen_tokens: int):
     return np.stack(out, axis=1), prefill_s, decode_s
 
 
+def run_engine_wave(sess: Session, prompts, gens, **engine_kw):
+    """Run one batch of requests through a fresh engine built from the
+    (possibly recovered) session; returns ``(results, wall_s, engine)``.
+
+    ``prompts`` is a list of token lists (ragged — that's the point);
+    ``gens`` an int or per-request list of generation lengths. Built
+    fresh each call so ``Supervisor.call`` retries construct the engine
+    from ``sup.session`` after a recovery rebound it.
+    """
+    n = len(prompts)
+    if isinstance(gens, int):
+        gens = [gens] * n
+    cache_len = max(len(p) + g for p, g in zip(prompts, gens))
+    engine_kw.setdefault("requests", n)
+    engine_kw.setdefault("cache_len", cache_len)
+    eng = sess.engine(**engine_kw)
+    rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    t0 = time.time()
+    results = eng.run()
+    wall_s = time.time() - t0
+    return {r: results[r] for r in rids}, wall_s, eng
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-0.5b")
@@ -79,6 +101,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--wave", action="store_true",
+                    help="run the fixed-wave baseline instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--num-pages", type=int, default=512)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--fault-plan", default=None,
                     help="comma-separated FaultSchedule specs (steps are "
                          "decode ticks), e.g. lose:8:T4-16G,step_fail:3")
@@ -89,17 +117,6 @@ def main(argv=None):
     cluster = CL.PAPER_CLUSTERS[args.cluster]()
     cache_len = args.prompt_len + args.gen
 
-    # ---- Poplar allocation of the wave across heterogeneous groups ----
-    curves = profile_decode_groups(cluster, cfg, cache_len)
-    plan = allocate_stage01(curves, args.requests)
-    print(f"serving wave of {args.requests} requests over cluster "
-          f"{args.cluster} ({cluster.n} devices):")
-    for name, a in plan.assignments.items():
-        print(f"  {name:16s} -> {a.gmbs:4d} requests "
-              f"(mbs {curves[name].mbs})")
-    assert plan.total_batch == args.requests
-
-    # ---- execute locally (one wave; per-group waves on a real fleet) ----
     # the cluster rides along so a membership fault has survivors to
     # re-plan onto (serve replan = mesh + re-jit, no Poplar search)
     sess = Session.build(cfg, cluster, mode="serve")
@@ -110,20 +127,57 @@ def main(argv=None):
                          sched)
         sess.events.verbose = True
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(3, cfg.vocab_size, (args.requests, args.prompt_len)),
-        jnp.int32)
-    if sup is not None:
-        # the callable re-reads sup.session: recovery may rebind it
-        gen, prefill_s, decode_s = sup.call(
-            lambda: run_wave(sup.session, prompts, args.gen))
+
+    if args.wave:
+        # ---- fixed-wave baseline: Poplar allocation of one wave --------
+        curves = {n: fit_curve(p)
+                  for n, p in decode_profiles(cluster, cfg,
+                                              cache_len).items()}
+        plan = allocate_stage01(curves, args.requests)
+        print(f"serving wave of {args.requests} requests over cluster "
+              f"{args.cluster} ({cluster.n} devices):")
+        for name, a in plan.assignments.items():
+            print(f"  {name:16s} -> {a.gmbs:4d} requests "
+                  f"(mbs {curves[name].mbs})")
+        assert plan.total_batch == args.requests
+        prompts = jnp.asarray(
+            rng.integers(3, cfg.vocab_size,
+                         (args.requests, args.prompt_len)), jnp.int32)
+        if sup is not None:
+            # the callable re-reads sup.session: recovery may rebind it
+            gen, prefill_s, decode_s = sup.call(
+                lambda: run_wave(sup.session, prompts, args.gen))
+        else:
+            gen, prefill_s, decode_s = run_wave(sess, prompts, args.gen)
+        tps = args.requests * args.gen / decode_s
+        print(f"arch={args.arch} reduced={args.reduced} "
+              f"prefill {prefill_s*1e3:.1f}ms  decode "
+              f"{decode_s / args.gen * 1e3:.2f}ms/tok  {tps:.0f} tok/s")
+        print("sample:", gen[0][:10].tolist())
     else:
-        gen, prefill_s, decode_s = run_wave(sess, prompts, args.gen)
-    tps = args.requests * args.gen / decode_s
-    print(f"arch={args.arch} reduced={args.reduced} "
-          f"prefill {prefill_s*1e3:.1f}ms  decode "
-          f"{decode_s / args.gen * 1e3:.2f}ms/tok  {tps:.0f} tok/s")
-    print("sample:", gen[0][:10].tolist())
+        # ---- engine path: mixed-length traffic, continuous batching ----
+        lens = rng.integers(max(args.prompt_len // 2, 1),
+                            args.prompt_len + 1, args.requests)
+        prompts = [rng.integers(3, cfg.vocab_size, int(l)).tolist()
+                   for l in lens]
+        gens = rng.integers(max(args.gen // 2, 1), args.gen + 1,
+                            args.requests).tolist()
+        kw = dict(num_pages=args.num_pages, page_size=args.page_size,
+                  chunk=args.chunk)
+        if sup is not None:
+            results, wall_s, eng = sup.call(
+                lambda: run_engine_wave(sup.session, prompts, gens, **kw))
+        else:
+            results, wall_s, eng = run_engine_wave(sess, prompts, gens,
+                                                   **kw)
+        if eng.split is not None:
+            print(eng.split.describe())
+        tokens = sum(len(t) for t in results.values())
+        print(f"arch={args.arch} reduced={args.reduced} "
+              f"{len(results)} requests, {tokens} tokens in "
+              f"{wall_s:.2f}s ({tokens / wall_s:.0f} tok/s wall)")
+        print(eng.log_line())
+        print("sample:", results[min(results)][:10])
     if sup is not None and len(sess.events):
         counts = sess.events.counts()
         print("fault events:", " ".join(f"{k}={v}"

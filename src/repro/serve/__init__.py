@@ -1,0 +1,23 @@
+"""Hetero-aware serving engine: paged KV cache + continuous batching
+over Poplar-planned device classes.
+
+Layers (bottom-up):
+  paged_cache — host-side page allocator (page tables, free list)
+  runtime     — paged decode / chunked-prefill jitted steps + pools
+  split       — per-device-class prefill/decode traffic pricing
+  engine      — request queue, admission/eviction, bucketed batching
+"""
+from repro.serve.engine import Engine, Request
+from repro.serve.paged_cache import PagedCacheOOM, PagedKVCache
+from repro.serve.runtime import (PagedRuntime, init_pools,
+                                 kv_bytes_per_token, next_pow2,
+                                 trace_counts)
+from repro.serve.split import (ClassLane, TrafficSplit, drift_report,
+                               plan_traffic_split, uniform_split)
+
+__all__ = [
+    "ClassLane", "Engine", "PagedCacheOOM", "PagedKVCache",
+    "PagedRuntime", "Request", "TrafficSplit", "drift_report",
+    "init_pools", "kv_bytes_per_token", "next_pow2",
+    "plan_traffic_split", "trace_counts", "uniform_split",
+]

@@ -1,0 +1,409 @@
+"""Continuous-batching engine over the paged runtime.
+
+The fixed-wave loop (``launch/serve.py::run_wave``) admits a batch,
+prefills it token by token, decodes everyone to the longest request's
+horizon, and only then admits more — short requests pay for long ones at
+both ends. This engine replaces the wave with a per-step scheduler:
+
+  queued ── admit (pages + slot free) ──> prefilling ── chunks done ──>
+  decoding ── max tokens reached ──> done (pages freed THAT tick)
+
+Each :meth:`step` is one scheduler tick:
+  1. **admit** queued requests while their context fits the page pool
+     and a decode slot is free (slots come from the hetero split's
+     per-class sizing, so admission control *is* the Poplar allocation);
+  2. **prefill** up to ``prefill_budget`` prompt tokens as fixed-size
+     chunks through ``PagedRuntime.prefill_chunk`` — lanes drain in
+     prefill-share order, so compute-rich classes eat the prompt backlog
+     first; a request whose prompt completes samples its first token
+     (that's its TTFT) and joins the decode batch;
+  3. **decode** one token for every decoding request in a single
+     bucketed batch (B and the page-table width both padded to powers of
+     two) so the jit cache stays O(log) in both axes. A request whose
+     next token needs a page the pool can't give preempts the *youngest*
+     decoding request (pages released, context re-prefilled later —
+     greedy decoding makes the recompute bit-exact);
+  4. **retire** finished requests and release their pages immediately —
+     the freed pages are what lets step 1 admit on the very next tick.
+
+Drift: every decode step feeds the ``ServeTelemetry`` tokens/sec EMA;
+:meth:`maybe_resplit` calibrates a baseline against the split's
+predicted wave latency, and ``resplit_after`` consecutive drifted
+reports re-run :func:`~repro.serve.split.plan_traffic_split` (and fire
+``on_resplit`` — the cotenant launcher wires that to the arbiter's
+re-arbitration).
+
+Faults: ``tick_hook`` runs before every decode step; a Session-attached
+engine consumes one serve tick per call there, so deterministic
+FaultSchedules and ``Supervisor.call`` recovery drive the engine exactly
+like the wave path did.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import DriftConfig, ServeTelemetry
+from repro.serve import split as SP
+from repro.serve.paged_cache import PagedCacheOOM, PagedKVCache
+from repro.serve.runtime import PagedRuntime, next_pow2
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    lane: str = ""                    # device class the router picked
+    prefill_pos: int = 0              # context tokens already prefilled
+    generated: List[int] = field(default_factory=list)
+    pending_token: Optional[int] = None   # sampled, not yet fed to decode
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens that must be in the KV cache before decode can resume:
+        the prompt plus everything generated so far. For a fresh request
+        this is just the prompt; after a preemption the generated suffix
+        is re-prefilled too (greedy decode makes that recompute exact)."""
+        return self.prompt + self.generated
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Engine:
+    """Continuous-batching scheduler over one paged runtime.
+
+    ``split`` sizes admission (total decode slots) and orders prefill
+    (lane shares); without one, ``max_batch`` alone caps concurrency.
+    """
+
+    def __init__(self, params, cfg, *, num_pages: int = 256,
+                 page_size: int = 16, chunk: int = 32,
+                 max_batch: int = 64, prefill_budget: Optional[int] = None,
+                 impl: str = "reference",
+                 split: Optional[SP.TrafficSplit] = None,
+                 cluster=None, mesh=None,
+                 tick_hook: Optional[Callable[[], None]] = None,
+                 on_resplit: Optional[Callable[[SP.TrafficSplit], None]] = None,
+                 drift_config: Optional[DriftConfig] = None,
+                 resplit_after: int = 2,
+                 telemetry: Optional[ServeTelemetry] = None):
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.chunk = chunk
+        self.max_batch = max_batch
+        # default budget: one chunk per device class per tick — enough to
+        # keep prefill flowing without starving decode
+        n_lanes = len(split.lanes) if split is not None else 1
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else chunk * max(n_lanes, 1))
+        self.split = split
+        self.cluster = cluster
+        self.tick_hook = tick_hook
+        self.on_resplit = on_resplit
+        self.drift_config = drift_config or DriftConfig()
+        self.resplit_after = resplit_after
+        self.telemetry = telemetry or ServeTelemetry()
+
+        self.kv = PagedKVCache(num_pages=num_pages, page_size=page_size)
+        self.runtime = PagedRuntime(params, cfg, num_pages=num_pages,
+                                    page_size=page_size, impl=impl,
+                                    mesh=mesh)
+        self.queued: deque = deque()
+        self.prefilling: List[Request] = []
+        self.decoding: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._drift_baseline: Optional[float] = None
+        self._drift_streak = 0
+        self.resplits = 0
+        self.preemptions = 0
+        self.steps = 0
+
+    # --------------------------------------------------------- intake ----
+    @property
+    def decode_slots(self) -> int:
+        if self.split is not None and self.split.decode_slots_total > 0:
+            return min(self.split.decode_slots_total, self.max_batch)
+        return self.max_batch
+
+    def _route(self) -> str:
+        """Pick a lane for a new request: the class whose decode share is
+        most under-served by assignments so far (deterministic weighted
+        round-robin; '' without a split)."""
+        if self.split is None or not self.split.lanes:
+            return ""
+        kinds = sorted(self.split.lanes)
+        counts = {k: 0 for k in kinds}
+        assigned = 0
+        for r in (*self.queued, *self.prefilling, *self.decoding,
+                  *self.done.values()):
+            if r.lane in counts:
+                counts[r.lane] += 1
+                assigned += 1
+        total = max(assigned, 1)
+        return max(kinds, key=lambda k: (
+            self.split.decode_share.get(k, 0.0) - counts[k] / total,
+            self.split.decode_share.get(k, 0.0)))
+
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        worst = self.kv.pages_for(len(prompt) + int(max_new_tokens) + 1)
+        if worst > self.num_pages - 1:
+            raise PagedCacheOOM(
+                f"request needs {worst} pages at its longest; the pool "
+                f"has {self.num_pages - 1}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(max_new_tokens),
+                      lane=self._route(), submit_t=time.perf_counter())
+        self.queued.append(req)
+        return rid
+
+    # ------------------------------------------------------ scheduling ---
+    def _admit(self) -> None:
+        live = len(self.prefilling) + len(self.decoding)
+        while self.queued and live < self.decode_slots:
+            req = self.queued[0]
+            ctx = len(req.context)
+            # the context plus one decode token must fit right now;
+            # otherwise wait for retirements to free pages
+            if not self.kv.can_fit(ctx + 1):
+                break
+            self.queued.popleft()
+            self.kv.alloc(req.rid)
+            self.kv.reserve(req.rid, ctx)
+            self.prefilling.append(req)
+            live += 1
+
+    def _prefill_order(self) -> List[Request]:
+        """Drain order for the prompt backlog: lanes sorted by prefill
+        share (compute-rich classes first), FIFO within a lane."""
+        if self.split is None:
+            return list(self.prefilling)
+        share = self.split.prefill_share
+        return sorted(self.prefilling,
+                      key=lambda r: (-share.get(r.lane, 0.0), r.rid))
+
+    def _prefill_tick(self) -> None:
+        budget = self.prefill_budget
+        finished: List[Request] = []
+        for req in self._prefill_order():
+            ctx = req.context
+            while budget > 0 and req.prefill_pos < len(ctx):
+                n_valid = min(self.chunk, len(ctx) - req.prefill_pos, budget)
+                chunk = ctx[req.prefill_pos:req.prefill_pos + n_valid]
+                chunk = chunk + [0] * (self.chunk - n_valid)
+                max_pages = next_pow2(len(self.kv.tables[req.rid]))
+                pt, _ = self.kv.gather([req.rid], 1, max_pages)
+                logits = self.runtime.prefill_chunk(
+                    np.asarray([chunk], np.int32), pt,
+                    req.prefill_pos, n_valid)
+                req.prefill_pos += n_valid
+                self.kv.advance(req.rid, n_valid)
+                budget -= n_valid
+                self.telemetry.record_prefill(n_valid)
+                if req.prefill_pos == len(ctx):
+                    req.pending_token = int(jnp.argmax(logits[0, -1]))
+                    if req.first_token_t is None:
+                        req.first_token_t = time.perf_counter()
+                        self.telemetry.record_ttft(req.ttft)
+                    finished.append(req)
+            if budget <= 0:
+                break
+        for req in finished:
+            self.prefilling.remove(req)
+            self.decoding.append(req)
+
+    def _preempt(self, victim: Request) -> None:
+        """Evict a decoding request: release every page and requeue it at
+        the front. Its generated prefix is re-prefilled on re-admission
+        (recompute-style preemption — greedy decode reproduces the same
+        tokens, pinned by tests)."""
+        self.decoding.remove(victim)
+        self.kv.release(victim.rid)
+        victim.prefill_pos = 0
+        victim.pending_token = None
+        victim.preemptions += 1
+        self.preemptions += 1
+        self.queued.appendleft(victim)
+
+    def _reserve_batch(self) -> List[Request]:
+        """Reserve one decode token per decoding request, preempting the
+        youngest requests when the pool runs dry (oldest first keeps
+        head-of-line latency bounded)."""
+        reserved: List[Request] = []
+        for req in list(self.decoding[:self.max_batch]):
+            if req not in self.decoding:
+                continue                      # preempted by an earlier pass
+            while True:
+                try:
+                    self.kv.reserve(req.rid, 1)
+                    reserved.append(req)
+                    break
+                except PagedCacheOOM:
+                    keep = {r.rid for r in reserved} | {req.rid}
+                    victims = [r for r in self.decoding
+                               if r.rid not in keep]
+                    if victims:
+                        self._preempt(max(victims, key=lambda r: r.rid))
+                        continue
+                    self._preempt(req)        # last resort: itself
+                    break
+        return reserved
+
+    def _decode_tick(self) -> None:
+        if not self.decoding:
+            return
+        if self.tick_hook is not None:
+            self.tick_hook()
+        batch = self._reserve_batch()
+        if not batch:
+            return
+        B = next_pow2(len(batch))
+        max_pages = next_pow2(max(len(self.kv.tables[r.rid])
+                                  for r in batch))
+        pt, ln = self.kv.gather([r.rid for r in batch], B, max_pages)
+        toks = np.zeros((B, 1), np.int32)
+        for i, req in enumerate(batch):
+            toks[i, 0] = req.pending_token
+        t0 = time.perf_counter()
+        logits = self.runtime.decode(toks, pt, ln)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        dt = time.perf_counter() - t0
+        self.telemetry.record_decode(dt, live=len(batch))
+        self.steps += 1
+        for i, req in enumerate(batch):
+            self.kv.advance(req.rid, 1)
+            req.generated.append(int(toks[i, 0]))
+            req.pending_token = int(nxt[i])
+        # retire: pages free the same tick so admission sees them next tick
+        for req in [r for r in batch if r.done]:
+            self.decoding.remove(req)
+            self.kv.release(req.rid)
+            self.done[req.rid] = req
+            self.telemetry.record_finished()
+        self.maybe_resplit()
+
+    def step(self) -> None:
+        """One scheduler tick: admit → prefill (budgeted) → decode."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+
+    def run(self, max_ticks: int = 100_000) -> Dict[int, List[int]]:
+        """Drive ticks until every submitted request is done; returns
+        {rid: generated tokens}."""
+        ticks = 0
+        while self.queued or self.prefilling or self.decoding:
+            before = self._progress_marker()
+            self.step()
+            ticks += 1
+            if ticks >= max_ticks:
+                raise RuntimeError(f"engine stalled after {ticks} ticks")
+            if self._progress_marker() == before:
+                raise RuntimeError(
+                    "engine made no progress in a tick: "
+                    f"queued={len(self.queued)} "
+                    f"free_pages={self.kv.free_pages}")
+        return {rid: r.generated for rid, r in self.done.items()}
+
+    def _progress_marker(self):
+        return (len(self.queued), len(self.prefilling), len(self.decoding),
+                self.steps, self.preemptions,
+                sum(r.prefill_pos for r in self.prefilling))
+
+    # ----------------------------------------------------------- drift ---
+    def maybe_resplit(self) -> Optional[SP.TrafficSplit]:
+        """Re-split on sustained drift. The first qualifying sample
+        calibrates the substrate baseline (analytical seconds are not
+        wall seconds), then ``resplit_after`` consecutive drifted reports
+        re-run the split pricing and notify ``on_resplit`` (the arbiter
+        re-arbitration hook)."""
+        if self.split is None or self.split.plan is None:
+            return None
+        win = self.telemetry.throughput
+        if self._drift_baseline is None:
+            if (win.value is not None
+                    and win.count >= self.drift_config.min_samples
+                    and self.split.wave_latency > 0):
+                self._drift_baseline = win.value / self.split.wave_latency
+            return None
+        rep = SP.drift_report(self.split, win, self.drift_config,
+                              baseline=self._drift_baseline)
+        if rep is None or not rep.drifted:
+            self._drift_streak = 0
+            return None
+        self._drift_streak += 1
+        if self._drift_streak < self.resplit_after:
+            return None
+        self._drift_streak = 0
+        if self.cluster is None:
+            return None
+        new = SP.plan_traffic_split(
+            self.cluster, self.cfg,
+            requests=max(self.split.decode_slots_total, 1),
+            cache_len=self.split.cache_len, page_size=self.page_size)
+        self.split = new
+        self.resplits += 1
+        self._drift_baseline = None     # recalibrate against the new plan
+        win.reset()
+        if self.on_resplit is not None:
+            self.on_resplit(new)
+        return new
+
+    # -------------------------------------------------------- reporting --
+    def describe(self) -> Dict[str, Any]:
+        out = {
+            "queued": len(self.queued),
+            "prefilling": len(self.prefilling),
+            "decoding": len(self.decoding),
+            "done": len(self.done),
+            "decode_slots": self.decode_slots,
+            "pages": {"free": self.kv.free_pages,
+                      "used": self.kv.used_pages,
+                      "peak": self.kv.peak_in_use,
+                      "page_size": self.page_size},
+            "steps": self.steps,
+            "preemptions": self.preemptions,
+            "resplits": self.resplits,
+            "telemetry": self.telemetry.snapshot(),
+        }
+        if self.split is not None:
+            out["split"] = {
+                "strategy": self.split.strategy,
+                "decode_share": dict(self.split.decode_share),
+                "prefill_share": dict(self.split.prefill_share),
+                "wave_latency": self.split.wave_latency,
+            }
+        return out
+
+    def log_line(self) -> str:
+        d = self.describe()
+        total = d["pages"]["used"] + d["pages"]["free"]
+        line = (f"[engine] {self.telemetry.describe()} · "
+                f"q{d['queued']}/p{d['prefilling']}/d{d['decoding']} · "
+                f"pages {d['pages']['used']}/{total}")
+        if self.split is not None:
+            line += f" · {self.split.describe()}"
+        return line

@@ -1,0 +1,152 @@
+"""Paged KV cache — fixed-size pages, per-request page tables.
+
+The serving engine's memory substrate: instead of one contiguous
+``(B, max_len, Hkv, D)`` cache sized to the longest request, K/V live in
+a shared pool of ``num_pages`` fixed-size pages and each request holds
+an ordered list of page indices (its *page table*). Requests of wildly
+different lengths then pack into one decode batch with zero cache copy
+and zero padding-to-max-length; a finished request returns its pages to
+the free list immediately, which is what makes per-decode-step
+admission/eviction (continuous batching) possible at all.
+
+Two halves, deliberately separated:
+
+- :class:`PagedKVCache` — the *host-side allocator*: pure bookkeeping
+  (free list, per-request tables, lengths), no arrays. Every mutation
+  maintains the no-leak invariant ``free + allocated == num_pages - 1``
+  (page 0 is the reserved *null page*: padded batch-bucket slots point
+  their tables at it so scatter writes for dead rows land harmlessly;
+  it is never handed to a request).
+- the *device pools* — ``init_pools`` builds the model-shaped pytree of
+  K/V pools (one ``(n_rep, num_pages, page_size, Hkv, D)`` pair per
+  attention position of the pattern unit, GQA-native at ``n_kv_heads``),
+  owned and threaded functionally by ``serve.runtime``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+class PagedCacheOOM(Exception):
+    """Raised when an allocation cannot be served from the free list."""
+
+
+@dataclass
+class PagedKVCache:
+    """Host-side page allocator. Page 0 is reserved (the null page)."""
+    num_pages: int
+    page_size: int
+    free: List[int] = field(init=False)
+    tables: Dict[int, List[int]] = field(init=False)   # rid -> page ids
+    lengths: Dict[int, int] = field(init=False)        # rid -> tokens held
+    peak_in_use: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        if self.num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        # LIFO free list: recently-freed pages are re-used first (warm)
+        self.free = list(range(self.num_pages - 1, 0, -1))
+        self.tables = {}
+        self.lengths = {}
+
+    # ---------------------------------------------------------- queries --
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(t) for t in self.tables.values())
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self.free)
+
+    def length(self, rid: int) -> int:
+        return self.lengths[rid]
+
+    def table(self, rid: int) -> Tuple[int, ...]:
+        return tuple(self.tables[rid])
+
+    # -------------------------------------------------------- lifecycle --
+    def alloc(self, rid: int) -> None:
+        """Register an empty request (no pages yet; ``reserve`` grows it)."""
+        if rid in self.tables:
+            raise ValueError(f"request {rid} already allocated")
+        self.tables[rid] = []
+        self.lengths[rid] = 0
+
+    def reserve(self, rid: int, n_tokens: int) -> None:
+        """Ensure capacity for ``length + n_tokens`` more tokens,
+        growing the request's page table from the free list. Raises
+        :class:`PagedCacheOOM` (state unchanged) when the pool is out —
+        the engine's signal to stop admitting."""
+        t = self.tables[rid]
+        need = self.pages_for(self.lengths[rid] + n_tokens) - len(t)
+        if need <= 0:
+            return
+        if need > len(self.free):
+            raise PagedCacheOOM(
+                f"request {rid}: need {need} pages, {len(self.free)} free")
+        for _ in range(need):
+            t.append(self.free.pop())
+        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+
+    def advance(self, rid: int, n_tokens: int = 1) -> None:
+        """Commit ``n_tokens`` written tokens. Capacity must have been
+        reserved — advancing past the table is a bug, not an OOM."""
+        new_len = self.lengths[rid] + n_tokens
+        if new_len > len(self.tables[rid]) * self.page_size:
+            raise ValueError(
+                f"request {rid}: advance to {new_len} tokens exceeds "
+                f"{len(self.tables[rid])} reserved pages")
+        self.lengths[rid] = new_len
+
+    def release(self, rid: int) -> int:
+        """Free all of a finished request's pages; returns how many."""
+        pages = self.tables.pop(rid)
+        del self.lengths[rid]
+        self.free.extend(reversed(pages))
+        return len(pages)
+
+    # ------------------------------------------------- batch assembly ----
+    def gather(self, rids: List[int], batch: int, max_pages: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(page_table, lengths) arrays for one bucketed decode batch:
+        shape ``(batch, max_pages)`` / ``(batch,)`` with rows past
+        ``len(rids)`` padded to the null page / length 0 (the kernel
+        returns zeros for them and their scatter writes hit page 0)."""
+        if len(rids) > batch:
+            raise ValueError(f"{len(rids)} requests > batch bucket {batch}")
+        pt = np.zeros((batch, max_pages), np.int32)
+        ln = np.zeros((batch,), np.int32)
+        for i, rid in enumerate(rids):
+            t = self.tables[rid]
+            if len(t) > max_pages:
+                raise ValueError(
+                    f"request {rid}: {len(t)} pages > bucket {max_pages}")
+            pt[i, :len(t)] = t
+            ln[i] = self.lengths[rid]
+        return pt, ln
+
+    # ------------------------------------------------------ invariants ---
+    def check(self) -> None:
+        """No-leak/no-alias invariants (tests call this after every op):
+        free + allocated covers pages 1..num_pages-1 exactly once, page 0
+        is never allocated, and every length fits its table."""
+        allocated = [p for t in self.tables.values() for p in t]
+        assert 0 not in allocated, "null page leaked into a request"
+        assert 0 not in self.free, "null page leaked into the free list"
+        seen = sorted(allocated + self.free)
+        assert seen == list(range(1, self.num_pages)), (
+            f"page leak/alias: {len(allocated)} allocated + "
+            f"{len(self.free)} free != {self.num_pages - 1}")
+        for rid, t in self.tables.items():
+            assert self.lengths[rid] <= len(t) * self.page_size

@@ -1,0 +1,341 @@
+"""Paged model runtime: decode + chunked prefill over paged KV pools.
+
+The device-side half of the paged cache. ``models.decode_step`` scans the
+pattern unit over per-position contiguous caches ``(n_rep, B, S, Hkv, D)``;
+this module keeps the exact same scan structure but swaps the cache leaves
+for shared page pools ``(n_rep, num_pages, page_size, Hkv, D)`` indexed
+through per-request page tables. Three consequences:
+
+- decode batches are ragged for free: each request's K/V live wherever its
+  pages are, attention gathers them through the table (Pallas kernel
+  ``kernels.flash_decode_paged`` or a jnp gather+grouped-einsum reference);
+- the new token's K/V is a *scatter* — ``pool.at[page, slot].set(...)`` at
+  ``page = table[length // page_size]``, ``slot = length % page_size`` —
+  instead of a ``dynamic_update_slice`` into a per-request buffer;
+- prefill runs in fixed-size chunks (one request at a time, B=1) that
+  write then attend causally, so a long prompt never forces a
+  max-length-shaped compile and can be interleaved with decode steps.
+
+All jitted entry points go through a module-level cache keyed on the
+config fingerprint and static shapes, so fresh ``PagedRuntime`` instances
+(and fresh Engines) reuse compiles, and ``trace_counts()`` exposes how
+many distinct shapes actually traced — the engine's bucketing test pins
+this against the number of buckets.
+
+Only attention-cache block kinds (dense attn / MoE-attn) are paged;
+SSM/shared-attn/enc-dec configs raise ``NotImplementedError`` up front.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BLOCK_ATTN, BLOCK_MOE, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.model import lm_logits, pattern_unit
+
+_PAGED_KINDS = (BLOCK_ATTN, BLOCK_MOE)
+
+# trace-time counters: the body of a jitted function runs once per compile,
+# so bumping here counts compiles. Tests pin boundedness under bucketing.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+_JIT_CACHE: Dict[Tuple, Any] = {}
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1) — the shape-bucketing rule."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    unit, _ = pattern_unit(cfg)
+    bad = [k for k in unit if k not in _PAGED_KINDS]
+    if bad:
+        raise NotImplementedError(
+            f"paged serving supports attention-cache blocks only; "
+            f"{cfg.name} has {bad}")
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "paged serving does not implement sliding-window eviction yet")
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged serving is decoder-only")
+
+
+def _kv_dtype(cfg: ModelConfig):
+    return jnp.dtype(getattr(cfg, "kv_cache_dtype", None) or cfg.dtype)
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """K+V bytes one token occupies across every attention layer — the
+    unit the hetero split uses to turn a device's memory budget into a
+    page count."""
+    unit, n_rep = pattern_unit(cfg)
+    n_attn = sum(1 for k in unit if k in _PAGED_KINDS) * n_rep
+    return (2 * cfg.n_kv_heads * cfg.resolved_head_dim
+            * _kv_dtype(cfg).itemsize * n_attn)
+
+
+def init_pools(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict:
+    """Page pools shaped like ``init_decode_state``'s cache tree: one
+    ``{"k","v"}`` pair per attention position of the pattern unit, each
+    ``(n_rep, num_pages, page_size, Hkv, D)`` so the decode scan slices
+    repeats exactly like the contiguous path. Page index 0 is the null
+    page (never allocated to a request)."""
+    check_paged_support(cfg)
+    unit, n_rep = pattern_unit(cfg)
+    dtype = _kv_dtype(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_rep, num_pages, page_size, hkv, hd)
+    return {f"pos{p}": {"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)}
+            for p, kind in enumerate(unit) if kind in _PAGED_KINDS}
+
+
+# ---------------------------------------------------------------------------
+# decode: one token for a bucketed batch of ragged requests
+# ---------------------------------------------------------------------------
+
+def _paged_attn_decode(ap, h, pool, page_table, lengths, cfg, impl):
+    """h: (B,1,d); pool: {"k","v"} (num_pages, page_size, Hkv, D).
+    Writes the new token at (table[len // ps], len % ps), then attends
+    over ``lengths + 1`` tokens. Padded batch slots (length 0, table all
+    null-page) scatter into page 0 and read garbage — their logits are
+    discarded by the engine."""
+    B = h.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", h, ap["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, ap["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, ap["wv"].astype(h.dtype))
+    pos = lengths[:, None]                                   # (B,1) per-row
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    page_size = pool["k"].shape[1]
+    max_pages = page_table.shape[1]
+    page = page_table[jnp.arange(B),
+                      jnp.clip(lengths // page_size, 0, max_pages - 1)]
+    slot = lengths % page_size
+    kd = _kv_dtype(cfg)
+    k_new = pool["k"].at[page, slot].set(k[:, :, 0, :].astype(kd))
+    v_new = pool["v"].at[page, slot].set(v[:, :, 0, :].astype(kd))
+    filled = lengths + 1
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_decode_paged(q, k_new.astype(h.dtype),
+                                      v_new.astype(h.dtype),
+                                      page_table, filled)
+    else:
+        S_tot = max_pages * page_size
+        keys = k_new[page_table].reshape(B, S_tot, hkv, hd).astype(h.dtype)
+        vals = v_new[page_table].reshape(B, S_tot, hkv, hd).astype(h.dtype)
+        qg = q.reshape(B, hkv, hq // hkv, 1, hd)
+        s = jnp.einsum("bhgqd,bshd->bhgqs", qg, keys,
+                       preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+        valid = jnp.arange(S_tot)[None, :] < filled[:, None]     # (B,S_tot)
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(h.dtype),
+                         vals).reshape(B, hq, 1, hd)
+    y = jnp.einsum("bhsk,hkd->bsd", out, ap["wo"].astype(h.dtype))
+    return y, {"k": k_new, "v": v_new}
+
+
+def _paged_decode(params, pools, tokens, page_table, lengths, *,
+                  cfg: ModelConfig, impl: str):
+    """tokens (B,1) int32 → (logits (B,1,V), new pools)."""
+    TRACE_COUNTS["decode"] += 1
+    unit, _ = pattern_unit(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def unit_body(x, xs):
+        stack_slice, pool_slice = xs
+        new_pools = {}
+        for p, kind in enumerate(unit):
+            bp = stack_slice[f"pos{p}"]
+            h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            y, new_pool = _paged_attn_decode(bp["attn"], h,
+                                             pool_slice[f"pos{p}"],
+                                             page_table, lengths, cfg, impl)
+            x = x + y
+            h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+            if kind == BLOCK_MOE:
+                y, _ = M.moe_apply(bp["moe"], h, cfg)
+                x = x + y
+            else:
+                x = x + L.mlp_apply(bp["mlp"], h)
+            new_pools[f"pos{p}"] = new_pool
+        return x, new_pools
+
+    x, new_pools = jax.lax.scan(unit_body, x, (params["stack"], pools))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), new_pools
+
+
+# ---------------------------------------------------------------------------
+# prefill: one chunk of one request's prompt (write K/V, attend causally)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_prefill(ap, h, pool, page_table, offset, n_valid, cfg):
+    """h: (1,T,d). Writes the chunk's K/V into the request's pages at
+    absolute positions ``offset + t``, then attends each chunk token over
+    the full gathered cache with a causal mask. Tokens past ``n_valid``
+    (bucket padding of the final chunk) are redirected to the null page
+    and their outputs are garbage the caller never reads."""
+    T = h.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", h, ap["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, ap["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, ap["wv"].astype(h.dtype))
+    t_idx = jnp.arange(T)
+    abs_pos = offset + t_idx                                 # (T,)
+    q = L.apply_rope(q, abs_pos, cfg.rope_theta)
+    k = L.apply_rope(k, abs_pos, cfg.rope_theta)
+
+    page_size = pool["k"].shape[1]
+    max_pages = page_table.shape[1]
+    pages = page_table[0, jnp.clip(abs_pos // page_size, 0, max_pages - 1)]
+    pages = jnp.where(t_idx < n_valid, pages, 0)             # pad → null page
+    slots = abs_pos % page_size
+    kd = _kv_dtype(cfg)
+    k_new = pool["k"].at[pages, slots].set(k[0].swapaxes(0, 1).astype(kd))
+    v_new = pool["v"].at[pages, slots].set(v[0].swapaxes(0, 1).astype(kd))
+
+    S_tot = max_pages * page_size
+    keys = k_new[page_table[0]].reshape(1, S_tot, hkv, hd).astype(h.dtype)
+    vals = v_new[page_table[0]].reshape(1, S_tot, hkv, hd).astype(h.dtype)
+    qg = q.reshape(1, hkv, hq // hkv, T, hd)
+    s = jnp.einsum("bhgqd,bshd->bhgqs", qg, keys,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    causal = jnp.arange(S_tot)[None, :] <= abs_pos[:, None]  # (T,S_tot)
+    s = jnp.where(causal[None, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(h.dtype),
+                     vals).reshape(1, hq, T, hd)
+    y = jnp.einsum("bhsk,hkd->bsd", out, ap["wo"].astype(h.dtype))
+    return y, {"k": k_new, "v": v_new}
+
+
+def _paged_prefill(params, pools, tokens, page_table, offset, n_valid, *,
+                   cfg: ModelConfig):
+    """tokens (1,T) int32, one chunk of one request. Returns
+    (last-valid-token logits (1,1,V), new pools)."""
+    TRACE_COUNTS["prefill"] += 1
+    unit, _ = pattern_unit(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def unit_body(x, xs):
+        stack_slice, pool_slice = xs
+        new_pools = {}
+        for p, kind in enumerate(unit):
+            bp = stack_slice[f"pos{p}"]
+            h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            y, new_pool = _paged_attn_prefill(bp["attn"], h,
+                                              pool_slice[f"pos{p}"],
+                                              page_table, offset, n_valid,
+                                              cfg)
+            x = x + y
+            h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+            if kind == BLOCK_MOE:
+                y, _ = M.moe_apply(bp["moe"], h, cfg)
+                x = x + y
+            else:
+                x = x + L.mlp_apply(bp["mlp"], h)
+            new_pools[f"pos{p}"] = new_pool
+        return x, new_pools
+
+    x, new_pools = jax.lax.scan(unit_body, x, (params["stack"], pools))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    return lm_logits(params, cfg, last), new_pools
+
+
+# ---------------------------------------------------------------------------
+# jit cache (module-level: fresh runtimes/engines reuse compiles)
+# ---------------------------------------------------------------------------
+
+def _cfg_key(cfg: ModelConfig) -> Tuple:
+    return (cfg.name, cfg.n_layers, cfg.d_model, cfg.n_heads,
+            cfg.n_kv_heads, cfg.resolved_head_dim, cfg.vocab_size,
+            str(cfg.dtype), str(getattr(cfg, "kv_cache_dtype", None)),
+            float(cfg.rope_theta), float(cfg.norm_eps))
+
+
+def _decode_fn(cfg: ModelConfig, impl: str):
+    key = ("decode", _cfg_key(cfg), impl)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(_paged_decode, cfg=cfg, impl=impl))
+    return _JIT_CACHE[key]
+
+
+def _prefill_fn(cfg: ModelConfig):
+    key = ("prefill", _cfg_key(cfg))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(_paged_prefill, cfg=cfg))
+    return _JIT_CACHE[key]
+
+
+def trace_counts() -> Dict[str, int]:
+    """Compiles observed so far per entry point (trace-time counters)."""
+    return dict(TRACE_COUNTS)
+
+
+# ---------------------------------------------------------------------------
+# runtime object
+# ---------------------------------------------------------------------------
+
+class PagedRuntime:
+    """Owns the device pools and threads them functionally through the
+    jitted paged decode / prefill steps. Host-side page accounting lives
+    in ``PagedKVCache`` (the engine owns that); this class only trusts
+    the page tables it is handed."""
+
+    def __init__(self, params, cfg: ModelConfig, *, num_pages: int,
+                 page_size: int, impl: str = "reference", mesh=None):
+        check_paged_support(cfg)
+        self.params = params
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.impl = impl
+        self.mesh = mesh
+        self.pools = init_pools(cfg, num_pages, page_size)
+
+    def _ctx(self):
+        if self.mesh is not None:
+            return self.mesh
+        import contextlib
+        return contextlib.nullcontext()
+
+    def decode(self, tokens, page_table, lengths):
+        """tokens (B,1), page_table (B,P), lengths (B,) → logits (B,1,V).
+        Each request's new token is written at position ``lengths[b]``;
+        callers advance their length bookkeeping by 1 afterwards."""
+        fn = _decode_fn(self.cfg, self.impl)
+        with self._ctx():
+            logits, self.pools = fn(self.params, self.pools,
+                                    jnp.asarray(tokens, jnp.int32),
+                                    jnp.asarray(page_table, jnp.int32),
+                                    jnp.asarray(lengths, jnp.int32))
+        return logits
+
+    def prefill_chunk(self, tokens, page_table, offset: int, n_valid: int):
+        """tokens (1,T) one bucket-padded chunk of one request's prompt;
+        ``offset`` tokens already written, ``n_valid`` real tokens in this
+        chunk. Returns last-valid-token logits (1,1,V)."""
+        fn = _prefill_fn(self.cfg)
+        with self._ctx():
+            logits, self.pools = fn(self.params, self.pools,
+                                    jnp.asarray(tokens, jnp.int32),
+                                    jnp.asarray(page_table, jnp.int32),
+                                    jnp.asarray(offset, jnp.int32),
+                                    jnp.asarray(n_valid, jnp.int32))
+        return logits

@@ -1,0 +1,182 @@
+"""Hetero-aware traffic splitting — Poplar's Algorithm 1 economics
+applied to the two serving phases.
+
+Training has one currency (samples/sec); serving has two, and they price
+differently per device class:
+
+- **decode** is HBM-bandwidth-bound (each step re-reads the parameters
+  plus every live request's KV pages), so decode capacity follows
+  ``core/profiler.decode_profiles``'s analytical model through
+  ``core/planner.plan_serve`` — the finish-together wave allocator sizes
+  each class's decode slots;
+- **prefill** is compute-bound (a full forward over the prompt), so
+  prefill capacity follows ``peak_tflops · mfu / (2 · active_params)``
+  tokens/sec — the same arithmetic-intensity split vLLM-class engines
+  exploit when they separate prefill and decode scheduling.
+
+On a skewed cluster the two rankings disagree (a V100 beats a T4 by ~4x
+on HBM but ~2x on compute), so the resulting shares are *not* uniform
+and not even proportional to each other — that divergence is what the
+engine's router consumes and what the tests pin against
+:func:`uniform_split`.
+
+The split is a plan, and plans drift: :func:`drift_report` compares the
+engine's observed decode-step EMA against the plan's wave latency
+through the PR-5 ``detect_drift`` machinery (baseline-calibrated, so
+"CPU container is not the analytical simulator" doesn't read as drift);
+the Engine re-splits on sustained drift and, under an arbiter lease,
+asks for re-arbitration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.planner import ServePlan, plan_serve
+from repro.core.telemetry import DriftConfig, DriftReport, EMAWindow, detect_drift
+from repro.serve.runtime import kv_bytes_per_token
+
+
+def prefill_tokens_per_sec(dev, cfg) -> float:
+    """Compute-bound prefill rate of one device: FLOPs budget over the
+    ~2·params FLOPs each prompt token costs in the forward pass."""
+    return dev.peak_tflops * 1e12 * dev.mfu / max(2.0 * cfg.active_params, 1.0)
+
+
+@dataclass
+class ClassLane:
+    """One device class's serving capacity under the current split."""
+    kind: str
+    count: int
+    decode_slots: int        # concurrent decode requests the class is sized for
+    decode_tps: float        # aggregate decode tokens/sec at those slots
+    prefill_tps: float       # aggregate compute-bound prefill tokens/sec
+    num_pages: int           # KV page budget from the class's memory
+
+
+@dataclass
+class TrafficSplit:
+    """Per-device-class shares of the two serving phases."""
+    lanes: Dict[str, ClassLane]
+    decode_share: Dict[str, float]   # fraction of decode slots per class
+    prefill_share: Dict[str, float]  # fraction of prefill tokens per class
+    plan: Optional[ServePlan]        # underlying Poplar serve plan (None = uniform)
+    cache_len: int
+    page_size: int
+    strategy: str = "hetero"
+
+    @property
+    def decode_slots_total(self) -> int:
+        return sum(l.decode_slots for l in self.lanes.values())
+
+    @property
+    def num_pages_total(self) -> int:
+        return sum(l.num_pages for l in self.lanes.values())
+
+    @property
+    def wave_latency(self) -> float:
+        return self.plan.wave_latency if self.plan is not None else 0.0
+
+    def describe(self) -> str:
+        parts = []
+        for kind in sorted(self.lanes):
+            l = self.lanes[kind]
+            parts.append(
+                f"{kind}x{l.count}: decode {self.decode_share[kind]:.0%}"
+                f"/{l.decode_slots} slots, prefill "
+                f"{self.prefill_share[kind]:.0%}")
+        return f"split[{self.strategy}] " + " · ".join(parts)
+
+
+def _lane_pages(dev, cfg, page_size: int, count: int,
+                mem_fraction: float) -> int:
+    """Page budget: the class's pooled memory headroom after parameters,
+    in units of one page's K+V bytes (floored at one page per device)."""
+    per_dev = dev.mem_gb * 1e9 * mem_fraction - cfg.active_params * 2
+    page_bytes = kv_bytes_per_token(cfg) * page_size
+    return max(int(per_dev // max(page_bytes, 1)), 1) * count
+
+
+def plan_traffic_split(cluster, cfg, *, requests: int, cache_len: int,
+                       page_size: int = 16, mem_fraction: float = 0.6,
+                       profile_cache: Optional[Dict] = None) -> TrafficSplit:
+    """Price both phases per device class and derive the shares.
+
+    ``requests`` sizes the decode wave the Poplar allocator splits
+    (finish-together over the per-class HBM-bound curves); prefill shares
+    come straight from the compute rates. Identical devices collapse into
+    one lane."""
+    plan = plan_serve(cluster, cfg, requests, cache_len,
+                      profile_cache=profile_cache)
+    by_kind: Dict[str, Dict] = {}
+    counts: Dict[str, int] = {}
+    for dev in cluster.devices:
+        counts[dev.name] = counts.get(dev.name, 0) + 1
+        inst = f"{dev.name}#{counts[dev.name]}"
+        lane = by_kind.setdefault(dev.name, {"dev": dev, "count": 0,
+                                             "slots": 0})
+        lane["count"] += 1
+        a = plan.allocation.assignments.get(inst)
+        lane["slots"] += a.gmbs if a is not None else 0
+
+    lanes: Dict[str, ClassLane] = {}
+    for kind, agg in by_kind.items():
+        dev, count, slots = agg["dev"], agg["count"], agg["slots"]
+        decode_tps = (slots / plan.wave_latency
+                      if plan.wave_latency > 0 else 0.0)
+        lanes[kind] = ClassLane(
+            kind=kind, count=count, decode_slots=slots,
+            decode_tps=decode_tps,
+            prefill_tps=prefill_tokens_per_sec(dev, cfg) * count,
+            num_pages=_lane_pages(dev, cfg, page_size, count, mem_fraction))
+
+    tot_slots = max(sum(l.decode_slots for l in lanes.values()), 1)
+    tot_pf = max(sum(l.prefill_tps for l in lanes.values()), 1e-12)
+    return TrafficSplit(
+        lanes=lanes,
+        decode_share={k: l.decode_slots / tot_slots for k, l in lanes.items()},
+        prefill_share={k: l.prefill_tps / tot_pf for k, l in lanes.items()},
+        plan=plan, cache_len=cache_len, page_size=page_size,
+        strategy="hetero")
+
+
+def uniform_split(cluster, cfg, *, requests: int, cache_len: int,
+                  page_size: int = 16,
+                  mem_fraction: float = 0.6) -> TrafficSplit:
+    """Heterogeneity-blind baseline: every device gets the same share of
+    both phases regardless of its specs — what a homogeneous-cluster
+    engine would do, and what the skewed-cluster tests beat."""
+    by_kind: Dict[str, Dict] = {}
+    for dev in cluster.devices:
+        lane = by_kind.setdefault(dev.name, {"dev": dev, "count": 0})
+        lane["count"] += 1
+    n = max(cluster.n, 1)
+    lanes: Dict[str, ClassLane] = {}
+    for kind, agg in by_kind.items():
+        dev, count = agg["dev"], agg["count"]
+        slots = max(round(requests * count / n), 1)
+        lanes[kind] = ClassLane(
+            kind=kind, count=count, decode_slots=slots,
+            decode_tps=0.0,
+            prefill_tps=prefill_tokens_per_sec(dev, cfg) * count,
+            num_pages=_lane_pages(dev, cfg, page_size, count, mem_fraction))
+    return TrafficSplit(
+        lanes=lanes,
+        decode_share={k: l.count / n for k, l in lanes.items()},
+        prefill_share={k: l.count / n for k, l in lanes.items()},
+        plan=None, cache_len=cache_len, page_size=page_size,
+        strategy="uniform")
+
+
+def drift_report(split: TrafficSplit, window: EMAWindow,
+                 config: DriftConfig = DriftConfig(),
+                 baseline: float = 1.0) -> Optional[DriftReport]:
+    """Judge the engine's observed decode-step EMA against the split's
+    predicted wave latency. Same contract as ``Session.drift``: None
+    until there is a prediction and enough samples; ``baseline`` is the
+    observed/predicted ratio calibrated right after the split was made
+    (analytical seconds are not container seconds)."""
+    if split.plan is None:
+        return None
+    return detect_drift(window, split.plan.wave_latency, config,
+                        baseline=baseline)

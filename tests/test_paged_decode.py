@@ -1,0 +1,190 @@
+"""Paged KV cache substrate: kernel bit-parity vs the contiguous
+flash-decode path, and the host-side allocator's no-leak invariants.
+
+The parity contract is exact: at ``page_size == block_k`` the paged
+kernel visits the same KV tiles at the same boundaries in the same
+order, so its online-softmax accumulation is *bit-identical* to the
+contiguous kernel on an equivalent fill — asserted with array_equal,
+not allclose.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode_paged import flash_decode_paged_pallas
+from repro.serve.paged_cache import PagedCacheOOM, PagedKVCache
+
+PAGE = 8
+
+
+def _pool(rng, num_pages, hkv, d):
+    k = rng.standard_normal((num_pages, PAGE, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((num_pages, PAGE, hkv, d)).astype(np.float32)
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+def _paged_case(rng, lengths, hq, hkv, d, max_pages=None):
+    """Build a ragged paged batch with shuffled (non-contiguous) page
+    assignments plus the per-request contiguous equivalents."""
+    B = len(lengths)
+    need = [-(-l // PAGE) if l else 0 for l in lengths]
+    if max_pages is None:
+        max_pages = max(max(need), 1)
+    pool_pages = 1 + sum(need) + 3          # null page + slack
+    k_pages, v_pages = _pool(rng, pool_pages, hkv, d)
+    ids = list(rng.permutation(np.arange(1, pool_pages)))
+    pt = np.zeros((B, max_pages), np.int32)
+    for b, n in enumerate(need):
+        for i in range(n):
+            pt[b, i] = ids.pop()
+    q = jnp.asarray(
+        rng.standard_normal((B, hq, 1, d)).astype(np.float32))
+    ln = np.asarray(lengths, np.int32)
+    return q, k_pages, v_pages, jnp.asarray(pt), jnp.asarray(ln)
+
+
+def _contiguous_row(q, k_pages, v_pages, pt_row, length):
+    """Oracle: gather request b's pages into a contiguous (1,S,Hkv,D)
+    cache and run the contiguous kernel at block_k == page size."""
+    n = -(-int(length) // PAGE)
+    k = k_pages[np.asarray(pt_row[:n])].reshape(1, n * PAGE, *k_pages.shape[2:])
+    v = v_pages[np.asarray(pt_row[:n])].reshape(1, n * PAGE, *v_pages.shape[2:])
+    return flash_decode_pallas(q, k, v, jnp.int32(length), block_k=PAGE,
+                               interpret=True)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (8, 1)])
+def test_paged_bitwise_matches_contiguous(hq, hkv):
+    """GQA / MHA / MQA, ragged lengths straddling every page-boundary
+    case: mid-page, exactly-full page, one-past-boundary, multi-page."""
+    rng = np.random.default_rng(0)
+    lengths = [3, PAGE, PAGE + 1, 3 * PAGE - 2]
+    q, kp, vp, pt, ln = _paged_case(rng, lengths, hq, hkv, 16)
+    out = flash_decode_paged_pallas(q, kp, vp, pt, ln, interpret=True)
+    assert out.shape == (len(lengths), hq, 1, 16)
+    for b, l in enumerate(lengths):
+        ref = _contiguous_row(q[b:b + 1], kp, vp, pt[b], l)
+        assert np.array_equal(np.asarray(out[b:b + 1]), np.asarray(ref)), \
+            f"row {b} (len {l}) diverged from contiguous"
+
+
+def test_paged_zero_length_rows_return_zeros():
+    """Padded batch-bucket slots (length 0, table all null page) must
+    come back as exact zeros without touching the pool."""
+    rng = np.random.default_rng(1)
+    q, kp, vp, pt, ln = _paged_case(rng, [PAGE + 3, 5], 4, 2, 16,
+                                    max_pages=4)
+    pt = jnp.asarray(np.vstack([np.asarray(pt),
+                                np.zeros((2, 4), np.int32)]))
+    ln = jnp.asarray(np.concatenate([np.asarray(ln), [0, 0]]))
+    q = jnp.concatenate([q, jnp.asarray(
+        rng.standard_normal((2, 4, 1, 16)).astype(np.float32))])
+    out = flash_decode_paged_pallas(q, kp, vp, pt, ln, interpret=True)
+    assert np.array_equal(np.asarray(out[2:]), np.zeros((2, 4, 1, 16)))
+    # live rows unaffected by the dead ones riding along
+    solo = flash_decode_paged_pallas(q[:2], kp, vp, pt[:2], ln[:2],
+                                     interpret=True)
+    assert np.array_equal(np.asarray(out[:2]), np.asarray(solo))
+
+
+def test_paged_table_padding_is_inert():
+    """Entries past a request's fill must not affect its output even
+    when they point at real (allocated, garbage-filled) pages."""
+    rng = np.random.default_rng(2)
+    q, kp, vp, pt, ln = _paged_case(rng, [PAGE + 2], 4, 2, 16,
+                                    max_pages=6)
+    pt2 = np.asarray(pt).copy()
+    pt2[0, 2:] = 1                      # a live page, beyond the fill
+    out1 = flash_decode_paged_pallas(q, kp, vp, pt, ln, interpret=True)
+    out2 = flash_decode_paged_pallas(q, kp, vp, jnp.asarray(pt2), ln,
+                                     interpret=True)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ------------------------------------------------------- allocator -----
+
+
+def test_cache_lifecycle_and_no_leak():
+    kv = PagedKVCache(num_pages=16, page_size=4)
+    assert kv.free_pages == 15          # page 0 reserved
+    kv.alloc(0)
+    kv.reserve(0, 10)                   # 3 pages
+    assert len(kv.table(0)) == 3 and kv.used_pages == 3
+    kv.check()
+    kv.advance(0, 10)
+    assert kv.length(0) == 10
+    kv.reserve(0, 1)                    # slot 10 fits page 3 — no growth
+    assert len(kv.table(0)) == 3
+    kv.advance(0, 1)
+    kv.reserve(0, 2)                    # crosses into page 4
+    assert len(kv.table(0)) == 4
+    kv.check()
+    with pytest.raises(ValueError):
+        kv.advance(0, 99)               # past reservation = bug, not OOM
+    assert kv.release(0) == 4
+    assert kv.free_pages == 15 and kv.used_pages == 0
+    assert kv.peak_in_use == 4
+    kv.check()
+
+
+def test_cache_oom_leaves_state_unchanged():
+    kv = PagedKVCache(num_pages=4, page_size=4)   # 3 usable pages
+    kv.alloc(0)
+    kv.reserve(0, 8)                    # 2 pages
+    kv.alloc(1)
+    before = (kv.table(0), kv.free_pages, kv.length(0))
+    with pytest.raises(PagedCacheOOM):
+        kv.reserve(1, 9)                # needs 3, only 1 free
+    assert (kv.table(0), kv.free_pages, kv.length(0)) == before
+    assert kv.table(1) == ()
+    kv.check()
+    assert not kv.can_fit(9) and kv.can_fit(4)
+
+
+def test_cache_gather_pads_to_null_page():
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    kv.alloc(5)
+    kv.reserve(5, 6)
+    kv.advance(5, 6)
+    pt, ln = kv.gather([5], batch=4, max_pages=4)
+    assert pt.shape == (4, 4) and ln.shape == (4,)
+    assert list(pt[0][:2]) == list(kv.table(5))
+    assert pt[0][2] == 0 and pt[0][3] == 0      # past-fill -> null page
+    assert (pt[1:] == 0).all() and (ln[1:] == 0).all()
+    assert ln[0] == 6
+    with pytest.raises(ValueError):
+        kv.gather([5], batch=4, max_pages=1)    # table wider than bucket
+
+
+def test_cache_random_workload_never_leaks():
+    rng = np.random.default_rng(3)
+    kv = PagedKVCache(num_pages=32, page_size=4)
+    live = {}
+    for i in range(300):
+        op = rng.integers(0, 3)
+        if op == 0 or not live:
+            rid = 1000 + i
+            kv.alloc(rid)
+            live[rid] = 0
+        elif op == 1:
+            rid = int(rng.choice(list(live)))
+            n = int(rng.integers(1, 9))
+            try:
+                kv.reserve(rid, n)
+                kv.advance(rid, n)
+                live[rid] += n
+            except PagedCacheOOM:
+                pass                     # state must survive unchanged
+        else:
+            rid = int(rng.choice(list(live)))
+            kv.release(rid)
+            del live[rid]
+        kv.check()
+        assert kv.used_pages + kv.free_pages == 31
+    for rid in list(live):
+        kv.release(rid)
+    kv.check()
+    assert kv.free_pages == 31

@@ -2,17 +2,25 @@
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.allocation import allocate_stage01
+from repro.core.allocation import allocate_stage01, fit_curve
 from repro.core.cluster import cluster_B, cluster_C
-from repro.launch.serve import profile_decode_groups, run_wave
+from repro.core.profiler import decode_profiles
+from repro.launch.serve import run_engine_wave, run_wave
 
 import jax
 import jax.numpy as jnp
 
 
+def _decode_curves(cluster, cfg, cache_len):
+    # launch/serve used to wrap this one-liner; the profiling itself is
+    # core/profiler.decode_profiles, shared with planner and arbiter
+    return {n: fit_curve(p)
+            for n, p in decode_profiles(cluster, cfg, cache_len).items()}
+
+
 def test_decode_wave_allocation_sums_and_favors_fast():
     cfg = get_config("llama-0.5b")
-    curves = profile_decode_groups(cluster_C(), cfg, cache_len=4096)
+    curves = _decode_curves(cluster_C(), cfg, cache_len=4096)
     plan = allocate_stage01(curves, 64)
     assert plan.total_batch == 64
     a800 = sum(a.gmbs for n, a in plan.assignments.items() if "A800" in n)
@@ -24,7 +32,7 @@ def test_decode_wave_allocation_sums_and_favors_fast():
 def test_decode_wave_respects_memory_limits():
     cfg = get_config("llama-1.1b")
     # tiny 16GB parts at a huge cache length -> small mbs
-    curves = profile_decode_groups(cluster_B(), cfg, cache_len=262144)
+    curves = _decode_curves(cluster_B(), cfg, cache_len=262144)
     for c in curves.values():
         assert c.mbs >= 1
     plan = allocate_stage01(curves, 8)
@@ -42,3 +50,19 @@ def test_run_wave_generates_tokens():
     gen, prefill_s, decode_s = run_wave(sess, prompts, gen_tokens=3)
     assert gen.shape == (2, 3)
     assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+def test_run_engine_wave_matches_request_count():
+    from repro.api import Session
+
+    cfg = get_config("llama-0.5b", reduced=True)
+    sess = Session.build(cfg, mode="serve", impl="reference")
+    prompts = [[5, 6, 7], [9, 10, 11, 12, 13]]
+    results, wall_s, eng = run_engine_wave(sess, prompts, [3, 2],
+                                           num_pages=64, page_size=4,
+                                           chunk=4)
+    assert sorted(results) == [0, 1]
+    assert len(results[0]) == 3 and len(results[1]) == 2
+    assert wall_s > 0
+    assert eng.kv.used_pages == 0          # everything retired and freed
+    assert eng.telemetry.requests_done == 2
