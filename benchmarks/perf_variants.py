@@ -706,6 +706,131 @@ def serving_engine_rows() -> List[str]:
         f"decode_steps={d['steps']};preemptions={d['preemptions']}")]
 
 
+_PACKED_PREFILL_SUBPROC = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from dataclasses import replace
+import numpy as np
+from repro.api import Session
+from repro.configs import get_config
+from repro.core.cluster import make_cluster
+from repro.launch.serve import run_engine_wave
+
+cfg = replace(get_config("llama-0.5b", reduced=True),
+              dtype="float32", param_dtype="float32")
+cl = make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+sess = Session.build(cfg, cl, mode="serve", impl="reference")
+
+# same skewed traffic as perf/serving/engine_vs_wave: mostly short
+# chats plus two long documents — the workload where sequential B=1
+# chunked prefill burns one model call per request per tick
+rng = np.random.default_rng(0)
+plens = [int(n) for n in rng.integers(4, 9, 8)] + [56, 48]
+gens = [int(g) for g in rng.integers(2, 5, 8)] + [40, 48]
+prompts = [rng.integers(3, cfg.vocab_size, n).tolist() for n in plens]
+useful = sum(gens)
+
+out = {"useful_tokens": useful, "requests": len(prompts)}
+res = {}
+for name, packed in (("packed", True), ("chunked", False)):
+    kw = dict(num_pages=256, page_size=8, chunk=32,
+              packed_prefill=packed, prefix_cache=False)
+    run_engine_wave(sess, prompts, gens, **kw)        # compile + warm up
+    best = None
+    for _ in range(2):
+        r, s, eng = run_engine_wave(sess, prompts, gens, **kw)
+        if best is None or s < best[0]:
+            best = (s, eng, r)
+    s, eng, r = best
+    res[name] = r
+    snap = eng.telemetry.snapshot()
+    out[name] = {"wall_s": s, "prefill_calls": snap["prefill_calls"],
+                 "prefill_tokens": snap["prefill_tokens"],
+                 "fill_frac": snap["prefill_fill_frac"],
+                 "ttft_p50_s": snap["ttft_p50_s"]}
+out["token_parity"] = res["packed"] == res["chunked"]
+
+# ---- prefix-heavy staggered drill: every request shares a 48-token
+# system prompt; arrivals are spread over ticks so later requests can
+# adopt pages earlier ones registered (bulk submits all admit on the
+# same tick, before any pages exist to share) ----
+sys_prompt = rng.integers(3, cfg.vocab_size, 48).tolist()
+tails = [rng.integers(3, cfg.vocab_size, int(t)).tolist()
+         for t in rng.integers(4, 9, 8)]
+
+def staggered(prefix_cache):
+    eng = sess.engine(num_pages=256, page_size=8, chunk=32,
+                      requests=len(tails), cache_len=128,
+                      packed_prefill=True, prefix_cache=prefix_cache)
+    for tail in tails:
+        eng.submit(sys_prompt + tail, 6)
+        eng.step(); eng.step()
+    return eng.run(), eng
+
+staggered(True); staggered(False)                      # compile + warm up
+res_on, eng_on = staggered(True)
+res_off, eng_off = staggered(False)
+snap_on = eng_on.telemetry.snapshot()
+snap_off = eng_off.telemetry.snapshot()
+out["prefix"] = {
+    "token_parity": res_on == res_off,
+    "submitted_tokens": sum(len(sys_prompt) + len(t) for t in tails),
+    "prefill_tokens_on": snap_on["prefill_tokens"],
+    "prefill_tokens_off": snap_off["prefill_tokens"],
+    "prefix_hit_tokens": snap_on["prefix_hit_tokens"],
+    "ttft_p50_on_s": snap_on["ttft_p50_s"],
+    "ttft_p50_off_s": snap_off["ttft_p50_s"]}
+print("PACKED_JSON " + json.dumps(out))
+"""
+
+
+def packed_prefill_rows() -> List[str]:
+    """Packed segment-masked prefill vs the PR-9 sequential chunked
+    baseline (same engine, ``packed_prefill=False``) on the skewed
+    8-device workload, plus a prefix-heavy staggered drill for the
+    refcounted prefix cache. Two CI gates ride in the derived blobs:
+    ``packed_prefill_beats_chunked`` (strictly fewer model calls AND
+    higher useful tok/s AND greedy-token parity) and
+    ``prefix_cache_saves_prefill`` (bit-identical tokens while
+    computing strictly fewer prefill tokens than were submitted)."""
+    d = _run_subproc_json(_PACKED_PREFILL_SUBPROC, "PACKED_JSON")
+    useful = d["useful_tokens"]
+    pk, ch = d["packed"], d["chunked"]
+    packed_tps = useful / pk["wall_s"]
+    chunked_tps = useful / ch["wall_s"]
+    beats = (pk["prefill_calls"] < ch["prefill_calls"]
+             and packed_tps > chunked_tps and d["token_parity"])
+    px = d["prefix"]
+    saves = (px["token_parity"]
+             and px["prefill_tokens_on"] < px["submitted_tokens"]
+             and px["prefill_tokens_on"] < px["prefill_tokens_off"])
+    return [
+        csv_row(
+            "perf/serving/packed_prefill/8dev_cpu", pk["wall_s"] * 1e6,
+            f"packed_tokens_per_sec={packed_tps:.1f};"
+            f"chunked_tokens_per_sec={chunked_tps:.1f};"
+            f"speedup={packed_tps / chunked_tps:.2f}x;"
+            f"prefill_calls_packed={pk['prefill_calls']};"
+            f"prefill_calls_chunked={ch['prefill_calls']};"
+            f"pack_fill_frac={pk['fill_frac']:.3f};"
+            f"token_parity={d['token_parity']};"
+            f"packed_prefill_beats_chunked={beats};"
+            f"requests={d['requests']};useful_tokens={useful};"
+            f"ttft_p50_ms={pk['ttft_p50_s'] * 1e3:.1f};"
+            f"ttft_p50_chunked_ms={ch['ttft_p50_s'] * 1e3:.1f}"),
+        csv_row(
+            "perf/serving/prefix_cache/8dev_cpu",
+            px["prefill_tokens_on"],
+            f"submitted_tokens={px['submitted_tokens']};"
+            f"prefill_tokens_on={px['prefill_tokens_on']};"
+            f"prefill_tokens_off={px['prefill_tokens_off']};"
+            f"prefix_hit_tokens={px['prefix_hit_tokens']};"
+            f"token_parity={px['token_parity']};"
+            f"prefix_cache_saves_prefill={saves};"
+            f"ttft_p50_ms={px['ttft_p50_on_s'] * 1e3:.1f};"
+            f"ttft_p50_nocache_ms={px['ttft_p50_off_s'] * 1e3:.1f}")]
+
+
 def run() -> List[str]:
     base: Dict = {}
     variants = []
@@ -788,6 +913,11 @@ def run() -> List[str]:
         rows.extend(serving_engine_rows())
     except Exception as e:  # noqa: BLE001 — live timing is best-effort
         rows.append(csv_row("perf/serving/error", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    try:
+        rows.extend(packed_prefill_rows())
+    except Exception as e:  # noqa: BLE001 — live timing is best-effort
+        rows.append(csv_row("perf/serving/packed_prefill/error", 0.0,
                             f"{type(e).__name__}: {e}"))
     return rows
 

@@ -33,7 +33,12 @@ def _parse_derived(derived: str) -> dict:
                 "utility_arbiter", "utility_even", "utility_delta",
                 "engine_tokens_per_sec", "wave_tokens_per_sec",
                 "ttft_p50_ms", "ttft_p95_ms", "tok_p50_ms", "tok_p95_ms",
-                "wave_pad_waste", "preemptions"):
+                "wave_pad_waste", "preemptions",
+                "chunked_tokens_per_sec",
+                "prefill_calls_packed", "prefill_calls_chunked",
+                "pack_fill_frac", "prefix_hit_tokens",
+                "prefill_tokens_on", "prefill_tokens_off",
+                "submitted_tokens", "ttft_p50_nocache_ms"):
         # anchor on a field boundary: the bare "ms" key must not match
         # inside "replan_ms=…" / "step_ms=…"
         m = re.search(rf"(?:^|;){key}=([-0-9.eE]+)x?(?:;|$)", derived)

@@ -1,0 +1,32 @@
+"""Power-of-two shape bucketing — the one place the rounding rules live.
+
+Dynamic-shape workloads (continuous batching, autotuned kernel tiles)
+must map an unbounded family of runtime sizes onto a small set of
+compiled shapes. Two dual rules cover every use in the repo:
+
+- :func:`next_pow2` rounds a *required* size UP to the next power of two
+  — batch sizes, page-table widths and packed-prefill token buckets pad
+  up so the jit cache stays O(log) in each axis (serve engine/runtime);
+- :func:`pow2_floor` rounds an *available* size DOWN to the previous
+  power of two — kernel block sizes shrink to what divides the problem
+  (kernels/autotune).
+
+Both used to exist as private copies (``serve/runtime.next_pow2`` and
+``kernels/autotune._pow2_floor``); the serve engine's table-width
+padding grew a third call site, so the rules moved here with boundary
+tests (``tests/test_packed_prefill.py``) pinning the edges.
+"""
+from __future__ import annotations
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n; 1 for n <= 1 (a bucket is never
+    empty — padding a zero-sized axis still compiles a real shape)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"pow2_floor needs n >= 1, got {n}")
+    return 1 << (int(n).bit_length() - 1)

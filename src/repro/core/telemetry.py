@@ -291,6 +291,14 @@ class ServeTelemetry:
     count). ``throughput`` smooths generated tokens per wall-second over
     decode steps — comparable to ``ServePlan.requests_per_sec *
     gen_tokens`` when judging plan drift.
+
+    Prefill efficiency counters (the packed-prefill PR's scoreboard):
+    ``prefill_calls`` counts model invocations (the packed path's whole
+    point is fewer of them); ``prefill_fill_frac`` is valid tokens over
+    bucket slots across those calls — how much of each padded buffer was
+    real work; ``prefix_hit_tokens`` counts context tokens *not*
+    computed because admission adopted shared prefix pages (so
+    ``prefill_tokens`` < tokens submitted on prefix-heavy workloads).
     """
     ttft: LatencyHistogram = field(default_factory=LatencyHistogram)
     per_token: LatencyHistogram = field(default_factory=LatencyHistogram)
@@ -299,6 +307,10 @@ class ServeTelemetry:
     requests_done: int = 0
     tokens_generated: int = 0
     prefill_tokens: int = 0
+    prefill_calls: int = 0
+    prefill_pack_tokens: int = 0      # valid tokens across prefill buffers
+    prefill_pack_slots: int = 0       # bucket slots across prefill buffers
+    prefix_hit_tokens: int = 0
 
     def record_ttft(self, seconds: float) -> None:
         self.ttft.record(seconds)
@@ -313,6 +325,22 @@ class ServeTelemetry:
 
     def record_prefill(self, tokens: int) -> None:
         self.prefill_tokens += int(tokens)
+
+    def record_prefill_call(self, valid: int, bucket: int) -> None:
+        """One prefill model invocation whose buffer held ``valid`` real
+        tokens in a ``bucket``-slot padded shape."""
+        self.prefill_calls += 1
+        self.prefill_pack_tokens += int(valid)
+        self.prefill_pack_slots += int(bucket)
+
+    def record_prefix_hit(self, tokens: int) -> None:
+        self.prefix_hit_tokens += int(tokens)
+
+    @property
+    def prefill_fill_frac(self) -> Optional[float]:
+        if self.prefill_pack_slots <= 0:
+            return None
+        return self.prefill_pack_tokens / self.prefill_pack_slots
 
     def record_finished(self, n: int = 1) -> None:
         self.requests_done += n
@@ -334,6 +362,9 @@ class ServeTelemetry:
             "requests_done": self.requests_done,
             "tokens_generated": self.tokens_generated,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_calls": self.prefill_calls,
+            "prefill_fill_frac": self.prefill_fill_frac,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
             "ttft_p50_s": self.ttft.percentile(50),
             "ttft_p95_s": self.ttft.percentile(95),
             "tok_p50_s": self.per_token.percentile(50),

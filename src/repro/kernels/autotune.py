@@ -33,6 +33,8 @@ import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.bucketing import pow2_floor as _pow2_floor
+
 __all__ = ["cache_path", "key_of", "lookup", "median_ms", "record",
            "static_blocks", "tune", "clear_memory_cache", "CANDIDATES"]
 
@@ -61,13 +63,6 @@ def key_of(kind: str, *, S: int, D: int, dtype: str, causal: bool,
     """``G`` is the GQA group size (n_heads // n_kv_heads); tuned tiles
     for grouped and MHA shapes must not alias."""
     return f"{kind}|S{S}|D{D}|{dtype}|c{int(causal)}|w{window or 0}|g{G}"
-
-
-def _pow2_floor(n: int) -> int:
-    p = 1
-    while p * 2 <= n:
-        p *= 2
-    return p
 
 
 def static_blocks(*, S: int, D: int, dtype: str = "float32",

@@ -1,0 +1,179 @@
+"""Segment-masked paged prefill — one Pallas call over a packed buffer
+of several requests' prompt chunks (the serving engine's prefill path).
+
+``flash_decode_paged`` removed the B=1-per-request cost from decode;
+this kernel removes it from prefill. The engine concatenates the
+pending prompt chunks of up to ``G`` requests into one token bucket of
+length ``T`` (segment ids 1..G in contiguous runs, 0 = bucket padding)
+and hands each segment its own page table. The kernel computes, for
+every packed token, causal attention over *its own segment's* paged
+K/V — equivalent to G separate chunked-prefill calls, in one traced
+shape.
+
+Grid layout = ``(Hkv, G, max_pages)``:
+
+- ``h`` (outermost) walks KV heads; the whole ``group = Hq/Hkv`` query
+  head group rides each (page_size, D) cache tile, GQA-native;
+- ``g`` walks segments; the q block is the *full* packed buffer every
+  step — tokens outside segment ``g+1`` are masked, and the two-level
+  mask constant (below) makes their updates exact floating-point
+  no-ops, so one (group, T)-shaped scratch accumulates across the
+  whole (g, page) sweep;
+- ``i`` (innermost) walks segment ``g+1``'s pages; the K/V BlockSpec
+  ``index_map`` reads the scalar-prefetched page table
+  ``pt[g, i]`` — the page gather happens at the DMA level, exactly as
+  in the decode kernel. Pages past a segment's ``seg_maxpos`` (and all
+  pages of empty segments, ``seg_maxpos == -1``) are skipped with
+  ``pl.when``.
+
+Two-level masking: running maxima init to ``M_INIT = -1e30`` but
+masked scores are ``MASKED = -2e30``, strictly below it. A token whose
+segment is not the current ``g`` sees an all-masked page: the row max
+stays at ``m_prev``, the correction factor is ``exp(0) = 1`` and every
+probability is ``exp(-1e30) = 0`` — bitwise no change to (m, l, acc).
+With a single shared constant the classic failure appears: an untouched
+row (``m_prev == mask value``) would get ``p = exp(0) = 1`` and soak up
+garbage V before its own segment arrives.
+
+Bit-parity contract: per token this is the same online-softmax page
+sweep as ``flash_decode_paged`` over that token's causal prefix, so
+packed prefill + paged decode agree with the sequential chunked path
+(tests/test_packed_prefill.py pins greedy token parity, GQA and
+page-boundary cases included).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces + scalar-prefetch grid; absent on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+M_INIT = -1e30    # running-max init
+MASKED = -2e30    # masked score: strictly below M_INIT (see module doc)
+
+
+def _scratch(group: int, t: int, d: int):
+    if _VMEM is not None:
+        return [_VMEM((group, t), jnp.float32),
+                _VMEM((group, t), jnp.float32),
+                _VMEM((group, t, d), jnp.float32)]
+    return [jax.ShapeDtypeStruct((group, t), jnp.float32),
+            jax.ShapeDtypeStruct((group, t), jnp.float32),
+            jax.ShapeDtypeStruct((group, t, d), jnp.float32)]
+
+
+def _packed_kernel(pt_ref, mp_ref, seg_ref, pos_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *,
+                   page_size: int, scale: float, num_segs: int,
+                   max_pages: int):
+    g = pl.program_id(1)
+    pi = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(g == 0, pi == 0))
+    def _init():  # fresh scratch at the top of each head's (g, i) sweep
+        m_ref[...] = jnp.full_like(m_ref, M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = pi * page_size
+
+    @pl.when(start <= mp_ref[g])   # -1 for empty segments skips every page
+    def _page():
+        q = q_ref[...].astype(jnp.float32)                 # (group, T, D)
+        k = k_ref[...].astype(jnp.float32)                 # (page_size, D)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ()))) * scale        # (group, T, ps)
+        t_len = q.shape[1]
+        kpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (t_len, page_size), 1)
+        seg = jnp.swapaxes(seg_ref[...], 0, 1)             # (T, 1)
+        pos = jnp.swapaxes(pos_ref[...], 0, 1)
+        mask = jnp.logical_and(seg == g + 1, kpos <= pos)  # (T, page_size)
+        s = jnp.where(mask[None], s, MASKED)
+        m_prev = m_ref[...]                                # (group, T)
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        p = jnp.exp(s - m_new[:, :, None])                 # (group, T, ps)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=2)
+        acc_ref[...] = (acc_ref[...] * corr[:, :, None]
+                        + jax.lax.dot_general(
+                            p, v, (((2,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_and(g == num_segs - 1, pi == max_pages - 1))
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)   # pad rows: acc 0 → out 0
+        o_ref[...] = (acc_ref[...] / denom[:, :, None]).astype(o_ref.dtype)
+
+
+def flash_prefill_paged_pallas(q, k_pages, v_pages, page_table, seg_maxpos,
+                               seg_ids, positions, *,
+                               interpret: bool = False):
+    """q: (T, Hq, D) — the packed chunk buffer's queries, token-major;
+    k_pages/v_pages: (num_pages, page_size, Hkv, D) pool layout (the new
+    chunk's K/V already scattered in by the caller); page_table:
+    (G, max_pages) int32, null-page padded; seg_maxpos: (G,) int32 max
+    absolute position per segment (-1 for unused rows); seg_ids (T,) /
+    positions (T,) int32 per packed token. Returns (T, Hq, D).
+
+    Bucket-pad tokens (segment id 0) return zeros; the caller never
+    reads them.
+    """
+    T, Hq, D = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    if Hq % Hkv:
+        raise ValueError(
+            f"GQA head counts must divide: n_heads={Hq}, n_kv_heads={Hkv}")
+    G, max_pages = page_table.shape
+    if seg_maxpos.shape != (G,):
+        raise ValueError(
+            f"seg_maxpos {seg_maxpos.shape} does not match page_table "
+            f"rows {G}")
+    if seg_ids.shape != (T,) or positions.shape != (T,):
+        raise ValueError(
+            f"seg_ids {seg_ids.shape} / positions {positions.shape} do "
+            f"not match token count {T}")
+    group = Hq // Hkv
+    # q heads j*group .. (j+1)*group-1 share kv head j (flash_decode trick)
+    qf = jnp.swapaxes(q, 0, 1).reshape(Hkv, group, T, D)
+    scale = 1.0 / float(D) ** 0.5
+    kernel = functools.partial(_packed_kernel, page_size=page_size,
+                               scale=scale, num_segs=G, max_pages=max_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, seg_maxpos
+        grid=(Hkv, G, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda h, g, i, pt, mp: (0, 0)),
+            pl.BlockSpec((1, T), lambda h, g, i, pt, mp: (0, 0)),
+            pl.BlockSpec((None, group, T, D),
+                         lambda h, g, i, pt, mp: (h, 0, 0, 0)),
+            # the gather: this step's pool row comes from segment g's
+            # scalar-prefetched page table, h slices the KV head in place
+            pl.BlockSpec((None, page_size, None, D),
+                         lambda h, g, i, pt, mp: (pt[g, i], 0, h, 0)),
+            pl.BlockSpec((None, page_size, None, D),
+                         lambda h, g, i, pt, mp: (pt[g, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, group, T, D),
+                               lambda h, g, i, pt, mp: (h, 0, 0, 0)),
+        scratch_shapes=_scratch(group, T, D),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, group, T, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seg_maxpos.astype(jnp.int32),
+      seg_ids.reshape(1, T).astype(jnp.int32),
+      positions.reshape(1, T).astype(jnp.int32),
+      qf, k_pages, v_pages)
+    return jnp.swapaxes(out.reshape(Hq, T, D), 0, 1)

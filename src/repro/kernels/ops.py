@@ -26,6 +26,7 @@ from repro.kernels import autotune
 from repro.kernels.flash_attention import flash_attention_vjp
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.flash_decode_paged import flash_decode_paged_pallas
+from repro.kernels.flash_prefill_paged import flash_prefill_paged_pallas
 from repro.kernels.mamba_scan import mamba_scan_vjp
 from repro.kernels.rmsnorm import rmsnorm_vjp
 
@@ -120,3 +121,18 @@ def flash_decode_paged(q, k_pages, v_pages, page_table, lengths):
     return flash_decode_paged_pallas(q, k_pages, v_pages, page_table,
                                      lengths,
                                      interpret=_interpret_default())
+
+
+@jax.jit
+def flash_prefill_paged(q, k_pages, v_pages, page_table, seg_maxpos,
+                        seg_ids, positions):
+    """Packed-prefill attention over a paged KV cache: q (T,Hq,D) — the
+    concatenated prompt chunks of up to G requests (segment ids 1..G,
+    0 = padding), k/v pools (num_pages, page_size, Hkv, D) with the
+    chunk's K/V already scattered in, page_table (G, max_pages) int32,
+    seg_maxpos (G,) int32, seg_ids/positions (T,) int32. Each token
+    attends causally over its own segment's gathered pages; one call
+    replaces G chunked-prefill calls."""
+    return flash_prefill_paged_pallas(q, k_pages, v_pages, page_table,
+                                      seg_maxpos, seg_ids, positions,
+                                      interpret=_interpret_default())

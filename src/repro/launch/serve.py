@@ -7,8 +7,10 @@ The engine path (default) is the full PR-9 stack:
      (``serve/split.plan_traffic_split`` over ``core/planner.plan_serve``
      — Alg. 1 economics applied to the two serving phases);
   2. run requests through :class:`~repro.serve.engine.Engine`: paged KV
-     cache, per-tick admission/eviction, chunked prefill interleaved
-     with bucketed decode;
+     cache with refcounted prefix sharing, per-tick admission/eviction,
+     packed chunked prefill interleaved with bucketed decode
+     (``--no-packed-prefill`` / ``--no-prefix-cache`` fall back to the
+     PR-9 behaviour);
   3. report TTFT / per-token latency percentiles and tokens/sec from
      the engine's :class:`~repro.core.telemetry.ServeTelemetry`.
 
@@ -107,6 +109,14 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=512)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--no-packed-prefill", dest="packed_prefill",
+                    action="store_false", default=True,
+                    help="sequential one-chunk-per-call prefill (the "
+                         "PR-9 baseline) instead of packed segment-"
+                         "masked prefill")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable cross-request prefix-page sharing")
     ap.add_argument("--fault-plan", default=None,
                     help="comma-separated FaultSchedule specs (steps are "
                          "decode ticks), e.g. lose:8:T4-16G,step_fail:3")
@@ -163,7 +173,8 @@ def main(argv=None):
         gens = rng.integers(max(args.gen // 2, 1), args.gen + 1,
                             args.requests).tolist()
         kw = dict(num_pages=args.num_pages, page_size=args.page_size,
-                  chunk=args.chunk)
+                  chunk=args.chunk, packed_prefill=args.packed_prefill,
+                  prefix_cache=args.prefix_cache)
         if sup is not None:
             results, wall_s, eng = sup.call(
                 lambda: run_engine_wave(sup.session, prompts, gens, **kw))

@@ -2,8 +2,9 @@
 over Poplar-planned device classes.
 
 Layers (bottom-up):
-  paged_cache — host-side page allocator (page tables, free list)
-  runtime     — paged decode / chunked-prefill jitted steps + pools
+  paged_cache — host-side page allocator (page tables, free list,
+                refcounted prefix sharing)
+  runtime     — paged decode / chunked + packed prefill jitted steps
   split       — per-device-class prefill/decode traffic pricing
   engine      — request queue, admission/eviction, bucketed batching
 """

@@ -12,11 +12,20 @@ Each :meth:`step` is one scheduler tick:
   1. **admit** queued requests while their context fits the page pool
      and a decode slot is free (slots come from the hetero split's
      per-class sizing, so admission control *is* the Poplar allocation);
-  2. **prefill** up to ``prefill_budget`` prompt tokens as fixed-size
-     chunks through ``PagedRuntime.prefill_chunk`` — lanes drain in
-     prefill-share order, so compute-rich classes eat the prompt backlog
-     first; a request whose prompt completes samples its first token
-     (that's its TTFT) and joins the decode batch;
+  2. **prefill** up to ``prefill_budget`` prompt tokens. By default the
+     pending chunks of several requests *pack* into one segment-masked
+     ``PagedRuntime.prefill_packed`` call (one traced shape per token
+     bucket instead of one B=1 call per request); lanes drain in
+     prefill-share order with age-based priority (``age_priority`` per
+     bypassed tick) so packing many short prompts cannot starve a long
+     one. A request whose prompt completes samples its first token
+     (that's its TTFT) and joins the decode batch.
+     ``packed_prefill=False`` keeps the sequential one-chunk-per-call
+     path — the measured baseline in perf/serving/packed_prefill.
+     Admission additionally consults the cache's *prefix index*
+     (``prefix_cache=True``): a request whose context shares a
+     page-aligned prefix with pages already written adopts them
+     read-only (refcount + 1) and prefills only the tail;
   3. **decode** one token for every decoding request in a single
      bucketed batch (B and the page-table width both padded to powers of
      two) so the jit cache stays O(log) in both axes. A request whose
@@ -66,6 +75,7 @@ class Request:
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
     preemptions: int = 0
+    wait_ticks: int = 0               # prefill ticks spent bypassed
 
     @property
     def context(self) -> List[int]:
@@ -103,12 +113,18 @@ class Engine:
                  on_resplit: Optional[Callable[[SP.TrafficSplit], None]] = None,
                  drift_config: Optional[DriftConfig] = None,
                  resplit_after: int = 2,
-                 telemetry: Optional[ServeTelemetry] = None):
+                 telemetry: Optional[ServeTelemetry] = None,
+                 packed_prefill: bool = True,
+                 prefix_cache: bool = True,
+                 age_priority: float = 0.25):
         self.cfg = cfg
         self.num_pages = num_pages
         self.page_size = page_size
         self.chunk = chunk
         self.max_batch = max_batch
+        self.packed_prefill = packed_prefill
+        self.prefix_cache = prefix_cache
+        self.age_priority = age_priority
         # default budget: one chunk per device class per tick — enough to
         # keep prefill flowing without starving decode
         n_lanes = len(split.lanes) if split is not None else 1
@@ -136,6 +152,7 @@ class Engine:
         self.resplits = 0
         self.preemptions = 0
         self.steps = 0
+        self.ticks = 0
 
     # --------------------------------------------------------- intake ----
     @property
@@ -185,29 +202,78 @@ class Engine:
         live = len(self.prefilling) + len(self.decoding)
         while self.queued and live < self.decode_slots:
             req = self.queued[0]
-            ctx = len(req.context)
-            # the context plus one decode token must fit right now;
+            ctx = req.context
+            hit = 0
+            if self.prefix_cache:
+                # cap so >= 1 real token remains to prefill — the final
+                # context token must run through the model to produce the
+                # next-token logits (the shared page's K/V alone can't)
+                hit = self.kv.probe_prefix(ctx[:len(ctx) - 1])
+            # the context plus one decode token must fit right now
+            # (adopted prefix pages don't come from the free list);
             # otherwise wait for retirements to free pages
-            if not self.kv.can_fit(ctx + 1):
+            need = self.kv.pages_for(len(ctx) + 1) - hit // self.page_size
+            if need > self.kv.free_pages:
                 break
             self.queued.popleft()
             self.kv.alloc(req.rid)
-            self.kv.reserve(req.rid, ctx)
+            if hit:
+                adopted = self.kv.adopt_prefix(req.rid, ctx[:len(ctx) - 1])
+                req.prefill_pos = adopted
+                self.telemetry.record_prefix_hit(adopted)
+            self.kv.reserve(req.rid, len(ctx) - req.prefill_pos)
             self.prefilling.append(req)
             live += 1
 
     def _prefill_order(self) -> List[Request]:
         """Drain order for the prompt backlog: lanes sorted by prefill
-        share (compute-rich classes first), FIFO within a lane."""
-        if self.split is None:
-            return list(self.prefilling)
-        share = self.split.prefill_share
-        return sorted(self.prefilling,
-                      key=lambda r: (-share.get(r.lane, 0.0), r.rid))
+        share (compute-rich classes first), FIFO within a lane — but a
+        request bypassed for ``wait_ticks`` ticks gains ``age_priority``
+        per tick, so once packing favors a high-share lane's many short
+        chunks a low-share lane's long prompt still rises to the front
+        in bounded time (the starvation pin in
+        tests/test_packed_prefill.py)."""
+        share = (self.split.prefill_share if self.split is not None
+                 else {})
+        return sorted(
+            self.prefilling,
+            key=lambda r: (-(share.get(r.lane, 0.0)
+                             + self.age_priority * r.wait_ticks), r.rid))
+
+    def _age_prefill(self, served: List[Request]) -> None:
+        """Reset the age of requests that advanced this tick; age the
+        pending ones that lost the budget to a *different* lane.
+        Within one lane order is FIFO by rid, so a request behind its
+        own lane's siblings is queued, not starved — aging it too would
+        turn single-lane FIFO into round-robin and inflate the decode
+        batch-size buckets for nothing. Starvation is the cross-lane
+        case: a share-poor lane outranked tick after tick."""
+        served_rids = {r.rid for r in served}
+        other_lane_served = {r.lane for r in served}
+        for r in self.prefilling:
+            if r.rid in served_rids:
+                r.wait_ticks = 0
+            elif (r.prefill_pos < len(r.context)
+                  and other_lane_served - {r.lane}):
+                r.wait_ticks += 1
+
+    def _finish_prefill(self, req: Request, next_token: int) -> None:
+        req.pending_token = next_token
+        if req.first_token_t is None:
+            req.first_token_t = time.perf_counter()
+            self.telemetry.record_ttft(req.ttft)
 
     def _prefill_tick(self) -> None:
+        if self.packed_prefill:
+            self._prefill_tick_packed()
+        else:
+            self._prefill_tick_sequential()
+
+    # -- sequential baseline (PR-9 behaviour): one B=1 call per chunk ----
+    def _prefill_tick_sequential(self) -> None:
         budget = self.prefill_budget
         finished: List[Request] = []
+        served: List[Request] = []
         for req in self._prefill_order():
             ctx = req.context
             while budget > 0 and req.prefill_pos < len(ctx):
@@ -222,15 +288,124 @@ class Engine:
                 req.prefill_pos += n_valid
                 self.kv.advance(req.rid, n_valid)
                 budget -= n_valid
+                if req not in served:
+                    served.append(req)
                 self.telemetry.record_prefill(n_valid)
+                self.telemetry.record_prefill_call(n_valid, self.chunk)
+                if self.prefix_cache:
+                    self.kv.register_prefix(
+                        req.rid, req.prompt,
+                        min(req.prefill_pos, len(req.prompt)))
                 if req.prefill_pos == len(ctx):
-                    req.pending_token = int(jnp.argmax(logits[0, -1]))
-                    if req.first_token_t is None:
-                        req.first_token_t = time.perf_counter()
-                        self.telemetry.record_ttft(req.ttft)
+                    self._finish_prefill(req, int(jnp.argmax(logits[0, -1])))
                     finished.append(req)
             if budget <= 0:
                 break
+        self._age_prefill(served)
+        for req in finished:
+            self.prefilling.remove(req)
+            self.decoding.append(req)
+
+    # -- packed fast path: one segment-masked call per tick --------------
+    def _fill_prefill_budget(self) -> List[List]:
+        """Walk the backlog in priority order handing out the tick's
+        token budget: first each lane's share of it, then a second pass
+        gives any leftover to whoever still has pending tokens — the
+        budget is spent whenever there is work, regardless of lane mix.
+        Returns ``[request, n_tokens]`` picks (n_tokens > 0)."""
+        order = [r for r in self._prefill_order()
+                 if r.prefill_pos < len(r.context)]
+        if not order:
+            return []
+        remaining = self.prefill_budget
+        share = (self.split.prefill_share if self.split is not None
+                 else {})
+        lane_budget = {k: max(int(round(remaining * s)), 1)
+                       for k, s in share.items()}
+        picks: List[List] = []
+        slot = {}
+        for r in order:
+            if remaining <= 0:
+                break
+            lb = lane_budget.get(r.lane, remaining)
+            n = min(len(r.context) - r.prefill_pos, lb, remaining)
+            if n <= 0:
+                continue
+            slot[r.rid] = len(picks)
+            picks.append([r, n])
+            if r.lane in lane_budget:
+                lane_budget[r.lane] -= n
+            remaining -= n
+        for r in order:                       # leftover, ignore lane caps
+            if remaining <= 0:
+                break
+            got = picks[slot[r.rid]][1] if r.rid in slot else 0
+            n = min(len(r.context) - r.prefill_pos - got, remaining)
+            if n <= 0:
+                continue
+            if r.rid in slot:
+                picks[slot[r.rid]][1] += n
+            else:
+                slot[r.rid] = len(picks)
+                picks.append([r, n])
+            remaining -= n
+        return picks
+
+    def _prefill_tick_packed(self) -> None:
+        picks = self._fill_prefill_budget()
+        self._age_prefill([r for r, _ in picks])
+        if not picks:
+            return
+        # pack every pick's chunk into one bucket-padded buffer: token
+        # count, segment count and page-table width each round up to a
+        # power of two so the packed jit cache stays O(log^3)
+        total = sum(n for _, n in picks)
+        T = next_pow2(total)
+        G = next_pow2(len(picks))
+        P = next_pow2(max(len(self.kv.tables[r.rid]) for r, _ in picks))
+        tokens = np.zeros((1, T), np.int32)
+        seg = np.zeros(T, np.int32)
+        pos = np.zeros(T, np.int32)
+        pages = np.zeros(T, np.int32)         # pads scatter to null page 0
+        slots = np.zeros(T, np.int32)
+        pt = np.zeros((G, P), np.int32)
+        maxpos = np.full(G, -1, np.int32)     # -1: kernel skips the row
+        last_idx = np.zeros(G, np.int32)
+        off = 0
+        for gi, (req, n) in enumerate(picks):
+            ctx = req.context
+            table = self.kv.tables[req.rid]
+            tokens[0, off:off + n] = ctx[req.prefill_pos:req.prefill_pos + n]
+            seg[off:off + n] = gi + 1
+            abspos = np.arange(req.prefill_pos, req.prefill_pos + n)
+            pos[off:off + n] = abspos
+            pages[off:off + n] = [table[p] for p in abspos // self.page_size]
+            slots[off:off + n] = abspos % self.page_size
+            pt[gi, :len(table)] = table
+            maxpos[gi] = req.prefill_pos + n - 1
+            last_idx[gi] = off + n - 1
+            off += n
+        logits = self.runtime.prefill_packed(tokens, seg, pos, pages,
+                                             slots, pt, maxpos, last_idx)
+        self.telemetry.record_prefill_call(total, T)
+        finished: List[Request] = []
+        nxt = None
+        for gi, (req, n) in enumerate(picks):
+            req.prefill_pos += n
+            self.kv.advance(req.rid, n)
+            self.telemetry.record_prefill(n)
+            if self.prefix_cache:
+                # publish fully-written *prompt* pages; admission (which
+                # runs before prefill each tick) only ever adopts pages
+                # committed by a previous tick's call
+                self.kv.register_prefix(
+                    req.rid, req.prompt,
+                    min(req.prefill_pos, len(req.prompt)))
+            if req.prefill_pos == len(req.context):
+                if nxt is None:
+                    nxt = np.asarray(jnp.argmax(logits[0], axis=-1))
+                self._finish_prefill(req, int(nxt[gi]))
+                finished.append(req)
         for req in finished:
             self.prefilling.remove(req)
             self.decoding.append(req)
@@ -307,6 +482,7 @@ class Engine:
 
     def step(self) -> None:
         """One scheduler tick: admit → prefill (budgeted) → decode."""
+        self.ticks += 1
         self._admit()
         self._prefill_tick()
         self._decode_tick()
@@ -385,8 +561,18 @@ class Engine:
                       "peak": self.kv.peak_in_use,
                       "page_size": self.page_size},
             "steps": self.steps,
+            "ticks": self.ticks,
             "preemptions": self.preemptions,
             "resplits": self.resplits,
+            "prefill": {
+                "packed": self.packed_prefill,
+                "calls": self.telemetry.prefill_calls,
+                "calls_per_tick": (self.telemetry.prefill_calls
+                                   / max(self.ticks, 1)),
+                "fill_frac": self.telemetry.prefill_fill_frac,
+                "prefix_hit_tokens": self.telemetry.prefix_hit_tokens,
+                "prefix_hit_pages": self.kv.prefix_hits,
+            },
             "telemetry": self.telemetry.snapshot(),
         }
         if self.split is not None:
@@ -401,9 +587,15 @@ class Engine:
     def log_line(self) -> str:
         d = self.describe()
         total = d["pages"]["used"] + d["pages"]["free"]
+        pf = d["prefill"]
+        fill = (f"{pf['fill_frac']:.0%}" if pf["fill_frac"] is not None
+                else "-")
         line = (f"[engine] {self.telemetry.describe()} · "
                 f"q{d['queued']}/p{d['prefilling']}/d{d['decoding']} · "
-                f"pages {d['pages']['used']}/{total}")
+                f"pages {d['pages']['used']}/{total} · "
+                f"pf {pf['calls']}c "
+                f"({pf['calls_per_tick']:.2f}/tick, fill {fill}, "
+                f"hit {pf['prefix_hit_tokens']}t)")
         if self.split is not None:
             line += f" · {self.split.describe()}"
         return line

@@ -1,4 +1,5 @@
-"""Paged KV cache — fixed-size pages, per-request page tables.
+"""Paged KV cache — fixed-size pages, per-request page tables, refcounted
+cross-request prefix sharing.
 
 The serving engine's memory substrate: instead of one contiguous
 ``(B, max_len, Hkv, D)`` cache sized to the longest request, K/V live in
@@ -9,25 +10,54 @@ and zero padding-to-max-length; a finished request returns its pages to
 the free list immediately, which is what makes per-decode-step
 admission/eviction (continuous batching) possible at all.
 
+Pages are *refcounted*: requests whose prompts share a page-aligned
+prefix hold the same physical pages (see "prefix sharing" below), so
+``release`` decrements and frees only at zero — a preempted or retired
+request never yanks K/V out from under a sibling still decoding.
+
 Two halves, deliberately separated:
 
 - :class:`PagedKVCache` — the *host-side allocator*: pure bookkeeping
-  (free list, per-request tables, lengths), no arrays. Every mutation
-  maintains the no-leak invariant ``free + allocated == num_pages - 1``
-  (page 0 is the reserved *null page*: padded batch-bucket slots point
-  their tables at it so scatter writes for dead rows land harmlessly;
-  it is never handed to a request).
+  (free list, per-request tables, lengths, refcounts, prefix index), no
+  arrays. Every mutation maintains the no-leak invariant
+  ``free + unique(allocated) == num_pages - 1`` (page 0 is the reserved
+  *null page*: padded batch-bucket slots point their tables at it so
+  scatter writes for dead rows land harmlessly; it is never handed to a
+  request).
 - the *device pools* — ``init_pools`` builds the model-shaped pytree of
   K/V pools (one ``(n_rep, num_pages, page_size, Hkv, D)`` pair per
   attention position of the pattern unit, GQA-native at ``n_kv_heads``),
   owned and threaded functionally by ``serve.runtime``.
+
+Prefix sharing
+--------------
+
+A page whose ``page_size`` slots are all filled with *prompt* tokens is
+immutable for the rest of its life (decode and later prefill chunks
+write into later pages), and its K/V depend only on the token prefix up
+to its end — RoPE positions are absolute from 0 in every request, so two
+requests with the same prompt prefix compute bit-identical K/V for it.
+The allocator therefore keeps a *prefix index* keyed by
+``(parent_page_id, tokens_of_this_page)``: chaining on the physical
+parent page id makes the key collision-free (two requests can only agree
+on page k's key if they already share pages 0..k-1) and O(page_size) to
+build. ``adopt_prefix`` walks the chain for a new prompt, adopting each
+matching page read-only (refcount + 1) so only the unmatched tail is
+ever prefilled; the partial tail page is never shared — a request whose
+prompt ends mid-page re-prefills those tokens into its own fresh page
+(copy-on-write by re-prefill). ``register_prefix`` is the write side,
+called by the engine as prefill advances past page boundaries.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+# prefix-index key: (physical id of the parent page — 0 roots the chain
+# at the null page — and this page's exact token contents)
+PrefixKey = Tuple[int, Tuple[int, ...]]
 
 
 class PagedCacheOOM(Exception):
@@ -42,7 +72,12 @@ class PagedKVCache:
     free: List[int] = field(init=False)
     tables: Dict[int, List[int]] = field(init=False)   # rid -> page ids
     lengths: Dict[int, int] = field(init=False)        # rid -> tokens held
+    refcounts: Dict[int, int] = field(init=False)      # page -> holders
+    prefix_index: Dict[PrefixKey, int] = field(init=False)
+    page_key: Dict[int, PrefixKey] = field(init=False)  # registered pages
     peak_in_use: int = field(init=False, default=0)
+    prefix_hits: int = field(init=False, default=0)    # pages adopted
+    prefix_hit_tokens: int = field(init=False, default=0)
 
     def __post_init__(self):
         if self.num_pages < 2:
@@ -53,6 +88,9 @@ class PagedKVCache:
         self.free = list(range(self.num_pages - 1, 0, -1))
         self.tables = {}
         self.lengths = {}
+        self.refcounts = {}
+        self.prefix_index = {}
+        self.page_key = {}
 
     # ---------------------------------------------------------- queries --
     @property
@@ -61,7 +99,9 @@ class PagedKVCache:
 
     @property
     def used_pages(self) -> int:
-        return sum(len(t) for t in self.tables.values())
+        """Distinct physical pages held by live requests (a page shared
+        by n requests counts once — it occupies one pool slot)."""
+        return len({p for t in self.tables.values() for p in t})
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 0) // self.page_size)
@@ -77,7 +117,8 @@ class PagedKVCache:
 
     # -------------------------------------------------------- lifecycle --
     def alloc(self, rid: int) -> None:
-        """Register an empty request (no pages yet; ``reserve`` grows it)."""
+        """Register an empty request (no pages yet; ``reserve`` grows it,
+        ``adopt_prefix`` may seed it with shared prefix pages)."""
         if rid in self.tables:
             raise ValueError(f"request {rid} already allocated")
         self.tables[rid] = []
@@ -96,7 +137,9 @@ class PagedKVCache:
             raise PagedCacheOOM(
                 f"request {rid}: need {need} pages, {len(self.free)} free")
         for _ in range(need):
-            t.append(self.free.pop())
+            p = self.free.pop()
+            self.refcounts[p] = 1
+            t.append(p)
         self.peak_in_use = max(self.peak_in_use, self.used_pages)
 
     def advance(self, rid: int, n_tokens: int = 1) -> None:
@@ -110,11 +153,102 @@ class PagedKVCache:
         self.lengths[rid] = new_len
 
     def release(self, rid: int) -> int:
-        """Free all of a finished request's pages; returns how many."""
+        """Drop a finished request's hold on its pages; each page's
+        refcount decrements and the page returns to the free list only
+        at zero (a prefix page shared with a live sibling survives).
+        Returns how many pages were actually freed."""
         pages = self.tables.pop(rid)
         del self.lengths[rid]
-        self.free.extend(reversed(pages))
-        return len(pages)
+        freed = 0
+        for p in reversed(pages):
+            self.refcounts[p] -= 1
+            if self.refcounts[p] == 0:
+                del self.refcounts[p]
+                key = self.page_key.pop(p, None)
+                if key is not None:
+                    self.prefix_index.pop(key, None)
+                self.free.append(p)
+                freed += 1
+        return freed
+
+    # --------------------------------------------------- prefix sharing --
+    def _prefix_chain(self, tokens: Sequence[int]) -> List[int]:
+        """Longest chain of already-registered pages matching ``tokens``
+        from position 0 (full pages only — the tail is never shared)."""
+        chain: List[int] = []
+        parent = 0
+        ps = self.page_size
+        for start in range(0, (len(tokens) // ps) * ps, ps):
+            key = (parent, tuple(int(t) for t in tokens[start:start + ps]))
+            page = self.prefix_index.get(key)
+            if page is None:
+                break
+            chain.append(page)
+            parent = page
+        return chain
+
+    def probe_prefix(self, tokens: Sequence[int]) -> int:
+        """Tokens a fresh request over ``tokens`` could adopt, without
+        mutating — the engine's admission check subtracts this from the
+        pages a request needs before consulting the free list."""
+        return len(self._prefix_chain(tokens)) * self.page_size
+
+    def adopt_prefix(self, rid: int, tokens: Sequence[int]) -> int:
+        """Seed a freshly-``alloc``ed request with the longest registered
+        page-aligned prefix of ``tokens``: each matched page is appended
+        to the request's table read-only (refcount + 1) and its tokens
+        count as already written. Returns the tokens adopted.
+
+        Callers cap ``tokens`` so at least one real token remains to
+        prefill (the last prompt token must run through the model to
+        produce first-token logits)."""
+        if self.tables[rid]:
+            raise ValueError(
+                f"request {rid}: adopt_prefix needs an empty table")
+        chain = self._prefix_chain(tokens)
+        for p in chain:
+            self.refcounts[p] += 1
+            self.tables[rid].append(p)
+        n = len(chain) * self.page_size
+        self.lengths[rid] = n
+        self.prefix_hits += len(chain)
+        self.prefix_hit_tokens += n
+        return n
+
+    def register_prefix(self, rid: int, tokens: Sequence[int],
+                        n_written: int) -> int:
+        """Publish the request's fully-written prompt pages into the
+        prefix index. ``tokens`` is the immutable prompt; ``n_written``
+        how many of its tokens are committed in the cache. Only pages
+        *entirely* covered by written prompt tokens register (the
+        partial tail page is never shared), and a page already published
+        under its key — by this request (idempotent re-call) or by a
+        sibling that prefilled the same prefix first — is skipped.
+        Returns how many pages were newly registered."""
+        t = self.tables[rid]
+        ps = self.page_size
+        upto = min(len(tokens), n_written, self.lengths[rid])
+        added = 0
+        for i in range(upto // ps):
+            page = t[i]
+            # parent = our own physical predecessor: for adopted pages
+            # that IS the index's chain page, and keeping every parent
+            # pointer inside one table means a registered page can never
+            # outlive its parent (release frees chains bottom-up), so the
+            # index never holds a key whose parent id was recycled
+            key = (t[i - 1] if i else 0,
+                   tuple(int(x) for x in tokens[i * ps:(i + 1) * ps]))
+            existing = self.prefix_index.get(key)
+            if existing == page:
+                continue                    # already published (adopted)
+            if existing is not None or page in self.page_key:
+                # a sibling that prefilled the same prefix concurrently
+                # published first — stop rather than splice chains
+                break
+            self.prefix_index[key] = page
+            self.page_key[page] = key
+            added += 1
+        return added
 
     # ------------------------------------------------- batch assembly ----
     def gather(self, rids: List[int], batch: int, max_pages: int
@@ -139,14 +273,33 @@ class PagedKVCache:
     # ------------------------------------------------------ invariants ---
     def check(self) -> None:
         """No-leak/no-alias invariants (tests call this after every op):
-        free + allocated covers pages 1..num_pages-1 exactly once, page 0
-        is never allocated, and every length fits its table."""
-        allocated = [p for t in self.tables.values() for p in t]
-        assert 0 not in allocated, "null page leaked into a request"
+        free + distinct allocated covers pages 1..num_pages-1 exactly
+        once, page 0 is never allocated, every refcount equals the number
+        of tables holding that page, every length fits its table, and the
+        prefix index points only at live registered pages."""
+        multiplicity: Dict[int, int] = {}
+        for t in self.tables.values():
+            for p in t:
+                multiplicity[p] = multiplicity.get(p, 0) + 1
+        assert 0 not in multiplicity, "null page leaked into a request"
         assert 0 not in self.free, "null page leaked into the free list"
-        seen = sorted(allocated + self.free)
+        seen = sorted(list(multiplicity) + self.free)
         assert seen == list(range(1, self.num_pages)), (
-            f"page leak/alias: {len(allocated)} allocated + "
-            f"{len(self.free)} free != {self.num_pages - 1}")
+            f"page leak/alias: {len(multiplicity)} allocated + "
+            f"{len(self.free)} free != {self.num_pages - 1} "
+            f"(double-free or shared page freed early)")
+        assert self.refcounts == multiplicity, (
+            f"refcount drift: {self.refcounts} vs table multiplicity "
+            f"{multiplicity}")
         for rid, t in self.tables.items():
             assert self.lengths[rid] <= len(t) * self.page_size
+        for key, page in self.prefix_index.items():
+            assert page in multiplicity, (
+                f"prefix index points at freed page {page}")
+            assert self.page_key.get(page) == key, (
+                f"page {page} key mismatch in prefix index")
+            parent = key[0]
+            assert parent == 0 or parent in multiplicity, (
+                f"registered page {page} outlived its chain parent "
+                f"{parent}")
+        assert set(self.page_key) == {p for p in self.prefix_index.values()}

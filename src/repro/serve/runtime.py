@@ -12,9 +12,14 @@ through per-request page tables. Three consequences:
 - the new token's K/V is a *scatter* — ``pool.at[page, slot].set(...)`` at
   ``page = table[length // page_size]``, ``slot = length % page_size`` —
   instead of a ``dynamic_update_slice`` into a per-request buffer;
-- prefill runs in fixed-size chunks (one request at a time, B=1) that
-  write then attend causally, so a long prompt never forces a
-  max-length-shaped compile and can be interleaved with decode steps.
+- prefill runs in fixed-size chunks that write then attend causally, so
+  a long prompt never forces a max-length-shaped compile and can be
+  interleaved with decode steps. Chunks of *several* requests pack into
+  one segment-id-masked call (``prefill_packed``): tokens concatenate
+  into a single budget-sized buffer, per-token destination pages route
+  each segment's K/V scatter into its own page table, and attention is
+  confined within equal segment ids — one traced shape serves however
+  many requests the engine's token budget covers this tick.
 
 All jitted entry points go through a module-level cache keyed on the
 config fingerprint and static shapes, so fresh ``PagedRuntime`` instances
@@ -35,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import BLOCK_ATTN, BLOCK_MOE, ModelConfig
+from repro.core.bucketing import next_pow2  # noqa: F401  (re-exported)
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models.model import lm_logits, pattern_unit
@@ -46,11 +52,6 @@ _PAGED_KINDS = (BLOCK_ATTN, BLOCK_MOE)
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 _JIT_CACHE: Dict[Tuple, Any] = {}
-
-
-def next_pow2(n: int) -> int:
-    """Smallest power of two >= n (n >= 1) — the shape-bucketing rule."""
-    return 1 << max(n - 1, 0).bit_length()
 
 
 def check_paged_support(cfg: ModelConfig) -> None:
@@ -257,6 +258,100 @@ def _paged_prefill(params, pools, tokens, page_table, offset, n_valid, *,
 
 
 # ---------------------------------------------------------------------------
+# packed prefill: chunks of several requests in one segment-masked call
+# ---------------------------------------------------------------------------
+
+def _paged_attn_prefill_packed(ap, h, pool, seg_ids, positions, pages,
+                               slots, page_table, seg_maxpos, cfg, impl):
+    """h: (1,T,d) — the packed chunk buffer: several requests' pending
+    prompt chunks concatenated, segment ids 1..G in contiguous runs
+    (0 = bucket padding). Writes every token's K/V at its per-token
+    destination ``(pages[t], slots[t])`` — each segment's scatter lands
+    in its own page table; pads land on the null page — then attends
+    each token over its OWN segment's gathered cache with a causal mask
+    on absolute positions. Exactly the sequential ``_paged_attn_prefill``
+    math applied per segment: one call instead of G."""
+    T = h.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", h, ap["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, ap["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, ap["wv"].astype(h.dtype))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    kd = _kv_dtype(cfg)
+    k_new = pool["k"].at[pages, slots].set(k[0].swapaxes(0, 1).astype(kd))
+    v_new = pool["v"].at[pages, slots].set(v[0].swapaxes(0, 1).astype(kd))
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_prefill_paged(
+            q[0].swapaxes(0, 1), k_new.astype(h.dtype),
+            v_new.astype(h.dtype), page_table, seg_maxpos, seg_ids,
+            positions)                                   # (T, Hq, hd)
+        out = out.swapaxes(0, 1)[None]                   # (1, Hq, T, hd)
+    else:
+        G = page_table.shape[0]
+        page_size = pool["k"].shape[1]
+        S_tot = page_table.shape[1] * page_size
+        keys = k_new[page_table].reshape(G, S_tot, hkv, hd).astype(h.dtype)
+        vals = v_new[page_table].reshape(G, S_tot, hkv, hd).astype(h.dtype)
+        seg_row = jnp.clip(seg_ids - 1, 0, G - 1)        # pad -> row 0
+        keys_t = keys[seg_row]                           # (T, S_tot, hkv, hd)
+        vals_t = vals[seg_row]
+        qg = q[0].reshape(hkv, hq // hkv, T, hd)
+        s = jnp.einsum("hgtd,tshd->hgts", qg, keys_t,
+                       preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+        kpos = jnp.arange(S_tot)
+        # causal over absolute positions within the token's own segment;
+        # pad tokens (seg 0) mask everything — finite NEG_INF keeps their
+        # garbage rows NaN-free (the caller never reads them)
+        mask = jnp.logical_and(kpos[None, :] <= positions[:, None],
+                               (seg_ids > 0)[:, None])   # (T, S_tot)
+        s = jnp.where(mask[None, None, :, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("hgts,tshd->hgtd", p.astype(h.dtype),
+                         vals_t).reshape(1, hq, T, hd)
+    y = jnp.einsum("bhsk,hkd->bsd", out, ap["wo"].astype(h.dtype))
+    return y, {"k": k_new, "v": v_new}
+
+
+def _paged_prefill_packed(params, pools, tokens, seg_ids, positions, pages,
+                          slots, page_table, seg_maxpos, last_idx, *,
+                          cfg: ModelConfig, impl: str):
+    """tokens (1,T) int32 packed chunk buffer. Returns (per-segment
+    last-valid-token logits (1,G,V), new pools) — row g is only
+    meaningful when segment g+1 finished its context this call."""
+    TRACE_COUNTS["prefill_packed"] += 1
+    unit, _ = pattern_unit(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def unit_body(x, xs):
+        stack_slice, pool_slice = xs
+        new_pools = {}
+        for p, kind in enumerate(unit):
+            bp = stack_slice[f"pos{p}"]
+            h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            y, new_pool = _paged_attn_prefill_packed(
+                bp["attn"], h, pool_slice[f"pos{p}"], seg_ids, positions,
+                pages, slots, page_table, seg_maxpos, cfg, impl)
+            x = x + y
+            h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+            if kind == BLOCK_MOE:
+                y, _ = M.moe_apply(bp["moe"], h, cfg)
+                x = x + y
+            else:
+                x = x + L.mlp_apply(bp["mlp"], h)
+            new_pools[f"pos{p}"] = new_pool
+        return x, new_pools
+
+    x, new_pools = jax.lax.scan(unit_body, x, (params["stack"], pools))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    xg = jnp.take(x[0], last_idx, axis=0)[None]          # (1, G, d)
+    return lm_logits(params, cfg, xg), new_pools
+
+
+# ---------------------------------------------------------------------------
 # jit cache (module-level: fresh runtimes/engines reuse compiles)
 # ---------------------------------------------------------------------------
 
@@ -280,6 +375,14 @@ def _prefill_fn(cfg: ModelConfig):
     if key not in _JIT_CACHE:
         _JIT_CACHE[key] = jax.jit(
             functools.partial(_paged_prefill, cfg=cfg))
+    return _JIT_CACHE[key]
+
+
+def _prefill_packed_fn(cfg: ModelConfig, impl: str):
+    key = ("prefill_packed", _cfg_key(cfg), impl)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(_paged_prefill_packed, cfg=cfg, impl=impl))
     return _JIT_CACHE[key]
 
 
@@ -338,4 +441,37 @@ class PagedRuntime:
                                     jnp.asarray(page_table, jnp.int32),
                                     jnp.asarray(offset, jnp.int32),
                                     jnp.asarray(n_valid, jnp.int32))
+        return logits
+
+    def prefill_packed(self, tokens, seg_ids, positions, pages, slots,
+                       page_table, seg_maxpos, last_idx):
+        """One packed call over several requests' prompt chunks.
+
+        - ``tokens`` (1,T): concatenated chunks, bucket-padded with 0s;
+        - ``seg_ids`` (T,): 1..G in contiguous runs, 0 for padding;
+        - ``positions`` (T,): each token's absolute prompt position
+          (0 on pads — pad rows are fully masked regardless);
+        - ``pages``/``slots`` (T,): per-token K/V scatter destination
+          (null page 0 for pads);
+        - ``page_table`` (G,P): segment g+1's pages, null-padded;
+        - ``seg_maxpos`` (G,): max absolute position per segment
+          (unused rows may repeat a live row — logits are gathered);
+        - ``last_idx`` (G,): packed index of each segment's final valid
+          token (0 for unused rows).
+
+        Returns per-segment logits (1,G,V) at ``last_idx`` — row g is
+        the next-token distribution only for segments that completed
+        their context in this call.
+        """
+        fn = _prefill_packed_fn(self.cfg, self.impl)
+        with self._ctx():
+            logits, self.pools = fn(self.params, self.pools,
+                                    jnp.asarray(tokens, jnp.int32),
+                                    jnp.asarray(seg_ids, jnp.int32),
+                                    jnp.asarray(positions, jnp.int32),
+                                    jnp.asarray(pages, jnp.int32),
+                                    jnp.asarray(slots, jnp.int32),
+                                    jnp.asarray(page_table, jnp.int32),
+                                    jnp.asarray(seg_maxpos, jnp.int32),
+                                    jnp.asarray(last_idx, jnp.int32))
         return logits

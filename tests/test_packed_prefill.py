@@ -1,0 +1,461 @@
+"""Packed chunked prefill + refcounted prefix caching.
+
+Four pin groups:
+  1. bucketing helpers — boundary behaviour of the now-shared
+     ``next_pow2`` / ``pow2_floor`` pair;
+  2. allocator — prefix index semantics plus a randomized fuzz proving
+     refcounted pages never leak or double-free under admission,
+     preemption and retirement of prefix-sharing requests;
+  3. engine parity — packed-vs-sequential greedy token parity (GQA and
+     page-boundary cases included), the prefix-heavy drill decoding
+     bit-identical tokens to the no-sharing path while computing
+     strictly fewer prefill tokens, and the cross-lane starvation fix;
+  4. kernel — the segment-masked paged-prefill Pallas kernel against a
+     per-token numpy oracle, and packed compile-count boundedness.
+"""
+import os
+import sys
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Session
+from repro.configs import get_config
+from repro.core.bucketing import next_pow2, pow2_floor
+from repro.core.cluster import make_cluster
+from repro.serve import trace_counts
+from repro.serve.paged_cache import PagedCacheOOM, PagedKVCache
+from repro.serve.split import plan_traffic_split
+
+
+def _cfg():
+    cfg = get_config("llama-0.5b", reduced=True)
+    return replace(cfg, dtype="float32", param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session.build(_cfg(), mode="serve", impl="reference")
+
+
+# ------------------------------------------------- bucketing helpers --
+
+
+def test_next_pow2_boundaries():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 1, 2, 4, 4, 8, 8, 8, 16]
+    assert next_pow2(1023) == 1024
+    assert next_pow2(1024) == 1024
+    assert next_pow2(1025) == 2048
+
+
+def test_pow2_floor_boundaries():
+    assert [pow2_floor(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 2, 4, 4, 4, 8, 8]
+    assert pow2_floor(1024) == 1024
+    assert pow2_floor(1025) == 1024
+    with pytest.raises(ValueError):
+        pow2_floor(0)
+
+
+def test_pow2_duality():
+    for n in range(1, 300):
+        assert pow2_floor(next_pow2(n)) == next_pow2(n)
+        assert next_pow2(pow2_floor(n)) == pow2_floor(n)
+        assert pow2_floor(n) <= n <= next_pow2(n)
+
+
+# ------------------------------------------------------- allocator ----
+
+
+def test_prefix_adopt_page_aligned_only():
+    """Only full pages share; the partial tail is re-prefilled (CoW)."""
+    kv = PagedKVCache(num_pages=32, page_size=4)
+    prompt = list(range(10, 20))                    # 10 tokens: 2.5 pages
+    kv.alloc(0)
+    kv.reserve(0, len(prompt))
+    kv.advance(0, len(prompt))
+    kv.register_prefix(0, prompt, len(prompt))
+    # 2 full pages registered, the 2-token tail page is not
+    assert len(kv.prefix_index) == 2
+    assert kv.probe_prefix(prompt) == 8
+    assert kv.probe_prefix(prompt[:7]) == 4         # only page 0 whole
+    assert kv.probe_prefix([99] + prompt[1:]) == 0  # first page differs
+    kv.alloc(1)
+    adopted = kv.adopt_prefix(1, prompt)
+    assert adopted == 8
+    assert kv.tables[1] == kv.tables[0][:2]         # same physical pages
+    assert kv.refcounts[kv.tables[0][0]] == 2
+    assert kv.prefix_hit_tokens == 8
+    kv.check()
+    # retire the original: shared pages survive for request 1
+    freed = kv.release(0)
+    assert freed == 1                               # only the tail page
+    kv.check()
+    assert kv.probe_prefix(prompt) == 8             # index entries live
+    kv.release(1)
+    kv.check()
+    assert kv.used_pages == 0
+    assert not kv.prefix_index and not kv.page_key
+
+
+def test_prefix_chain_needs_shared_parent():
+    """Page k only matches when pages 0..k-1 already matched — an equal
+    second page behind a different first page is a different key."""
+    kv = PagedKVCache(num_pages=32, page_size=2)
+    a, b = [1, 2, 7, 8], [3, 4, 7, 8]               # same second page
+    for rid, toks in ((0, a), (1, b)):
+        kv.alloc(rid)
+        kv.reserve(rid, 4)
+        kv.advance(rid, 4)
+        kv.register_prefix(rid, toks, 4)
+    kv.check()
+    assert len(kv.prefix_index) == 4                # no aliasing
+    assert kv.probe_prefix(a) == 4
+    assert kv.probe_prefix(b) == 4
+    assert kv.probe_prefix([1, 2, 9, 9]) == 2
+
+
+def test_register_prefix_sibling_conflict_keeps_one_chain():
+    """Two requests that prefilled the same prompt independently (both
+    admitted before either registered): the second publisher must not
+    splice its pages into the first one's chain."""
+    kv = PagedKVCache(num_pages=32, page_size=2)
+    toks = [5, 6, 7, 8]
+    for rid in (0, 1):
+        kv.alloc(rid)
+        kv.reserve(rid, 4)
+        kv.advance(rid, 4)
+    assert kv.register_prefix(0, toks, 4) == 2
+    assert kv.register_prefix(1, toks, 4) == 0      # key taken — no splice
+    kv.check()
+    kv.release(0)                                   # chain owner retires
+    kv.check()
+    assert kv.probe_prefix(toks) == 0               # chain gone with it
+    kv.release(1)
+    kv.check()
+
+
+def test_allocator_fuzz_refcounted_lifecycle():
+    """Randomized admission / prefill / preemption / retirement of
+    prefix-sharing requests; ``check()`` after every operation proves
+    pages never leak, double-free, or outlive their chain parents."""
+    rng = np.random.default_rng(7)
+    kv = PagedKVCache(num_pages=24, page_size=4)
+    # a small pool of prompt families so prefixes actually collide
+    bases = [list(rng.integers(3, 50, 12)) for _ in range(3)]
+    live = {}                                       # rid -> (tokens, written)
+    next_rid = 0
+    for _ in range(400):
+        op = rng.random()
+        if op < 0.4 and len(live) < 8:              # admit (maybe adopt)
+            base = bases[rng.integers(len(bases))]
+            cut = int(rng.integers(4, len(base) + 1))
+            extra = list(rng.integers(3, 50, rng.integers(0, 4)))
+            toks = base[:cut] + extra
+            rid = next_rid
+            next_rid += 1
+            kv.alloc(rid)
+            kv.check()
+            adopted = kv.adopt_prefix(rid, toks[:len(toks) - 1])
+            kv.check()
+            try:
+                kv.reserve(rid, len(toks) - adopted)
+            except PagedCacheOOM:
+                kv.release(rid)                     # admission rollback
+                kv.check()
+                continue
+            kv.check()
+            live[rid] = (toks, adopted)
+        elif op < 0.75 and live:                    # prefill a few tokens
+            rid = list(live)[rng.integers(len(live))]
+            toks, written = live[rid]
+            n = min(int(rng.integers(1, 6)), len(toks) - written)
+            if n > 0:
+                kv.advance(rid, n)
+                written += n
+                kv.register_prefix(rid, toks, written)
+                live[rid] = (toks, written)
+                kv.check()
+        elif live:                                  # preempt or retire
+            rid = list(live)[rng.integers(len(live))]
+            del live[rid]
+            kv.release(rid)
+            kv.check()
+    for rid in list(live):
+        kv.release(rid)
+        kv.check()
+    assert kv.used_pages == 0
+    assert kv.free_pages == kv.num_pages - 1
+    assert not kv.prefix_index and not kv.page_key and not kv.refcounts
+
+
+# --------------------------------------------------- engine parity ----
+
+
+def _run_engine(sess, prompts, gens, **kw):
+    eng = sess.engine(**kw)
+    rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    results = eng.run()
+    eng.kv.check()
+    assert eng.kv.used_pages == 0
+    return [results[r] for r in rids], eng
+
+
+def test_packed_matches_sequential_tokens(sess):
+    """The tentpole parity pin: packed prefill decodes exactly the
+    tokens the sequential chunked path decodes, across ragged lengths
+    that straddle page boundaries (page_size 4: prompts end mid-page,
+    on-boundary, and one token past it) under the GQA config."""
+    rng = np.random.default_rng(3)
+    lens = (5, 16, 11, 3, 8, 9)                     # 16, 8 on-boundary
+    prompts = [rng.integers(3, sess.cfg.vocab_size, int(n)).tolist()
+               for n in lens]
+    gens = [6, 3, 8, 5, 4, 7]
+    kw = dict(num_pages=128, page_size=4, chunk=4)
+    seq, _ = _run_engine(sess, prompts, gens, packed_prefill=False,
+                         prefix_cache=False, **kw)
+    packed, eng = _run_engine(sess, prompts, gens, packed_prefill=True,
+                              prefix_cache=False, **kw)
+    assert packed == seq
+    # the whole point: strictly fewer prefill model invocations
+    assert eng.telemetry.prefill_calls < sum(
+        -(-n // 4) for n in lens)
+
+
+def test_packed_parity_under_preemption(sess):
+    """Packed prefill + a pool tight enough to force preemption still
+    reproduces the uncontended tokens (recompute stays exact)."""
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(3, sess.cfg.vocab_size, int(n)).tolist()
+               for n in (9, 7, 12, 8)]
+    gens = [8, 8, 8, 8]
+    roomy, _ = _run_engine(sess, prompts, gens, num_pages=128,
+                           page_size=4, chunk=4)
+    tight, eng = _run_engine(sess, prompts, gens, num_pages=14,
+                             page_size=4, chunk=4)
+    assert eng.preemptions > 0, "pool was large enough — test is vacuous"
+    assert tight == roomy
+
+
+def _run_staggered(sess, prompts, gens, **kw):
+    """Submit one request every other tick — arrivals must be staggered
+    for prefix sharing to ever trigger: adoption happens at admission,
+    against pages an *earlier* request already wrote and registered."""
+    eng = sess.engine(**kw)
+    rids = []
+    for p, g in zip(prompts, gens):
+        rids.append(eng.submit(p, g))
+        eng.step()
+        eng.step()
+        eng.kv.check()
+    results = eng.run()
+    eng.kv.check()
+    assert eng.kv.used_pages == 0
+    return [results[r] for r in rids], eng
+
+
+def test_prefix_sharing_parity_and_fewer_tokens(sess):
+    """The acceptance drill: staggered prompts sharing a long
+    page-aligned prefix decode bit-identical tokens with prefix caching
+    on vs off, while computing strictly fewer prefill tokens (adopted
+    pages skip the model)."""
+    rng = np.random.default_rng(5)
+    system = rng.integers(3, sess.cfg.vocab_size, 12).tolist()  # 3 pages
+    prompts = [system + rng.integers(3, sess.cfg.vocab_size,
+                                     int(n)).tolist()
+               for n in (3, 5, 2, 6, 4)]
+    gens = [5, 4, 6, 3, 5]
+    kw = dict(num_pages=128, page_size=4, chunk=4, prefill_budget=16)
+    plain, eng_off = _run_staggered(sess, prompts, gens,
+                                    prefix_cache=False, **kw)
+    shared, eng_on = _run_staggered(sess, prompts, gens,
+                                    prefix_cache=True, **kw)
+    assert shared == plain
+    submitted = sum(len(p) for p in prompts)
+    assert eng_on.telemetry.prefill_tokens < submitted
+    assert (eng_on.telemetry.prefill_tokens
+            < eng_off.telemetry.prefill_tokens)
+    assert eng_on.telemetry.prefix_hit_tokens >= 12 * (len(prompts) - 1)
+    assert eng_on.kv.prefix_hits > 0
+
+
+def test_prefix_sharing_preemption_respects_siblings(sess):
+    """A tight pool with prefix sharing: preempting/retiring one sharer
+    must not free pages a sibling still reads. Token parity against the
+    roomy no-sharing run covers correctness; check() covers the
+    allocator invariants after every tick."""
+    rng = np.random.default_rng(6)
+    system = rng.integers(3, sess.cfg.vocab_size, 8).tolist()
+    prompts = [system + rng.integers(3, sess.cfg.vocab_size,
+                                     int(n)).tolist()
+               for n in (4, 3, 5, 2)]
+    gens = [8, 8, 8, 8]
+    want, _ = _run_engine(sess, prompts, gens, num_pages=128,
+                          page_size=4, chunk=4, prefix_cache=False)
+    eng = sess.engine(num_pages=16, page_size=4, chunk=4)
+    rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    while eng.queued or eng.prefilling or eng.decoding:
+        eng.step()
+        eng.kv.check()
+    got = [eng.done[r].generated for r in rids]
+    assert got == want
+    assert eng.kv.used_pages == 0
+    assert eng.kv.prefix_hits > 0, "no page was ever shared — vacuous"
+    assert eng.preemptions > 0, "pool never pressured — vacuous"
+
+
+def _starvation_drive(sess, split, rng, *, age_priority, packed,
+                      max_ticks=40):
+    """One long low-share-lane prompt against a continuous stream of
+    short high-share-lane prompts. Returns the tick its prefill
+    completed (None = starved past ``max_ticks``)."""
+    eng = sess.engine(num_pages=256, page_size=4, chunk=4,
+                      prefill_budget=4, split=split,
+                      age_priority=age_priority,
+                      packed_prefill=packed, prefix_cache=False)
+    lanes = sorted(split.prefill_share, key=split.prefill_share.get)
+    victim_rid = eng.submit(
+        rng.integers(3, sess.cfg.vocab_size, 24).tolist(), 2)
+    vreq = eng.queued[-1]
+    vreq.lane = lanes[0]
+    for tick in range(max_ticks):
+        while len(eng.queued) < 4:          # saturate the fast lane
+            eng.submit(rng.integers(3, sess.cfg.vocab_size, 4).tolist(),
+                       1)
+            eng.queued[-1].lane = lanes[-1]
+        eng.step()
+        if vreq.prefill_pos >= len(vreq.prompt):
+            return tick
+    assert victim_rid not in eng.done
+    return None
+
+
+def test_prefill_starvation_age_priority(sess):
+    """The satellite bugfix pin, both prefill paths:
+
+    - sequential walk: the budget is handed out purely in
+      ``_prefill_order`` order, so without aging a low-share lane's
+      long prompt is bypassed for as long as the high-share lane has
+      pending chunks — with ``age_priority`` its accumulated wait
+      eventually outranks the share gap and it finishes;
+    - packed walk: each lane's budget share is floored at one token, so
+      the victim drains even at ``age_priority=0`` — packing never
+      reintroduces the starvation the sequential path exhibits.
+    """
+    cluster = make_cluster("c8", [("V100-16G", 4), ("T4-16G", 4)], 12.0)
+    split = plan_traffic_split(cluster, sess.cfg, requests=8,
+                               cache_len=64)
+
+    def rng():
+        return np.random.default_rng(8)
+
+    starved = _starvation_drive(sess, split, rng(), age_priority=0.0,
+                                packed=False)
+    assert starved is None, (
+        f"un-aged sequential victim finished at tick {starved} — "
+        "scenario no longer starves, strengthen it")
+    aged = _starvation_drive(sess, split, rng(), age_priority=0.25,
+                             packed=False)
+    assert aged is not None, "aged victim still starved"
+    packed_flat = _starvation_drive(sess, split, rng(), age_priority=0.0,
+                                    packed=True)
+    assert packed_flat is not None, "packed lane floor failed to drain"
+
+
+# ------------------------------------------------ kernel + compiles ----
+
+
+def test_flash_prefill_paged_kernel_vs_oracle():
+    """Interpret-mode kernel against a per-token numpy softmax oracle:
+    multiple segments, a mid-prompt chunk (nonzero offset), an empty
+    segment row, GQA grouping, and bucket padding."""
+    from repro.kernels.flash_prefill_paged import flash_prefill_paged_pallas
+    rng = np.random.default_rng(0)
+    ps, npages, Hkv, D, Hq = 4, 16, 2, 8, 4
+    T, G, P = 16, 4, 4
+    k_pages = jnp.asarray(rng.normal(size=(npages, ps, Hkv, D)),
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(npages, ps, Hkv, D)),
+                          jnp.float32)
+    q = jnp.asarray(rng.normal(size=(T, Hq, D)), jnp.float32)
+    seg_ids = np.zeros(T, np.int32)
+    positions = np.zeros(T, np.int32)
+    seg_ids[:6] = 1
+    positions[:6] = np.arange(6)                    # fresh chunk
+    seg_ids[6:11] = 2
+    positions[6:11] = np.arange(8, 13)              # later chunk, offset 8
+    page_table = np.zeros((G, P), np.int32)
+    page_table[0, :2] = [1, 2]
+    page_table[1, :4] = [3, 4, 5, 6]
+    seg_maxpos = np.array([5, 12, -1, -1], np.int32)
+    out = np.asarray(flash_prefill_paged_pallas(
+        q, k_pages, v_pages, jnp.asarray(page_table),
+        jnp.asarray(seg_maxpos), jnp.asarray(seg_ids),
+        jnp.asarray(positions), interpret=True))
+    S_tot = P * ps
+    keys = np.asarray(k_pages)[page_table].reshape(G, S_tot, Hkv, D)
+    vals = np.asarray(v_pages)[page_table].reshape(G, S_tot, Hkv, D)
+    group = Hq // Hkv
+    for t in range(T):
+        g = seg_ids[t] - 1
+        if g < 0:
+            assert np.all(out[t] == 0.0), f"pad token {t} not zeroed"
+            continue
+        for h in range(Hq):
+            kh = keys[g, :, h // group, :]
+            vh = vals[g, :, h // group, :]
+            s = kh @ np.asarray(q)[t, h] / np.sqrt(D)
+            s = np.where(np.arange(S_tot) <= positions[t], s, -np.inf)
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            np.testing.assert_allclose(out[t, h], p @ vh, rtol=2e-5,
+                                       atol=2e-5, err_msg=f"t={t} h={h}")
+
+
+def test_packed_prefill_compile_counts_bounded(sess):
+    """Packed prefill compiles are bounded by the (T, G, P) power-of-two
+    buckets actually visited, not by ticks — and a second engine over
+    the same config adds zero."""
+    eng = sess.engine(num_pages=256, page_size=4, chunk=4)
+    rng = np.random.default_rng(9)
+    for n in (3, 5, 7, 9, 11, 13, 4, 6):
+        eng.submit(rng.integers(3, sess.cfg.vocab_size, n).tolist(),
+                   int(rng.integers(2, 7)))
+    before = trace_counts()
+    eng.run()
+    mid = trace_counts()
+    assert mid.get("prefill_packed", 0) - before.get("prefill_packed",
+                                                     0) <= 6
+    assert mid.get("prefill", 0) == before.get("prefill", 0)
+
+    eng2 = sess.engine(num_pages=256, page_size=4, chunk=4)
+    for n in (3, 5, 7, 9):
+        eng2.submit(rng.integers(3, sess.cfg.vocab_size, n).tolist(), 3)
+    eng2.run()
+    after = trace_counts()
+    assert after == mid, "second engine re-compiled despite shared cache"
+
+
+def test_engine_surfaces_prefill_telemetry(sess):
+    eng = sess.engine(num_pages=64, page_size=4, chunk=4,
+                      prefill_budget=8)
+    eng.submit([4, 5, 6, 7, 8, 9, 10, 11], 3)
+    eng.step()                                     # register before the
+    eng.step()                                     # sharer arrives
+    eng.submit([4, 5, 6, 7, 8, 9, 12, 13], 2)     # shares one page
+    eng.run()
+    d = eng.describe()
+    assert d["prefill"]["calls"] > 0
+    assert 0 < d["prefill"]["fill_frac"] <= 1.0
+    assert d["prefill"]["calls_per_tick"] > 0
+    assert d["prefill"]["prefix_hit_tokens"] >= 4
+    snap = eng.telemetry.snapshot()
+    assert snap["prefill_calls"] == d["prefill"]["calls"]
+    assert snap["prefix_hit_tokens"] >= 4
+    assert snap["prefill_fill_frac"] == d["prefill"]["fill_frac"]
+    line = eng.log_line()
+    assert "fill" in line and "hit" in line
